@@ -1,0 +1,35 @@
+"""Paper Figure 14: forward latency as the number of experts grows
+(fixed token count). FlashMoE's claim: latency stays ~flat because work
+scales with routed tokens, not expert count. The dense baseline degrades
+linearly in E."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.gate import GateConfig
+from repro.core.moe import MoEConfig, init_moe_params, moe_layer
+
+
+def run(experts=(8, 16, 32, 64, 128), T=2048, H=256, F=256):
+    out = []
+    for impl in ("packed", "fused", "ref"):
+        for E in experts:
+            gc = GateConfig(num_experts=E, top_k=2, capacity_factor=1.0,
+                            aux_loss=0.0, router_z_loss=0.0)
+            cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
+                            gated=False, impl=impl, interpret=True)
+            params = init_moe_params(jax.random.PRNGKey(0), cfg)
+            x = jax.random.normal(jax.random.PRNGKey(1), (T, H),
+                                  jnp.float32)
+            fn = jax.jit(lambda p, x: moe_layer(p, x, cfg)[0])
+            us = time_fn(fn, params, x, iters=5)
+            emit(f"fig14/latency_{impl}_E{E}", us, f"experts={E};T={T}")
+            out.append((impl, E, us))
+    fused = {e: u for i, e, u in out if i == "packed"}
+    emit("fig14/fused_flatness", fused[max(experts)],
+         f"E128_over_E8={fused[max(experts)] / fused[min(experts)]:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Figure 10: forward latency vs number of tokens.
+
+CPU-measured (relative) comparison of the FlashMoE fused path against the
+unfused dense-loop baseline, at the paper's layer config scaled to CPU
+(d=256, d_ff=256, top-2, cf=1.0). TPU-projected absolute numbers come from
+the roofline artifacts.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.gate import GateConfig
+from repro.core.moe import MoEConfig, init_moe_params, moe_layer
+
+
+def run(tokens_list=(512, 1024, 2048, 4096), E=16, H=256, F=256):
+    gc = GateConfig(num_experts=E, top_k=2, capacity_factor=1.0,
+                    aux_loss=0.0, router_z_loss=0.0)
+    results = []
+    for impl in ("packed", "fused", "ref"):
+        cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
+                        gated=False, impl=impl, interpret=True)
+        params = init_moe_params(jax.random.PRNGKey(0), cfg)
+        fn = jax.jit(lambda p, x: moe_layer(p, x, cfg)[0])
+        for T in tokens_list:
+            x = jax.random.normal(jax.random.PRNGKey(1), (T, H),
+                                  jnp.float32)
+            us = time_fn(fn, params, x)
+            name = f"fig10/latency_{impl}_T{T}"
+            emit(name, us, f"tokens={T};experts={E}")
+            results.append((impl, T, us))
+    # headline: fused speedup at the largest T
+    f = [r for r in results if r[0] == "packed"][-1]
+    r = [r for r in results if r[0] == "ref"][-1]
+    emit("fig10/speedup_packed_vs_dense", f[2],
+         f"speedup={r[2] / f[2]:.2f}x_at_T{f[1]} (fused kernel CPU time is interpret-mode; TPU target)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

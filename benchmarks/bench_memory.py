@@ -1,0 +1,28 @@
+"""Paper Table 3: memory overhead of the symmetric tensor layout L plus
+runtime bookkeeping, across (tokens, experts) — validated against the
+paper's reported MBs by tests/test_layout.py."""
+from benchmarks.common import emit
+from repro.core.layout import SymmetricLayout
+
+
+def run(world=8, hidden=1024):
+    rows = [(4096, 16), (4096, 32), (4096, 64), (4096, 128),
+            (8192, 16), (8192, 32), (8192, 64), (8192, 128),
+            (16384, 16), (16384, 32), (16384, 64), (16384, 128)]
+    for tokens, experts in rows:
+        cap = max(1, tokens // experts)
+        lay = SymmetricLayout(world=world,
+                              local_experts=max(1, experts // world),
+                              capacity=cap, hidden=hidden)
+        size_mb = lay.size_bytes(4) / 2**20
+        # bookkeeping: routing tables + flags + task descriptors (~Size(L))
+        book_mb = (tokens * 2 * 8 + experts * 16
+                   + lay.shape[4] * experts * 8) / 2**20 + size_mb * 0.002
+        emit(f"table3/sizeL_T{tokens}_E{experts}", 0.0,
+             f"L_MB={size_mb:.2f};bookkeeping_MB={book_mb:.2f};"
+             f"EC={cap};aligned={lay.capacity_aligned}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Figure 13: throughput (tokens/s). Single-host CPU measurement of
+the fused layer; TPU-projected throughput per (arch x shape) is derived
+from roofline terms in benchmarks/roofline_table.py."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.gate import GateConfig
+from repro.core.moe import MoEConfig, init_moe_params, moe_layer
+
+
+def run(T=4096, H=256, F=256, E=16):
+    gc = GateConfig(num_experts=E, top_k=2, capacity_factor=1.0,
+                    aux_loss=0.0, router_z_loss=0.0)
+    out = {}
+    for impl in ("packed", "fused", "ref"):
+        cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
+                        gated=False, impl=impl, interpret=True)
+        params = init_moe_params(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (T, H), jnp.float32)
+        fn = jax.jit(lambda p, x: moe_layer(p, x, cfg)[0])
+        us = time_fn(fn, params, x, iters=5)
+        tps = T / (us * 1e-6)
+        emit(f"fig13/throughput_{impl}", us, f"tokens_per_s={tps:.0f}")
+        out[impl] = tps
+    emit("fig13/throughput_ratio", 0.0,
+         f"packed_over_dense={out['packed'] / out['ref']:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Inject the §Dry-run summary and §Roofline table into EXPERIMENTS.md
+from experiments/dryrun/*.json artifacts."""
+import json
+import re
+
+from benchmarks.roofline_table import load, markdown_table
+
+
+def dryrun_summary():
+    lines = ["| mesh | ok | skips | errors | slowest compile |",
+             "|---|---|---|---|---|"]
+    for mesh in ("single", "multi"):
+        recs = load(mesh=mesh)
+        ok = [r for r in recs if r["status"] == "ok"]
+        sk = [r for r in recs if r["status"] == "skip"]
+        er = [r for r in recs if r["status"] == "error"]
+        slow = max(ok, key=lambda r: r.get("compile_s", 0), default=None)
+        lines.append(
+            f"| {mesh}-pod | {len(ok)} | {len(sk)} | {len(er)} | "
+            f"{slow['arch']}×{slow['shape']} "
+            f"({slow['compile_s']:.0f}s) |" if slow else f"| {mesh} | 0 |")
+    return "\n".join(lines)
+
+
+def main():
+    md = open("EXPERIMENTS.md").read()
+    md = md.replace("<!-- DRYRUN_SUMMARY -->", dryrun_summary())
+    md = md.replace("<!-- ROOFLINE_TABLE -->",
+                    markdown_table(load(mesh="single")))
+    open("EXPERIMENTS.md", "w").write(md)
+    print("tables injected")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Aggregate dry-run artifacts into the §Roofline table (markdown + CSV).
+
+Reads experiments/dryrun/*.json produced by repro.launch.dryrun.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname="experiments/dryrun", mesh="single", impl=None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") != mesh:
+            continue
+        if impl and r.get("dist_impl") != impl:
+            continue
+        recs.append(r)
+    return recs
+
+
+def markdown_table(recs):
+    lines = [
+        "| arch | shape | mem/dev GiB | compute ms | memory ms | "
+        "collective ms | dominant | useful ratio | bottleneck note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    key = lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                     if r["shape"] in SHAPE_ORDER else 9)
+    for r in sorted(recs, key=key):
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"N/A | — | skipped: {r['reason'][:60]}... |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | "
+                         f"| {r['reason'][:60]} |")
+            continue
+        x = r["roofline"]
+        mem = r["memory"]["peak_estimate"] / 2**30
+        note = _note(x)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mem:.1f} | "
+            f"{x['compute_s']*1e3:.1f} | {x['memory_s']*1e3:.1f} | "
+            f"{x['collective_s']*1e3:.1f} | {x['dominant']} | "
+            f"{x['useful_ratio']:.3f} | {note} |")
+    return "\n".join(lines)
+
+
+def _note(x):
+    dom = x["dominant"]
+    if dom == "collective":
+        top = max(x["collectives"], key=x["collectives"].get) \
+            if x["collectives"] else "?"
+        return f"cut {top} volume / overlap with compute"
+    if dom == "memory":
+        return "raise arithmetic intensity (fusion, bf16, bigger tiles)"
+    return "compute-bound: near roofline if overlap holds"
+
+
+def run():
+    recs = load()
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skip" for r in recs)
+    emit("roofline/cells_ok", float(n_ok), f"skips={n_skip}")
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        x = r["roofline"]
+        emit(f"roofline/{r['arch']}__{r['shape']}",
+             max(x["compute_s"], x["memory_s"], x["collective_s"]) * 1e6,
+             f"dom={x['dominant']};useful={x['useful_ratio']:.3f}")
+    return recs
+
+
+if __name__ == "__main__":
+    print(markdown_table(load()))

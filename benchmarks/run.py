@@ -1,0 +1,30 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entrypoint: one bench per paper table/figure.
+
+  Table 1  -> bench_opcount      (launched ops per layer pass)
+  Fig 10   -> bench_latency      (forward latency vs tokens)
+  Fig 11/12-> bench_overlap      (utilization + overlap efficiency model)
+  Fig 13   -> bench_throughput   (tokens/s)
+  Fig 14   -> bench_experts      (latency vs expert count)
+  Table 3  -> bench_memory       (symmetric layout Size(L))
+  §Roofline-> roofline_table     (aggregated dry-run artifacts)
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_experts, bench_latency, bench_memory,
+                            bench_opcount, bench_overlap, bench_throughput,
+                            roofline_table)
+    print("name,us_per_call,derived")
+    bench_opcount.run()
+    bench_latency.run()
+    bench_overlap.run()
+    bench_throughput.run()
+    bench_experts.run()
+    bench_memory.run()
+    roofline_table.run()
+
+
+if __name__ == '__main__':
+    main()

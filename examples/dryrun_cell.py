@@ -1,0 +1,25 @@
+"""Lower + compile ONE production cell and print its roofline terms —
+the smallest end-to-end tour of the multi-pod machinery.
+
+  python examples/dryrun_cell.py --arch mixtral-8x7b --shape train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    print(json.dumps({k: v for k, v in rec.get("roofline", {}).items()
+                      if not isinstance(v, dict)}, indent=1))

@@ -1,0 +1,52 @@
+"""Quickstart: the FlashMoE layer in isolation.
+
+Runs the paper's core object — gate -> dispatch -> fused grouped-GEMM
+expert FFN -> combine — on CPU (pallas interpret mode), checks it against
+the dense oracle, and takes gradients through the fused backward kernels.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gate import GateConfig
+from repro.core.moe import MoEConfig, init_moe_params, moe_layer
+
+# the paper's evaluation layer (§4), scaled for a CPU demo
+cfg = MoEConfig(
+    gate=GateConfig(num_experts=16, top_k=2, capacity_factor=1.25),
+    d_model=256, d_ff=256, activation="gelu", gated=False,
+    impl="fused",          # the single-kernel FlashMoE path
+    interpret=True,        # pallas interpret mode (no TPU here)
+)
+
+key = jax.random.PRNGKey(0)
+params = init_moe_params(key, cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (1024, cfg.d_model))
+
+# forward: ONE pallas_call computes every routed (128-token, expert) tile
+y, aux = jax.jit(lambda p, x: moe_layer(p, x, cfg))(params, x)
+print(f"output: {y.shape}, finite={bool(jnp.isfinite(y).all())}")
+print(f"aux losses: load-balance={float(aux['aux_loss']):.4f} "
+      f"z={float(aux['z_loss']):.5f}")
+
+# dense oracle comparison
+cfg_ref = MoEConfig(gate=cfg.gate, d_model=cfg.d_model, d_ff=cfg.d_ff,
+                    activation="gelu", gated=False, impl="ref",
+                    interpret=True)
+y_ref, _ = jax.jit(lambda p, x: moe_layer(p, x, cfg_ref))(params, x)
+err = float(jnp.abs(y - y_ref).max())
+print(f"fused vs dense-oracle max err: {err:.2e}")
+assert err < 1e-3
+
+# backward: the paper leaves training as future work; our fused backward
+# kernels make the layer differentiable end to end
+grads = jax.jit(jax.grad(
+    lambda p: jnp.mean(moe_layer(p, x, cfg)[0] ** 2)))(params)
+print("grad norms:", {k: f"{float(jnp.linalg.norm(v)):.3f}"
+                      for k, v in grads.items()})
+print("OK")

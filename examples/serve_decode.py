@@ -1,0 +1,14 @@
+"""Batched serving example: prefill a batch of prompts through a reduced
+DeepSeek-V2-family model (MLA cache + shared/routed experts), then decode
+with the gather-MoE path — the inference end-to-end example.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "deepseek-v2-lite-16b", "--reduced",
+                "--requests", "4", "--prompt-len", "32", "--max-new", "12"])

@@ -1,0 +1,26 @@
+"""Assigned architecture configs (public literature) + the paper's own.
+
+Import side effect: registers every config in the base registry.
+"""
+from repro.configs.base import (ArchConfig, MLASpec, MoESpec, SSMSpec,
+                                ShapeCell, SHAPES, all_configs,
+                                cell_applicable, get_config, register)
+
+from repro.configs.chameleon_34b import CONFIG as chameleon_34b
+from repro.configs.hymba_1_5b import CONFIG as hymba_1_5b
+from repro.configs.mixtral_8x7b import CONFIG as mixtral_8x7b
+from repro.configs.deepseek_v2_lite import CONFIG as deepseek_v2_lite
+from repro.configs.rwkv6_7b import CONFIG as rwkv6_7b
+from repro.configs.whisper_tiny import CONFIG as whisper_tiny
+from repro.configs.qwen2_7b import CONFIG as qwen2_7b
+from repro.configs.minitron_4b import CONFIG as minitron_4b
+from repro.configs.minicpm_2b import CONFIG as minicpm_2b
+from repro.configs.gemma3_27b import CONFIG as gemma3_27b
+from repro.configs.flashmoe_paper import CONFIG as flashmoe_paper
+from repro.configs.flashmoe_paper import paper_config
+
+ALL_ARCHS = [
+    "chameleon-34b", "hymba-1.5b", "mixtral-8x7b", "deepseek-v2-lite-16b",
+    "rwkv6-7b", "whisper-tiny", "qwen2-7b", "minitron-4b", "minicpm-2b",
+    "gemma3-27b",
+]

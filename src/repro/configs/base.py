@@ -1,0 +1,170 @@
+"""Architecture config schema + registry.
+
+One ``ArchConfig`` drives parameter init, forward/step functions, sharding
+rules, input specs and the dry-run. Exact assigned configs live in
+``configs/<arch>.py``; reduced same-family configs for CPU smoke tests come
+from ``ArchConfig.reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    d_ff_shared: int = 0
+    first_k_dense: int = 0          # deepseek: first k layers use dense FFN
+    capacity_factor: float = 1.25
+    score_fn: str = "softmax"
+    aux_loss: float = 1e-2
+    router_z_loss: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    kind: str = "mamba"             # mamba | rwkv6
+    d_state: int = 16
+    d_inner: int = 0                # mamba inner dim (0 -> 2*d_model)
+    d_conv: int = 4
+    dt_rank: int = 0                # 0 -> d_model // 16
+    head_dim: int = 64              # rwkv6 head dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    # attention flavour
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    window: int = 0                 # uniform sliding window (mixtral)
+    local_global_ratio: int = 0     # gemma3: N local layers per global
+    local_window: int = 0
+    attention_free: bool = False    # rwkv6
+    mla: Optional[MLASpec] = None   # deepseek-v2 latent attention
+    pos_emb: str = "rope"           # rope | sinusoidal | none
+    # ffn
+    activation: str = "silu"
+    gated_ffn: bool = True
+    moe: Optional[MoESpec] = None
+    # ssm
+    ssm: Optional[SSMSpec] = None
+    hybrid_parallel: bool = False   # hymba: attn + ssm in parallel
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    enc_layers: int = 0
+    enc_seq: int = 1500
+    # misc
+    norm: str = "rms"               # rms | ln
+    tie_embeddings: bool = False
+    skip_long: bool = False         # no sub-quadratic path -> skip long_500k
+    source: str = ""                # provenance note
+    notes: str = ""
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to 128 so embed/LM-head always shard over the
+        model axis (replicated vocab tensors cause full-logit all-reduces
+        — §Perf iteration 1). Pad logits are masked to -inf."""
+        return -(-self.vocab // 128) * 128
+
+    def reduced(self) -> "ArchConfig":
+        """Small same-family config for CPU smoke tests."""
+        changes: Dict = dict(
+            n_layers=2,
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads,
+                                  4 * self.n_kv_heads // self.n_heads or 1)),
+            d_ff=256,
+            vocab=512,
+            head_dim=32,
+            enc_layers=2 if self.enc_dec else 0,
+            enc_seq=16 if self.enc_dec else 1500,
+            window=min(self.window, 32) if self.window else 0,
+            local_window=min(self.local_window, 16) if self.local_window else 0,
+        )
+        if self.moe is not None:
+            changes["moe"] = dataclasses.replace(
+                self.moe, num_experts=min(8, self.moe.num_experts),
+                d_ff_expert=128,
+                d_ff_shared=128 if self.moe.d_ff_shared else 0,
+                capacity_factor=4.0)
+        if self.ssm is not None:
+            changes["ssm"] = dataclasses.replace(
+                self.ssm, d_inner=256 if self.ssm.d_inner else 0,
+                head_dim=32 if self.ssm.kind == "rwkv6" else self.ssm.head_dim)
+        return dataclasses.replace(self, **changes)
+
+
+# ---- shape cells ----------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        import repro.configs  # noqa: F401 — populate registry
+    from repro.configs import ALL_ARCHS  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    import repro.configs  # noqa: F401
+    return dict(_REGISTRY)
+
+
+def cell_applicable(cfg: ArchConfig, shape: str) -> Tuple[bool, str]:
+    """Is (arch x shape) a live cell? Returns (ok, reason-if-skipped)."""
+    if shape == "long_500k" and cfg.skip_long:
+        return False, ("pure full-attention arch: 500k-token KV decode is "
+                       "outside the design envelope (see DESIGN.md "
+                       "§Shape-cell policy)")
+    return True, ""

@@ -1,0 +1,20 @@
+"""Chameleon-34B backbone [arXiv:2405.09818; unverified].
+
+Early-fusion VLM: VQ image tokens share the 65536-entry vocabulary with
+text; the modality frontend (VQ-GAN tokenizer) is a stub — input_specs()
+provides token ids directly. Backbone = dense GQA transformer with qk-norm
+(Chameleon's training-stability fix). Pure full attention -> long_500k
+skipped (DESIGN.md §Shape-cell policy).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22016, vocab=65536, head_dim=128,
+    qk_norm=True, rope_theta=10000.0,
+    activation="silu", gated_ffn=True,
+    skip_long=True,
+    source="arXiv:2405.09818",
+    notes="early-fusion VLM backbone; VQ frontend stubbed",
+))

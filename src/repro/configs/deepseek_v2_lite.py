@@ -1,0 +1,23 @@
+"""DeepSeek-V2-Lite (16B) [arXiv:2405.04434; hf].
+
+MLA attention (kv_lora=512, qk 128+64 rope, v 128) + fine-grained MoE:
+2 shared + 64 routed experts, top-6, expert d_ff 1408; first layer uses a
+dense FFN (d_ff 10944) per the HF config. Primary FlashMoE architecture
+(EP=16, 4 experts/device). Full-attention MLA -> long_500k skipped.
+"""
+from repro.configs.base import ArchConfig, MLASpec, MoESpec, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=10944, vocab=102400, head_dim=128,
+    mla=MLASpec(kv_lora=512, qk_nope=128, qk_rope=64, v_head=128),
+    rope_theta=10000.0,
+    activation="silu", gated_ffn=True,
+    moe=MoESpec(num_experts=64, top_k=6, d_ff_expert=1408,
+                num_shared=2, d_ff_shared=2816, first_k_dense=1,
+                capacity_factor=1.5),
+    skip_long=True,
+    source="arXiv:2405.04434",
+    notes="MLA + 2 shared + 64 routed top-6; layer 0 dense",
+))

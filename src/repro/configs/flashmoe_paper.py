@@ -1,0 +1,25 @@
+"""The paper's own evaluation config (FlashDMoE §4).
+
+MoE transformer: 16 attention heads, d_model 2048, FFN intermediate 2048,
+top-2 routing, capacity factor 1.0, E in {8,16,32,64,128} experts.
+Used by the benchmark harness to reproduce the paper's tables/figures.
+"""
+from repro.configs.base import ArchConfig, MoESpec, register
+
+
+def paper_config(num_experts: int = 64, n_layers: int = 1,
+                 capacity_factor: float = 1.0) -> ArchConfig:
+    return ArchConfig(
+        name=f"flashmoe-paper-e{num_experts}", family="moe",
+        n_layers=n_layers, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=2048, vocab=32000, head_dim=128,
+        rope_theta=10000.0,
+        activation="gelu", gated_ffn=False,
+        moe=MoESpec(num_experts=num_experts, top_k=2, d_ff_expert=2048,
+                    capacity_factor=capacity_factor),
+        skip_long=True,
+        source="FlashDMoE §4 (NeurIPS 2025)",
+    )
+
+
+CONFIG = register(paper_config(64, n_layers=2))

@@ -1,0 +1,19 @@
+"""Gemma3-27B [hf:google/gemma-3-1b-pt family scaling; unverified].
+
+5:1 local:global attention (local = 1024-token sliding window, every 6th
+layer global), GQA 32H/16KV with head_dim 128, qk-norm, GeGLU d_ff 21504,
+262k vocab. Locals bound the KV -> long_500k runs; the 1-in-6 global
+layers hold full 512k KV sharded on sequence over the data axis.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-27b", family="dense",
+    n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16,
+    d_ff=21504, vocab=262144, head_dim=128,
+    qk_norm=True, rope_theta=1e6,
+    local_global_ratio=5, local_window=1024,
+    activation="gelu", gated_ffn=True,
+    source="hf:google/gemma-3-1b-pt",
+    notes="5:1 local:global; global layers sharded-KV at 500k",
+))

@@ -1,0 +1,20 @@
+"""Hymba-1.5B [arXiv:2411.13676; hf].
+
+Hybrid-head architecture: every layer runs attention heads and Mamba
+(SSM) heads in parallel on the same input; outputs are normalized and
+mean-combined. ssm_state=16. Meta-tokens omitted (backbone spec only).
+SSM branch gives O(1)-state long-context decode -> long_500k runs.
+"""
+from repro.configs.base import ArchConfig, SSMSpec, register
+
+CONFIG = register(ArchConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+    d_ff=5504, vocab=32001, head_dim=64,
+    rope_theta=10000.0,
+    activation="silu", gated_ffn=True,
+    ssm=SSMSpec(kind="mamba", d_state=16, d_inner=3200, d_conv=4),
+    hybrid_parallel=True,
+    source="arXiv:2411.13676",
+    notes="parallel attn+mamba heads, mean-combined",
+))

@@ -1,0 +1,19 @@
+"""MiniCPM-2B [arXiv:2404.06395; hf].
+
+Llama-like dense MHA (36H=36KV), SwiGLU d_ff 5760, tied embeddings.
+Trained with the WSD schedule — implemented in optim/schedule.py and used
+by its train config. Full attention -> long_500k skipped.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="minicpm-2b", family="dense",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+    d_ff=5760, vocab=122753, head_dim=64,
+    rope_theta=10000.0,
+    activation="silu", gated_ffn=True,
+    tie_embeddings=True,
+    skip_long=True,
+    source="arXiv:2404.06395",
+    notes="WSD schedule (optim/schedule.py)",
+))

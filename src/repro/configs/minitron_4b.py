@@ -1,0 +1,18 @@
+"""Minitron-4B [arXiv:2407.14679; hf].
+
+Pruned Nemotron: GQA 24H/8KV with head_dim 128, squared-ReLU
+(non-gated) FFN d_ff 9216, 256k vocab. Full attention -> long_500k
+skipped.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="minitron-4b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=9216, vocab=256000, head_dim=128,
+    rope_theta=10000.0,
+    activation="relu2", gated_ffn=False,
+    skip_long=True,
+    source="arXiv:2407.14679",
+    notes="squared-ReLU FFN (nemotron family)",
+))

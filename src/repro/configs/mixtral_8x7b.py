@@ -1,0 +1,19 @@
+"""Mixtral-8x7B [arXiv:2401.04088; hf].
+
+8 experts, top-2 routing, SwiGLU experts (d_ff 14336), sliding-window
+attention (W=4096) -> bounded KV, long_500k runs with a ring cache.
+Primary FlashMoE architecture (EP=8 x expert-replication on 16-way axis).
+"""
+from repro.configs.base import ArchConfig, MoESpec, register
+
+CONFIG = register(ArchConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=32000, head_dim=128,
+    rope_theta=1e6, window=4096,
+    activation="silu", gated_ffn=True,
+    moe=MoESpec(num_experts=8, top_k=2, d_ff_expert=14336,
+                capacity_factor=1.25),
+    source="arXiv:2401.04088",
+    notes="SWA window 4096; MoE every layer",
+))

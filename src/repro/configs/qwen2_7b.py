@@ -1,0 +1,16 @@
+"""Qwen2-7B [arXiv:2407.10671; hf].
+
+Dense GQA (28H/4KV) with QKV bias, SwiGLU d_ff 18944, 152k vocab.
+Pure full attention -> long_500k skipped.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-7b", family="dense",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    d_ff=18944, vocab=152064, head_dim=128,
+    qkv_bias=True, rope_theta=1e6,
+    activation="silu", gated_ffn=True,
+    skip_long=True,
+    source="arXiv:2407.10671",
+))

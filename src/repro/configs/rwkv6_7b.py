@@ -1,0 +1,18 @@
+"""RWKV-6 (Finch) 7B [arXiv:2404.05892; hf].
+
+Attention-free: time-mix with data-dependent decay (matrix-valued state,
+64-dim heads) + squared-ReLU channel-mix (3.5x d_model = 14336). O(1)
+state -> long_500k runs trivially.
+"""
+from repro.configs.base import ArchConfig, SSMSpec, register
+
+CONFIG = register(ArchConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64,
+    d_ff=14336, vocab=65536,
+    attention_free=True, pos_emb="none", norm="ln",
+    activation="relu", gated_ffn=False,
+    ssm=SSMSpec(kind="rwkv6", head_dim=64),
+    source="arXiv:2404.05892",
+    notes="Finch: data-dependent decay; channel-mix width = d_ff",
+))

@@ -1,0 +1,22 @@
+"""Whisper-tiny [arXiv:2212.04356; unverified].
+
+Encoder-decoder; the conv audio frontend is a STUB — input_specs()
+provides precomputed (B, 1500, 384) frame embeddings. Sinusoidal
+positions, LayerNorm, plain GELU FFN. Full-attention decoder ->
+long_500k skipped; decode_32k exercises 32k self-KV + 1500-frame
+cross-attention.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-tiny", family="audio",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab=51865,
+    enc_dec=True, enc_layers=4, enc_seq=1500,
+    pos_emb="sinusoidal", norm="ln",
+    activation="gelu", gated_ffn=False,
+    rope_theta=0.0,
+    skip_long=True,
+    source="arXiv:2212.04356",
+    notes="conv frontend stubbed with precomputed frame embeddings",
+))

@@ -1,0 +1,317 @@
+"""Expert-parallel dispatch/combine — the distributed half of FlashMoE.
+
+Two strategies, both running inside ``jax.shard_map`` over the EP axis:
+
+  * ``bulk`` — the baseline the paper measures against: one bulk-synchronous
+    AllToAll for dispatch, one for combine (GShard / Megatron style). All
+    capacity padding travels the wire.
+
+  * ``pipelined`` — the paper's contribution, TPU-adapted: the capacity dim
+    is cut into chunks; chunk c+1's AllToAll is issued while chunk c's
+    expert tiles are computing and chunk c-1's results are returning. With
+    XLA async collectives this realizes the paper's Figure 4 overlapped
+    schedule (dispatch/compute/combine in flight simultaneously). Staging
+    follows the symmetric-layout discipline (core/layout.py): in-flight
+    rounds land in distinct, writer-indexed buffers, so no chunk overwrites
+    another — Theorem 3.1 in dataflow form.
+
+Expert placement ("slots"): the EP world always equals the mesh's model-axis
+size P. When E >= P, each device hosts E/P experts. When E < P, experts are
+replicated R = P/E times (production practice for hot experts; DeepSeek-v3
+style) and each source rank deterministically picks replica (rank mod R),
+which balances load. Expert weights are stored slot-major — (slots, H, F) —
+so the local slice is always contiguous and P-divisible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gate import GateConfig, GateOutput, TILE_M
+from repro.core.moe import MoEConfig, run_gate, shared_expert_ffn
+from repro.kernels.fused_moe.ops import fused_moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotInfo:
+    num_experts: int
+    world: int            # EP world size P (model-axis size)
+    slots: int            # max(E, P)
+    replicas: int         # P // E if E < P else 1
+    local_slots: int      # slots // P
+
+    @staticmethod
+    def make(num_experts: int, world: int) -> "SlotInfo":
+        if num_experts >= world:
+            assert num_experts % world == 0, (num_experts, world)
+            return SlotInfo(num_experts, world, num_experts, 1,
+                            num_experts // world)
+        assert world % num_experts == 0, (num_experts, world)
+        return SlotInfo(num_experts, world, world,
+                        world // num_experts, 1)
+
+    def expand_expert_weights(self, w: jax.Array) -> jax.Array:
+        """(E, ...) -> slot-major (slots, ...) with replication if E < P."""
+        if self.replicas == 1:
+            return w
+        return jnp.repeat(w, self.replicas, axis=0)
+
+    def slot_of_expert(self, expert_idx: jax.Array,
+                       src_rank: jax.Array) -> jax.Array:
+        if self.replicas == 1:
+            return expert_idx
+        return expert_idx * self.replicas + (src_rank % self.replicas)
+
+
+def slot_capacity(cfg: GateConfig, tokens: int, slots: int,
+                  tile_m: int = TILE_M, chunks: int = 1) -> int:
+    """Per-slot capacity aligned to the kernel tile (bM=128, §3.2.1).
+
+    §Perf iteration 3: aligning to tile_m only (not tile_m*chunks) keeps
+    capacity-padding compute minimal; the pipeline picks a chunk count
+    that divides the tile count instead (see effective_chunks)."""
+    raw = int(-(-cfg.top_k * tokens * cfg.capacity_factor // slots))
+    return max(tile_m, -(-raw // tile_m) * tile_m)
+
+
+def effective_chunks(capacity: int, want: int, tile_m: int = TILE_M) -> int:
+    """Largest chunk count <= want that splits capacity on tile bounds."""
+    tiles = capacity // tile_m
+    for c in range(min(want, tiles), 0, -1):
+        if tiles % c == 0:
+            return c
+    return 1
+
+
+def fixed_plan(slot_ids: jax.Array, slots: int, capacity: int):
+    """Slot/capacity placement for the fixed (slots, C, H) dispatch buffer.
+
+    Returns (packed_pos (T,k) int32 with drops -> slots*capacity,
+             counts (slots,) int32).
+    """
+    T, k = slot_ids.shape
+    flat_s = slot_ids.reshape(-1)
+    sort_idx = jnp.argsort(flat_s, stable=True).astype(jnp.int32)
+    sorted_s = flat_s[sort_idx]
+    counts = jnp.bincount(flat_s, length=slots).astype(jnp.int32)
+    run_start = jnp.cumsum(counts) - counts
+    rank_in_slot = jnp.arange(T * k, dtype=jnp.int32) - run_start[sorted_s]
+    kept = rank_in_slot < capacity
+    num_rows = slots * capacity
+    row_sorted = jnp.where(kept, sorted_s * capacity + rank_in_slot,
+                           num_rows).astype(jnp.int32)
+    packed_flat = jnp.full((T * k,), num_rows, jnp.int32)
+    packed_flat = packed_flat.at[sort_idx].set(row_sorted)
+    return packed_flat.reshape(T, k), jnp.minimum(counts, capacity)
+
+
+def _scatter_to_buffer(x: jax.Array, packed_pos: jax.Array, num_rows: int,
+                       top_k: int) -> jax.Array:
+    T, H = x.shape
+    flat_tok = jnp.arange(T * top_k, dtype=jnp.int32) // top_k
+    buf = jnp.zeros((num_rows + 1, H), x.dtype)
+    buf = buf.at[packed_pos.reshape(-1)].set(x[flat_tok], mode="drop")
+    return buf[:num_rows]
+
+
+def _gather_combine(y_buf: jax.Array, packed_pos: jax.Array,
+                    weights: jax.Array) -> jax.Array:
+    T, k = weights.shape
+    padded = jnp.concatenate(
+        [y_buf, jnp.zeros((1, y_buf.shape[1]), y_buf.dtype)], axis=0)
+    rows = jnp.minimum(packed_pos, y_buf.shape[0])
+    g = padded[rows.reshape(-1)].reshape(T, k, -1)
+    return jnp.sum(g * weights.astype(g.dtype)[..., None], axis=1)
+
+
+def _experts_einsum(w1, w2, w3, x, cfg: MoEConfig):
+    """Cost-equivalent grouped GEMM as batched einsum over local slots.
+
+    x: (Ls, R, H). Identical flops/bytes to the fused kernel's I/O
+    (including capacity-padding compute); used by the dry-run/roofline.
+    """
+    h = jnp.einsum("lrh,lhf->lrf", x, w1,
+                   preferred_element_type=jnp.float32
+                   if x.dtype == jnp.float32 else None)
+    if cfg.activation == "silu":
+        h = jax.nn.silu(h)
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.activation == "relu":
+        h = jax.nn.relu(h)
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    if w3 is not None:
+        h = h * jnp.einsum("lrh,lhf->lrf", x, w3).astype(h.dtype)
+    return jnp.einsum("lrf,lfh->lrh", h.astype(x.dtype), w2)
+
+
+def _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg: MoEConfig,
+                          info: SlotInfo, capacity: int):
+    """Expert tiles on the received buffer — ONE fused grouped-GEMM kernel.
+
+    recv: (P, local_slots, C, H) — tokens from every source for my slots.
+    counts_rcv: (P, local_slots) — actual token counts (for tile_valid).
+    """
+    P, Ls, C, H = recv.shape
+    if cfg.expert_compute == "einsum":
+        x = jnp.transpose(recv, (1, 0, 2, 3)).reshape(Ls, P * C, H)
+        y = _experts_einsum(w1, w2, w3, x, cfg)
+        return jnp.transpose(y.reshape(Ls, P, C, H), (1, 0, 2, 3))
+    x = jnp.transpose(recv, (1, 0, 2, 3)).reshape(Ls * P * C, H)
+    rows_per_slot = P * C
+    tiles_per_slot = rows_per_slot // TILE_M
+    tile_expert = jnp.repeat(
+        jnp.arange(Ls, dtype=jnp.int32), tiles_per_slot)
+    # valid tiles: tile t of slot s covers rows of source p = (t*TILE_M)//C
+    tile_row = (jnp.arange(tiles_per_slot, dtype=jnp.int32) * TILE_M)[None, :]
+    src = tile_row // C                                      # (1, tps)
+    row_in_src = tile_row - src * C
+    cnt = jnp.transpose(counts_rcv, (1, 0))                  # (Ls, P)
+    cnt_t = jnp.take_along_axis(cnt, src.repeat(Ls, 0), axis=1)
+    tile_valid = (row_in_src < cnt_t).astype(jnp.int32).reshape(-1)
+    scale = jnp.ones((x.shape[0],), jnp.float32)
+    y = fused_moe_ffn(
+        x, w1, w2, w3, tile_expert, tile_valid, scale,
+        activation=cfg.activation, interpret=cfg.interpret, use_kernel=True)
+    return jnp.transpose(y.reshape(Ls, P, C, H), (1, 0, 2, 3))
+
+
+def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
+                 info: SlotInfo, axis: str,
+                 rng: Optional[jax.Array]):
+    """Runs INSIDE shard_map: x is (B_loc, S_loc, H) — the resident
+    sequence-sharded activation layout (§Perf iteration 2: tokens arrive
+    already split over the EP axis; no boundary all-gather/slice).
+
+    Returns (y (B_loc, S_loc, H), aux dict).
+    """
+    P = info.world
+    rank = jax.lax.axis_index(axis)
+    B_loc, S_loc, H = x.shape
+    T_loc = B_loc * S_loc
+    x_loc = x.reshape(T_loc, H)
+
+    params = {"gate": w_gate, "w1": w1, "w2": w2}
+    if w3 is not None:
+        params["w3"] = w3
+    gate_out = run_gate(params, x_loc, cfg, rng)
+    slot_ids = info.slot_of_expert(gate_out.expert_indices, rank)
+
+    C = slot_capacity(cfg.gate, T_loc, info.slots)
+    chunks = effective_chunks(
+        C, cfg.num_chunks if cfg.dist_impl == "pipelined" else 1)
+    packed_pos, counts = fixed_plan(slot_ids, info.slots, C)
+    buf = _scatter_to_buffer(x_loc, packed_pos, info.slots * C,
+                             cfg.gate.top_k)
+    buf = buf.reshape(info.slots, C, H)
+
+    counts_rcv = jax.lax.all_to_all(
+        counts.reshape(P, info.local_slots), axis, 0, 0, tiled=False)
+
+    if cfg.dist_impl == "bulk":
+        recv = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+        recv = recv.reshape(P, info.local_slots, C, H)
+        y = _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg, info, C)
+        y = y.reshape(info.slots, C, H)
+        y_back = jax.lax.all_to_all(y, axis, 0, 0, tiled=True)
+    elif cfg.dist_impl == "pipelined":
+        y_back = _pipelined_rounds(buf, counts_rcv, w1, w2, w3, cfg, info,
+                                   axis, chunks)
+    else:
+        raise ValueError(cfg.dist_impl)
+
+    y_loc = _gather_combine(y_back.reshape(info.slots * C, H), packed_pos,
+                            gate_out.combine_weights).astype(x.dtype)
+    if cfg.d_ff_shared > 0:
+        y_loc = y_loc + shared_expert_ffn(shared, x_loc, cfg)
+    aux = {
+        "aux_loss": jax.lax.pmean(gate_out.aux_loss, axis),
+        "z_loss": jax.lax.pmean(gate_out.z_loss, axis),
+    }
+    return y_loc.reshape(B_loc, S_loc, H), aux
+
+
+def _pipelined_rounds(buf, counts_rcv, w1, w2, w3, cfg: MoEConfig,
+                      info: SlotInfo, axis: str, n: int):
+    """FlashMoE overlapped schedule (paper Fig. 4) over capacity chunks.
+
+    Iteration i: (a) issue dispatch AllToAll for chunk i+1, (b) compute
+    expert tiles of chunk i, (c) issue combine AllToAll of chunk i. (a) and
+    (c) are dataflow-independent of (b)'s critical path, so XLA's async
+    collectives overlap them with the MXU work — device-initiated,
+    barrier-free transfers in the paper's sense. Chunks are tile-aligned
+    (C % (bM * n) == 0), so every chunk is whole tiles (in-place padding).
+    """
+    S, C, H = buf.shape
+    Cc = C // n
+    P, Ls = info.world, info.local_slots
+
+    def a2a(z):
+        return jax.lax.all_to_all(z, axis, 0, 0, tiled=True)
+
+    def chunk(i):
+        return jax.lax.dynamic_slice_in_dim(buf, i * Cc, Cc, axis=1)
+
+    def cnt_chunk(i):
+        # tokens of this chunk: counts clipped to [i*Cc, (i+1)*Cc)
+        return jnp.clip(counts_rcv - i * Cc, 0, Cc)
+
+    out = jnp.zeros((S, C, H), buf.dtype)
+    recv = a2a(chunk(0)).reshape(P, Ls, Cc, H)
+
+    def body(i, carry):
+        out, recv = carry
+        nxt = a2a(chunk(i + 1)).reshape(P, Ls, Cc, H)  # overlap: dispatch i+1
+        y = _local_expert_compute(w1, w2, w3, recv, cnt_chunk(i), cfg,
+                                  info, Cc)            # compute i
+        y_back = a2a(y.reshape(S, Cc, H))              # overlap: combine i
+        out = jax.lax.dynamic_update_slice_in_dim(out, y_back, i * Cc, axis=1)
+        return out, nxt
+
+    if n > 1:
+        out, recv = jax.lax.fori_loop(0, n - 1, body, (out, recv),
+                                      unroll=True)
+    y = _local_expert_compute(w1, w2, w3, recv, cnt_chunk(n - 1), cfg,
+                              info, Cc)
+    y_back = a2a(y.reshape(S, Cc, H))
+    out = jax.lax.dynamic_update_slice_in_dim(out, y_back, (n - 1) * Cc,
+                                              axis=1)
+    return out
+
+
+def distributed_moe(params: dict, x: jax.Array, cfg: MoEConfig,
+                    mesh: jax.sharding.Mesh, *, ep_axis: str = "model",
+                    dp_axes=("data",), rng: Optional[jax.Array] = None):
+    """Expert-parallel MoE over activations x (B, S, H).
+
+    x enters and leaves in the resident layout — batch over dp_axes,
+    sequence over the EP ('model') axis — so the MoE boundary adds NO
+    collectives beyond its own AllToAll (§Perf iteration 2). Expert
+    weights must already be slot-major (SlotInfo.expand_expert_weights).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    info = SlotInfo.make(cfg.gate.num_experts, mesh.shape[ep_axis])
+    dp = tuple(a for a in dp_axes if a in mesh.shape)
+    tok_spec = P(dp, ep_axis, None)
+    w_spec_e = P(ep_axis, None, None)
+
+    body = functools.partial(_ep_moe_body, cfg=cfg, info=info, axis=ep_axis,
+                             rng=rng)
+    w3 = params.get("w3")
+    shared = {k: v for k, v in params.items() if k.startswith("shared_")}
+    in_specs = (P(None, None), w_spec_e, w_spec_e,
+                (w_spec_e if w3 is not None else None),
+                {k: P(None, None) for k in shared},
+                tok_spec)
+    out_specs = (tok_spec, {"aux_loss": P(), "z_loss": P()})
+    fn = jax.shard_map(
+        lambda wg, a, b, c, sh, xx: body(wg, a, b, c, sh, xx),
+        mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)
+    return fn(params["gate"], params["w1"], params["w2"], w3, shared, x)

@@ -1,0 +1,131 @@
+"""Gating for FlashMoE: softmax/sigmoid gate, top-k selection, capacity math.
+
+Paper mapping (FlashDMoE §3, Algorithm 1 line 1):
+    ``T_phi, G_phi <- FusedGate(A)``
+
+``G_phi in R^{S x E}`` are affinity scores (Eq. 3); top-k selection with
+renormalized combine weights implements Eqs. (2)-(3). Capacity is aligned up
+to the tile height ``bM`` (paper §3.2.1 "in-place padding") so every expert
+group is tile-aligned and the grouped-GEMM kernel never reads a partial tile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Tile height of the fused MoE kernel; the paper fixes bM = 128 (§3.2.1).
+TILE_M = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class GateConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.0
+    # "softmax" (GShard / the paper's gate) or "sigmoid" (DeepSeek-v3 style).
+    score_fn: str = "softmax"
+    # Renormalize the selected top-k affinities to sum to 1 (paper Eq. 2-3).
+    renormalize: bool = True
+    # Align expert capacity up to the kernel tile height (paper §3.2.1).
+    align_capacity: int = TILE_M
+    # Router z-loss coefficient (ST-MoE); 0 disables.
+    router_z_loss: float = 1e-3
+    # Load-balance auxiliary loss coefficient (GShard/Switch); 0 disables.
+    aux_loss: float = 1e-2
+    # Jitter noise on logits during training; 0 disables.
+    jitter: float = 0.0
+    # Number of shared (always-on) experts, DeepSeek-v2 style. Shared experts
+    # bypass routing entirely and are handled by the MoE layer, not the gate.
+    num_shared_experts: int = 0
+
+
+def expert_capacity(cfg: GateConfig, tokens: int) -> int:
+    """Per-expert capacity C = ceil(k * S * cf / E), aligned to the tile."""
+    raw = int(-(-cfg.top_k * tokens * cfg.capacity_factor // cfg.num_experts))
+    align = max(1, cfg.align_capacity)
+    return max(align, -(-raw // align) * align)
+
+
+@dataclasses.dataclass
+class GateOutput:
+    """Routing decisions for a batch of tokens.
+
+    Attributes:
+      combine_weights: (T, k) float — renormalized affinity of each selected
+        expert (the ``w`` entries of the paper's routing table ``T_phi``).
+      expert_indices: (T, k) int32 — selected expert per (token, slot).
+      affinities: (T, E) float — the dense gate scores ``G_phi``.
+      aux_loss: scalar — load-balance auxiliary loss (0 if disabled).
+      z_loss: scalar — router z-loss (0 if disabled).
+    """
+
+    combine_weights: jax.Array
+    expert_indices: jax.Array
+    affinities: jax.Array
+    aux_loss: jax.Array
+    z_loss: jax.Array
+
+
+def gate_scores(cfg: GateConfig, logits: jax.Array) -> jax.Array:
+    if cfg.score_fn == "softmax":
+        return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if cfg.score_fn == "sigmoid":
+        return jax.nn.sigmoid(logits.astype(jnp.float32))
+    raise ValueError(f"unknown score_fn {cfg.score_fn!r}")
+
+
+def gate(
+    cfg: GateConfig,
+    x: jax.Array,
+    w_gate: jax.Array,
+    *,
+    rng: Optional[jax.Array] = None,
+) -> GateOutput:
+    """FusedGate: affinities + top-k routing decisions.
+
+    Args:
+      x: (T, H) tokens.
+      w_gate: (H, E) router weights.
+      rng: optional PRNG key for jitter noise.
+    """
+    logits = jnp.einsum(
+        "th,he->te", x, w_gate, preferred_element_type=jnp.float32
+    )
+    if cfg.jitter > 0.0 and rng is not None:
+        logits = logits * jax.random.uniform(
+            rng, logits.shape, minval=1.0 - cfg.jitter, maxval=1.0 + cfg.jitter
+        )
+    probs = gate_scores(cfg, logits)
+
+    top_w, top_e = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.renormalize:
+        denom = jnp.sum(top_w, axis=-1, keepdims=True)
+        top_w = top_w / jnp.maximum(denom, 1e-9)
+
+    # Router z-loss: penalize large logits (numerical health at scale).
+    if cfg.router_z_loss > 0.0:
+        z = jax.nn.logsumexp(logits, axis=-1)
+        z_loss = cfg.router_z_loss * jnp.mean(z * z)
+    else:
+        z_loss = jnp.zeros((), jnp.float32)
+
+    # Load-balance loss: E * sum_e f_e * p_e  (Switch Transformer Eq. 4).
+    if cfg.aux_loss > 0.0:
+        T = probs.shape[0]
+        me = jnp.mean(probs, axis=0)  # mean gate prob per expert
+        one_hot = jax.nn.one_hot(top_e[:, 0], cfg.num_experts, dtype=jnp.float32)
+        ce = jnp.mean(one_hot, axis=0)  # fraction routed (top-1 proxy)
+        aux = cfg.aux_loss * cfg.num_experts * jnp.sum(me * ce)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+
+    return GateOutput(
+        combine_weights=top_w.astype(jnp.float32),
+        expert_indices=top_e.astype(jnp.int32),
+        affinities=probs,
+        aux_loss=aux,
+        z_loss=z_loss,
+    )

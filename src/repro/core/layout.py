@@ -1,0 +1,128 @@
+"""Symmetric tensor layout L (paper §3.2, Theorem 3.1).
+
+``L in R^{P x R x B x E x C x H}`` where
+  P — expert-parallel world size (one slab per peer),
+  R — communication rounds (0 = dispatch, 1 = combine),
+  B — staging buffers (0 = local staging, 1 = remote-landing),
+  E — local experts on the owning device,
+  C — upscaled expert capacity (aligned to bM, §3.2.1),
+  H — token embedding dim.
+
+The layout is over-provisioned ~4x Size(T) (2 rounds x 2 stages) so that
+every one-sided write lands in a cell addressed by (source peer, round,
+stage) — no two distinct writers can address the same cell (Theorem 3.1):
+
+  * an inter-device write from peer p into device q uses p* = p, b = 1;
+  * intra-device staging writes use b = 0 and p* = self.
+
+On GPU this indexing elides NVSHMEM synchronization. On TPU, XLA dataflow
+already serializes conflicting writes, but the layout is still what makes
+the *chunk-pipelined* dispatcher race-free across in-flight rounds, and it
+drives the memory-overhead accounting (paper Table 3). The index algebra
+below is checked by a hypothesis property test (write-write conflict
+freedom = injectivity over valid coordinates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.gate import TILE_M
+
+ROUND_DISPATCH = 0
+ROUND_COMBINE = 1
+STAGE_LOCAL = 0
+STAGE_REMOTE = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SymmetricLayout:
+    """Shape/arithmetic of L; per-device buffer in the dispatcher."""
+
+    world: int            # P — EP world size
+    local_experts: int    # E — experts resident on each device
+    capacity: int         # C — per-expert capacity (pre-alignment)
+    hidden: int           # H
+    rounds: int = 2       # R
+    stages: int = 2       # B
+    tile_m: int = TILE_M
+
+    @property
+    def capacity_aligned(self) -> int:
+        """C' = C aligned up to bM (in-place padding, §3.2.1)."""
+        return -(-self.capacity // self.tile_m) * self.tile_m
+
+    @property
+    def shape(self) -> Tuple[int, int, int, int, int, int]:
+        return (
+            self.world,
+            self.rounds,
+            self.stages,
+            self.local_experts,
+            self.capacity_aligned,
+            self.hidden,
+        )
+
+    def size_bytes(self, itemsize: int = 4) -> int:
+        return int(np.prod(self.shape)) * itemsize
+
+    def token_buffer_bytes(self, tokens: int, itemsize: int = 4) -> int:
+        """Size(T) = S * H * itemsize (the pre-layout token matrix)."""
+        return tokens * self.hidden * itemsize
+
+    def overhead_ratio(self, tokens: int) -> float:
+        """Size(L) / Size(T); ~= 4 for uniform distribution (paper §3.2):
+        4 * max(1, bM*E/ (S/P... )) — see paper's piecewise formula."""
+        return self.size_bytes(1) / max(1, self.token_buffer_bytes(tokens, 1))
+
+    # ---- index algebra (Definition C.2) ------------------------------------
+    def cell_index(self, source: int, target: int, round_: int, stage: int,
+                   expert: int, slot: int) -> Tuple[int, ...]:
+        """Validated index of a write by ``source`` into ``target``'s L.
+
+        Enforces Definition C.2: inter-device writes must use p* = source and
+        stage = REMOTE; stage LOCAL writes must be self-writes.
+        """
+        if not (0 <= source < self.world and 0 <= target < self.world):
+            raise ValueError("peer out of range")
+        if not (0 <= expert < self.local_experts):
+            raise ValueError("expert out of range")
+        if not (0 <= slot < self.capacity_aligned):
+            raise ValueError("slot out of range")
+        if round_ not in (ROUND_DISPATCH, ROUND_COMBINE):
+            raise ValueError("bad round")
+        if stage == STAGE_REMOTE:
+            p_star = source  # one-sided landing slab is indexed by the writer
+        elif stage == STAGE_LOCAL:
+            if source != target:
+                raise ValueError(
+                    "stage-LOCAL writes are intra-device only (Def C.2.2)")
+            p_star = source
+        else:
+            raise ValueError("bad stage")
+        return (p_star, round_, stage, expert, slot)
+
+    def flat_cell(self, target: int, idx: Tuple[int, ...]) -> int:
+        """Globally unique integer id of a cell (device-qualified)."""
+        p, r, b, e, c = idx
+        shape = self.shape[:-1]
+        flat = ((((p * shape[1] + r) * shape[2] + b) * shape[3] + e)
+                * shape[4] + c)
+        return target * int(np.prod(shape)) + flat
+
+
+def size_L_bytes(tokens: int, experts: int, hidden: int, world: int,
+                 capacity_factor: float = 1.0, top_k: int = 1,
+                 itemsize: int = 4, tile_m: int = TILE_M) -> int:
+    """Paper §3.2.1 memory model:
+
+        Size(L) ~= 4 * Size(T)                     if S/E >= bM
+                 ~= 4 * (bM * E / S) * Size(T)     otherwise
+    realized exactly via the aligned layout above.
+    """
+    cap = max(1, int(tokens * top_k * capacity_factor / max(1, experts)))
+    lay = SymmetricLayout(world=world, local_experts=max(1, experts // world),
+                          capacity=cap, hidden=hidden, tile_m=tile_m)
+    return lay.size_bytes(itemsize)

@@ -1,0 +1,173 @@
+"""Routing tables: the paper's ``T_phi`` as sort-based packed routing.
+
+FlashDMoE represents routing as ``T_phi in (R^2)^{E x C}`` where
+``T_phi(e, c) = (i, w)``: token ``i`` occupies capacity slot ``c`` of expert
+``e`` with combine weight ``w``. We realize the same structure with a
+sort-by-expert packed layout, which is the TPU-native form:
+
+  * ``sort_idx``       — stable argsort of (token, slot) pairs by expert id;
+  * ``group_sizes``    — tokens per expert after capacity clipping;
+  * ``group_offsets``  — tile-aligned start row of each expert's block in the
+                         packed buffer (the paper's in-place padding, §3.2.1:
+                         each group start is aligned to bM so Processor tiles
+                         always read full, aligned tiles);
+  * ``combine metadata`` — for every (token, slot), the packed row holding its
+                         expert output, for the weighted combine (Eq. 2-3).
+
+Everything is static-shape: the packed buffer has
+``rows = T*k + E*(bM-1)`` rounded up to ``bM`` — the worst-case alignment
+waste — so the same compiled program serves any routing pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gate import GateConfig, GateOutput, expert_capacity, TILE_M
+
+
+def packed_rows(num_tokens: int, top_k: int, num_experts: int,
+                tile_m: int = TILE_M) -> int:
+    """Static row count of the packed (sorted, tile-aligned) buffer."""
+    raw = num_tokens * top_k + num_experts * (tile_m - 1)
+    return -(-raw // tile_m) * tile_m
+
+
+@dataclasses.dataclass
+class RoutingPlan:
+    """Packed routing plan (static shapes; the paper's T_phi analogue).
+
+    Attributes:
+      sort_idx:     (T*k,) int32 — flat (token*k + slot) ids ordered by expert.
+      packed_pos:   (T, k) int32 — row of each (token, slot) in the packed
+                    buffer; rows >= num_rows mean "dropped at capacity".
+      group_sizes:  (E,) int32 — kept tokens per expert (<= capacity).
+      group_offsets:(E,) int32 — tile-aligned start row per expert.
+      tile_expert:  (num_tiles,) int32 — expert id owning each bM-tile; this is
+                    the kernel's task-descriptor table (paper §3.1).
+      tile_valid:   (num_tiles,) int32 — 1 where the tile holds >=1 real token.
+      num_rows:     int — static packed row count.
+      capacity:     int — per-expert capacity after tile alignment.
+    """
+
+    sort_idx: jax.Array
+    packed_pos: jax.Array
+    group_sizes: jax.Array
+    group_offsets: jax.Array
+    tile_expert: jax.Array
+    tile_valid: jax.Array
+    num_rows: int
+    capacity: int
+
+
+def make_routing_plan(cfg: GateConfig, out: GateOutput,
+                      tile_m: int = TILE_M) -> RoutingPlan:
+    """Build the packed routing plan from gate decisions.
+
+    Deterministic, vectorized, O(T k log(T k)): one stable sort + cumsums.
+    """
+    T, k = out.expert_indices.shape
+    E = cfg.num_experts
+    cap = expert_capacity(cfg, T)
+    flat_e = out.expert_indices.reshape(-1)  # (T*k,)
+
+    # Stable sort by expert id; ties keep token order (deterministic routing).
+    sort_idx = jnp.argsort(flat_e, stable=True).astype(jnp.int32)
+    sorted_e = flat_e[sort_idx]
+
+    # Rank of each kept entry within its expert group = its capacity slot c.
+    ones = jnp.ones_like(sorted_e, dtype=jnp.int32)
+    csum = jnp.cumsum(ones) - 1  # global rank in sorted order
+    # start of each expert's run inside the sorted order
+    counts = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+    run_start = jnp.cumsum(counts) - counts  # (E,)
+    slot_in_expert = csum - run_start[sorted_e]
+
+    kept = slot_in_expert < cap
+    group_sizes = jnp.minimum(counts, cap)
+
+    # Tile-aligned group starts in the packed buffer (in-place padding).
+    aligned = -(-group_sizes // tile_m) * tile_m
+    group_offsets = (jnp.cumsum(aligned) - aligned).astype(jnp.int32)
+    num_rows = packed_rows(T, k, E, tile_m)
+
+    # Row of each sorted entry in the packed buffer; dropped -> num_rows.
+    packed_row_sorted = jnp.where(
+        kept, group_offsets[sorted_e] + slot_in_expert, num_rows
+    ).astype(jnp.int32)
+
+    # Invert: for each flat (token, slot), where did it land?
+    packed_pos_flat = jnp.full((T * k,), num_rows, jnp.int32)
+    packed_pos_flat = packed_pos_flat.at[sort_idx].set(packed_row_sorted)
+    packed_pos = packed_pos_flat.reshape(T, k)
+
+    # Task-descriptor table: owner expert of every bM tile.
+    num_tiles = num_rows // tile_m
+    tile_starts = jnp.arange(num_tiles, dtype=jnp.int32) * tile_m
+    # expert owning row r: searchsorted over group_offsets
+    tile_expert = (
+        jnp.searchsorted(group_offsets, tile_starts, side="right") - 1
+    ).astype(jnp.int32)
+    tile_expert = jnp.clip(tile_expert, 0, E - 1)
+    used = group_offsets[tile_expert] + group_sizes[tile_expert]
+    tile_valid = (tile_starts < used).astype(jnp.int32)
+
+    return RoutingPlan(
+        sort_idx=sort_idx,
+        packed_pos=packed_pos,
+        group_sizes=group_sizes,
+        group_offsets=group_offsets,
+        tile_expert=tile_expert,
+        tile_valid=tile_valid,
+        num_rows=num_rows,
+        capacity=cap,
+    )
+
+
+def permute_tokens(x: jax.Array, plan: RoutingPlan,
+                   top_k: int) -> jax.Array:
+    """Scatter tokens into the packed, expert-sorted buffer.
+
+    Returns (num_rows, H); padding rows are zero (real memory, never
+    transmitted — the paper's in-place padding).
+    """
+    T, H = x.shape
+    flat_tok = jnp.arange(T * top_k, dtype=jnp.int32) // top_k
+    rows = plan.packed_pos.reshape(-1)  # (T*k,)
+    buf = jnp.zeros((plan.num_rows + 1, H), x.dtype)
+    buf = buf.at[rows].set(x[flat_tok], mode="drop")
+    return buf[: plan.num_rows]
+
+
+def combine_tokens(y_packed: jax.Array, plan: RoutingPlan,
+                   combine_weights: jax.Array,
+                   *, weights_applied: bool = False) -> jax.Array:
+    """Weighted combine (paper Eq. 2-3): O_i = sum_k w_ik * y[row(i,k)].
+
+    Gather-based unpermute: TPU-friendly (static gather, no scatter).
+    Dropped slots gather a zero row.
+    """
+    T, k = combine_weights.shape
+    padded = jnp.concatenate(
+        [y_packed, jnp.zeros((1, y_packed.shape[1]), y_packed.dtype)], axis=0
+    )
+    rows = jnp.minimum(plan.packed_pos, y_packed.shape[0])  # (T, k)
+    gathered = padded[rows.reshape(-1)].reshape(T, k, -1)
+    if weights_applied:
+        return jnp.sum(gathered, axis=1)
+    w = combine_weights.astype(gathered.dtype)[..., None]
+    return jnp.sum(gathered * w, axis=1)
+
+
+def packed_combine_scale(plan: RoutingPlan, combine_weights: jax.Array,
+                         top_k: int) -> jax.Array:
+    """Per-packed-row combine weight (for fusing the scale into the kernel
+    epilogue — the paper's Combine task folded into GEMM1's epilogue)."""
+    w_flat = combine_weights.reshape(-1).astype(jnp.float32)
+    rows = plan.packed_pos.reshape(-1)
+    scale = jnp.zeros((plan.num_rows + 1,), jnp.float32)
+    scale = scale.at[rows].set(w_flat, mode="drop")
+    return scale[: plan.num_rows]

@@ -1,0 +1,54 @@
+"""Elastic scaling: rebuild the mesh + shardings from the live device set
+and reshard training state from a checkpoint (or in-memory tree).
+
+Flow on membership change (node loss / scale-up):
+  1. supervisor restarts the job with the surviving device set;
+  2. ``best_mesh_shape`` re-derives a (data, model) factorization that
+     keeps TP within a pod boundary and preserves divisibility of the
+     model dims;
+  3. checkpoint restore places logical arrays with the new shardings
+     (checkpoint/checkpoint.py is topology-free by construction).
+
+Tested by saving on an 8-device mesh and restoring on 4/2-device meshes
+in subprocesses.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+
+
+def best_mesh_shape(n_devices: int, cfg: Optional[ArchConfig] = None,
+                    max_model: int = 16) -> Tuple[int, int]:
+    """(data, model) for an arbitrary surviving device count.
+
+    Prefers the largest model-parallel degree <= max_model that divides
+    both the device count and the arch's head count (TP must divide
+    n_heads and, for EP, slots must divide or replicate evenly).
+    """
+    for model in range(min(max_model, n_devices), 0, -1):
+        if n_devices % model:
+            continue
+        if cfg is not None:
+            if cfg.n_heads % model:
+                continue
+            if cfg.moe is not None:
+                E = cfg.moe.num_experts
+                if not (E % model == 0 or model % E == 0):
+                    continue
+        return (n_devices // model, model)
+    return (n_devices, 1)
+
+
+def make_elastic_mesh(devices: Optional[List] = None,
+                      cfg: Optional[ArchConfig] = None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    d, m = best_mesh_shape(len(devices), cfg)
+    import numpy as np
+    arr = np.array(devices).reshape(d, m)
+    return Mesh(arr, ("data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,160 @@
+"""Fault tolerance for long-running multi-pod jobs.
+
+The paper's §2.1 motivation is stragglers under bulk-synchronous
+collectives (p95 delay up to 11.4x). Our kernel-level answer is the
+barrier-free pipelined dispatcher (core/dispatch.py). This module is the
+*launcher*-level answer — the pieces a 1000+ node deployment needs around
+the step function:
+
+  * StepWatchdog     — detects hung/straggling steps (deadline per step,
+                       EMA-based anomaly threshold) and fires a callback
+                       (alert / preempt / checkpoint-and-restart).
+  * retry_step       — bounded retry of a step closure on transient
+                       failures, with checkpoint-restore escalation.
+  * StragglerTracker — per-step wall-time record; flags steps whose time
+                       exceeds mean + k*std (the paper's Table 2 metric:
+                       Delay = t_max - t_fastest).
+  * heartbeat file   — liveness signal an external supervisor can watch.
+
+All host-side; no device state. Tested with simulated failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerStats:
+    median: float
+    p95: float
+    max_delay_ratio: float  # max(t)/min(t) — the paper's Table 2 "Delay"
+
+
+class StragglerTracker:
+    """Rolling per-step wall-times; the paper's Table 2 delay metric."""
+
+    def __init__(self, window: int = 200, k_sigma: float = 3.0):
+        self.window = window
+        self.k_sigma = k_sigma
+        self.times: List[float] = []
+        self.flagged: List[int] = []
+        self._step = 0
+
+    def record(self, seconds: float) -> bool:
+        """Record a step time; returns True if it is a straggler."""
+        self._step += 1
+        hist = self.times[-self.window:]
+        is_straggler = False
+        if len(hist) >= 10:
+            mean = sum(hist) / len(hist)
+            var = sum((t - mean) ** 2 for t in hist) / len(hist)
+            thr = mean + self.k_sigma * max(var ** 0.5, 0.05 * mean)
+            is_straggler = seconds > thr
+        if is_straggler:
+            self.flagged.append(self._step)
+        self.times.append(seconds)
+        return is_straggler
+
+    def stats(self) -> Optional[StragglerStats]:
+        if not self.times:
+            return None
+        s = sorted(self.times)
+        n = len(s)
+        return StragglerStats(
+            median=s[n // 2],
+            p95=s[min(n - 1, int(0.95 * n))],
+            max_delay_ratio=s[-1] / max(s[0], 1e-9),
+        )
+
+
+class StepWatchdog:
+    """Fires ``on_timeout`` if a step exceeds its deadline.
+
+    Deadline = max(min_deadline, factor * EMA(step time)). Use as:
+        with watchdog.step():
+            run_train_step()
+    """
+
+    def __init__(self, factor: float = 5.0, min_deadline: float = 60.0,
+                 on_timeout: Optional[Callable[[float], None]] = None):
+        self.factor = factor
+        self.min_deadline = min_deadline
+        self.on_timeout = on_timeout or (lambda dl: None)
+        self.ema: Optional[float] = None
+        self.fired = 0
+
+    def step(self):
+        return _WatchdogCtx(self)
+
+    def _deadline(self) -> float:
+        if self.ema is None:
+            return self.min_deadline
+        return max(self.min_deadline, self.factor * self.ema)
+
+    def _observe(self, dt: float):
+        self.ema = dt if self.ema is None else 0.9 * self.ema + 0.1 * dt
+
+
+class _WatchdogCtx:
+    def __init__(self, wd: StepWatchdog):
+        self.wd = wd
+
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        dl = self.wd._deadline()
+        self.timer = threading.Timer(dl, self._fire, args=(dl,))
+        self.timer.daemon = True
+        self.timer.start()
+        return self
+
+    def _fire(self, dl):
+        self.wd.fired += 1
+        self.wd.on_timeout(dl)
+
+    def __exit__(self, *exc):
+        self.timer.cancel()
+        self.wd._observe(time.monotonic() - self.t0)
+        return False
+
+
+def retry_step(fn: Callable, *, max_retries: int = 2,
+               on_failure: Optional[Callable[[int, BaseException], None]]
+               = None,
+               restore_fn: Optional[Callable[[], None]] = None):
+    """Run ``fn()``; on transient failure retry, escalating to
+    ``restore_fn`` (checkpoint restore / re-init) before the final try."""
+    last: Optional[BaseException] = None
+    for attempt in range(max_retries + 1):
+        try:
+            return fn()
+        except (RuntimeError, OSError, jax_err()) as e:  # transient classes
+            last = e
+            if on_failure:
+                on_failure(attempt, e)
+            if attempt == max_retries - 1 and restore_fn:
+                restore_fn()
+    raise last  # type: ignore[misc]
+
+
+def jax_err():
+    try:
+        from jax.errors import JaxRuntimeError
+        return JaxRuntimeError
+    except Exception:  # pragma: no cover
+        return RuntimeError
+
+
+def write_heartbeat(path: str, step: int, extra: Optional[dict] = None):
+    """Atomic liveness file for an external supervisor."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"step": step, "time": time.time(), **(extra or {})}, f)
+    os.replace(tmp, path)

@@ -1,0 +1,211 @@
+"""Sharding policies: PartitionSpecs for params, optimizer state, caches
+and batches, derived from (ArchConfig, mesh) by parameter-name rules.
+
+Policy (production mesh axes: optional "pod", "data", "model"):
+  * TP over "model": attention QKV/O by heads, FFN by hidden dim, vocab by
+    embedding rows (output projection by cols).
+  * EP over "model": expert tensors (slots, H, F) sharded on slots when
+    slots % model == 0 (train layout). Serve layout shards experts on F
+    (gather-MoE reads only selected experts; see core/moe.py).
+  * DP over ("pod", "data"): batch dims; gradient all-reduce inserted by
+    GSPMD/shard_map.
+  * ZeRO-1: optimizer state (master/mu/nu) additionally sharded over
+    "data" on the largest divisible dim — 12 bytes/param never replicated.
+  * KV caches: batch over DP; kv-heads over "model"; for long_500k
+    (batch=1) sequence over "data" instead.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def dp_axes_of(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+# param-tree top segments whose leaves carry a leading stacked-layer dim
+_STACKED_PREFIXES = ("layers", "enc_layers", "cross", "cross_norm")
+
+
+def param_spec(cfg: ArchConfig, mesh: Mesh, path: str, shape,
+               serve: bool = False) -> P:
+    """PartitionSpec for one parameter, by its pytree path.
+
+    Scanned-layer params carry a leading L dim (never sharded); all rules
+    below address the LOGICAL (per-layer) shape.
+    """
+    m = mesh.shape.get("model", 1)
+    segs = path.split("/")
+    name = segs[-1]
+    off = 1 if segs[0] in _STACKED_PREFIXES else 0
+    lshape = shape[off:]
+    nd = len(lshape)
+
+    def sh(dim: int) -> P:  # shard logical `dim` over model if divisible
+        if _div(lshape[dim], m):
+            parts = [None] * off + [("model" if i == dim else None)
+                                    for i in range(nd)]
+            return P(*parts)
+        return P(*([None] * (off + nd)))
+
+    # attention parallelism mode: heads-TP only when the q-head count
+    # divides the model axis; otherwise attention runs context-parallel
+    # with REPLICATED attention weights (see models/attention.py).
+    heads_tp = (cfg.n_heads % max(m, 1) == 0) and not cfg.attention_free
+
+    repl = P(*([None] * (off + nd)))
+    in_rwkv = "rwkv" in path
+    if "embed" in path and nd == 2:
+        return sh(0)                     # vocab rows
+    if name == "lm_head":
+        return sh(1)                     # vocab cols
+    if in_rwkv:
+        # rwkv projections: shard output dim (heads); wo row-sharded
+        if name in ("wr", "wk", "wv", "wg", "ck", "cr", "w_lora_a"):
+            return sh(nd - 1)
+        if name in ("wo", "cv", "w_lora_b"):
+            return sh(0)
+        return repl
+    if name in ("wq", "w_uk", "w_uv"):
+        return sh(1) if heads_tp else repl
+    if name in ("wk", "wv"):
+        # kv weights: shard per-head dim only if kv heads divide the axis
+        if heads_tp and _div(cfg.n_kv_heads, m):
+            return sh(1)
+        return repl
+    if name == "wo":
+        return sh(0) if heads_tp else repl
+    if name == "bq":
+        return sh(0) if heads_tp else repl
+    if name in ("bk", "bv"):
+        return repl
+    if name in ("w_dkv", "w_kr"):
+        return repl                      # latent dims are small; replicate
+    if name in ("w1", "w3") and nd == 3:                 # experts
+        if serve:
+            return sh(2)                 # gather-MoE: shard F
+        return sh(0) if _div(lshape[0], m) else sh(2)    # EP else expert-TP
+    if name == "w2" and nd == 3:
+        if serve:
+            return sh(1)
+        return sh(0) if _div(lshape[0], m) else sh(1)
+    if name in ("w1", "w3") and nd == 2:                 # dense FFN
+        return sh(1)
+    if name == "w2" and nd == 2:
+        return sh(0)
+    if name in ("shared_w1", "shared_w3"):
+        return sh(nd - 1)
+    if name == "shared_w2":
+        return sh(nd - 2)
+    if name in ("in_proj", "dt_proj"):   # mamba: output dim = d_inner
+        return sh(nd - 1)
+    if name == "x_proj":                 # contraction over sharded d_inner
+        return repl
+    if name == "out_proj":
+        return sh(nd - 2)
+    if name in ("conv_w", "conv_b", "A_log", "D", "dt_bias"):
+        return (sh(nd - 1) if _div(lshape[-1], m) else repl)
+    # norms, mixes, gate router, small tensors: replicate
+    return repl
+
+
+def zero1_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Extend a param spec with 'data' sharding for optimizer state."""
+    d = mesh.shape.get("data", 1)
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (ax, dim) in enumerate(zip(parts, shape)):
+        if ax is None and _div(dim, d):
+            parts[i] = "data"
+            return P(*parts)
+    return P(*parts)
+
+
+def params_shardings(cfg: ArchConfig, mesh: Mesh, params_tree,
+                     serve: bool = False):
+    """NamedSharding pytree for a params pytree (works on SDS trees)."""
+    def one(path, leaf):
+        key = "/".join(_pstr(p) for p in path)
+        return NamedSharding(mesh, param_spec(cfg, mesh, key, leaf.shape,
+                                              serve))
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def opt_shardings(cfg: ArchConfig, mesh: Mesh, opt_state_tree):
+    """ZeRO-1 shardings for {mu, nu, master, count}."""
+    def one(path, leaf):
+        key = "/".join(_pstr(p) for p in path)
+        if key == "count" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # strip the leading mu/nu/master segment for the param rule
+        pkey = "/".join(key.split("/")[1:])
+        base = param_spec(cfg, mesh, pkey, leaf.shape)
+        return NamedSharding(mesh, zero1_spec(base, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, opt_state_tree)
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    dp = dp_axes_of(mesh)
+    def one(leaf):
+        return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, cache_tree,
+                    seq_sharded: bool = False):
+    """KV-cache shardings. seq_sharded=True (long_500k, batch=1): shard the
+    sequence dim over 'data'; else shard batch over DP and kv-heads over
+    'model' where divisible."""
+    dp = dp_axes_of(mesh)
+    m = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        key = "/".join(_pstr(p) for p in path)
+        nd = leaf.ndim
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        parts = [None] * nd
+        name = key.split("/")[-1]
+        stacked = key.split("/")[0] == "layers" or name.startswith("cross")
+        b_dim = 1 if stacked else 0
+        if name in ("k", "v", "ckv", "kr", "cross_k", "cross_v"):
+            s_dim = b_dim + 1
+            if seq_sharded:
+                parts[s_dim] = "data"
+            else:
+                parts[b_dim] = dp
+            # kv heads over 'model' when divisible; else the sequence dim
+            # (flash-decoding layout: partial softmax + LSE combine is
+            # inserted by GSPMD)
+            has_heads = name in ("k", "v", "cross_k", "cross_v")
+            if has_heads and _div(leaf.shape[b_dim + 2], m):
+                parts[b_dim + 2] = "model"
+            elif parts[s_dim] is None and _div(leaf.shape[s_dim], m):
+                parts[s_dim] = "model"
+        elif name in ("state", "ssm", "conv", "tm_prev", "cm_prev"):
+            if not seq_sharded:
+                parts[b_dim] = dp
+            # rwkv heads / mamba d_inner over model
+            if name == "state" and _div(leaf.shape[b_dim + 1], m):
+                parts[b_dim + 1] = "model"
+            if name in ("ssm", "conv") and _div(leaf.shape[-1 if name == "conv" else b_dim + 1], m):
+                parts[-1 if name == "conv" else b_dim + 1] = "model"
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def _pstr(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)

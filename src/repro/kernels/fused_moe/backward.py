@@ -1,0 +1,274 @@
+"""Fused BACKWARD kernels for the grouped-GEMM MoE FFN.
+
+The paper (§5) lists training support as future work: "enabling training
+requires fusing backward computation ... into the kernel". This module is
+that extension: two pallas kernels implement the full VJP with
+flash-style recomputation (the (rows, F) activation is never materialized
+in HBM — it is recomputed per (m, f) tile in VMEM):
+
+  dx-kernel   grid (m, f): recompute a=xW1 (b=xW3), h=act(a)(*b);
+              dh = dy W2^T;  dscale += rowsum(h .. dh);
+              dx += (dh*s*act'(a)(*b)) W1^T (+ (dh*s*h) W3^T)
+  dw-kernel   grid (f, m) — m innermost so each expert's row tiles visit
+              its dW block consecutively (Pallas keeps the revisited output
+              block in VMEM):
+              dW1[e,:,f] += x^T da;  dW3[e,:,f] += x^T db;
+              dW2[e,f,:] += h~^T (dy*s)
+
+Forward math (kernel.py):  y = (act(x W1) [* x W3]) W2 * s.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+_GELU_C = 0.044715
+
+
+def _act_and_grad(name: str, a: jax.Array):
+    """Returns (act(a), act'(a)) in f32."""
+    if name == "relu":
+        return jax.nn.relu(a), (a > 0).astype(jnp.float32)
+    if name == "relu2":
+        r = jax.nn.relu(a)
+        return r * r, 2.0 * r
+    if name == "silu":
+        sg = jax.nn.sigmoid(a)
+        return a * sg, sg * (1.0 + a * (1.0 - sg))
+    if name == "gelu":  # tanh approximation (jax.nn.gelu default)
+        u = _SQRT_2_OVER_PI * (a + _GELU_C * a ** 3)
+        t = jnp.tanh(u)
+        g = 0.5 * a * (1.0 + t)
+        dg = 0.5 * (1.0 + t) + 0.5 * a * (1.0 - t * t) * _SQRT_2_OVER_PI \
+            * (1.0 + 3.0 * _GELU_C * a * a)
+        return g, dg
+    if name == "identity":
+        return a, jnp.ones_like(a)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def _recompute(x, w1_ref, w3_ref, activation):
+    """Common recompute: a, (act, act'), gate b, and h~ = act(a)[*b]."""
+    a = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32)
+    h, dh_da = _act_and_grad(activation, a)
+    if w3_ref is not None:
+        b = jnp.dot(x, w3_ref[0], preferred_element_type=jnp.float32)
+        return a, h, dh_da, b, h * b
+    return a, h, dh_da, None, h
+
+
+def _dx_body(te, tv, x_ref, w1_ref, w2_ref, w3_ref, scale_ref, dy_ref,
+             dx_ref, ds_ref, dxacc, dsacc, *, activation, num_f):
+    m, f = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _zero():
+        dxacc[...] = jnp.zeros_like(dxacc)
+        dsacc[...] = jnp.zeros_like(dsacc)
+
+    @pl.when(tv[m] == 1)
+    def _compute():
+        x = x_ref[...]
+        dy = dy_ref[...].astype(jnp.float32)
+        s = scale_ref[...].astype(jnp.float32)       # (bM, 1)
+        a, h, dh_da, b, hb = _recompute(x, w1_ref, w3_ref, activation)
+        # dh_raw = dy @ W2^T  (contract H)
+        w2 = w2_ref[0]                               # (bF, H)
+        dh_raw = jax.lax.dot_general(
+            dy, w2, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (bM, bF)
+        dsacc[...] += jnp.sum(hb * dh_raw, axis=1, keepdims=True)
+        dhb = dh_raw * s
+        if w3_ref is not None:
+            da = dhb * b * dh_da
+            db = dhb * h
+        else:
+            da = dhb * dh_da
+            db = None
+        w1 = w1_ref[0]                               # (H, bF)
+        dxacc[...] += jax.lax.dot_general(
+            da.astype(w1.dtype), w1, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (bM, H)
+        if w3_ref is not None:
+            w3 = w3_ref[0]
+            dxacc[...] += jax.lax.dot_general(
+                db.astype(w3.dtype), w3, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+    @pl.when(f == num_f - 1)
+    def _out():
+        dx_ref[...] = dxacc[...].astype(dx_ref.dtype)
+        ds_ref[...] = dsacc[...]
+
+
+def _dw_body(te, tv, x_ref, w1_ref, w2_ref, w3_ref, scale_ref, dy_ref,
+             dw1_ref, dw2_ref, dw3_ref, *, activation):
+    f, m = pl.program_id(0), pl.program_id(1)
+    prev = jnp.where(m > 0, te[jnp.maximum(m - 1, 0)], -1)
+    first = jnp.logical_or(m == 0, te[m] != prev)
+
+    @pl.when(first)
+    def _zero():
+        dw1_ref[...] = jnp.zeros_like(dw1_ref)
+        dw2_ref[...] = jnp.zeros_like(dw2_ref)
+        if dw3_ref is not None:
+            dw3_ref[...] = jnp.zeros_like(dw3_ref)
+
+    @pl.when(tv[m] == 1)
+    def _compute():
+        x = x_ref[...]
+        dy = dy_ref[...].astype(jnp.float32)
+        s = scale_ref[...].astype(jnp.float32)
+        a, h, dh_da, b, hb = _recompute(x, w1_ref, w3_ref, activation)
+        w2 = w2_ref[0]
+        dh_raw = jax.lax.dot_general(
+            dy, w2, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dhb = dh_raw * s
+        if w3_ref is not None:
+            da = dhb * b * dh_da
+            db = dhb * h
+        else:
+            da = dhb * dh_da
+            db = None
+        xf = x.astype(jnp.float32)
+        dys = dy * s
+        # dW1 += x^T @ da : contract rows
+        dw1_ref[0] += jax.lax.dot_general(
+            xf, da, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (H, bF)
+        dw2_ref[0] += jax.lax.dot_general(
+            hb, dys, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (bF, H)
+        if dw3_ref is not None:
+            dw3_ref[0] += jax.lax.dot_general(
+                xf, db, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+
+def fused_moe_bwd_kernels(x, w1, w2, w3, tile_expert, tile_valid, scale,
+                          dy, *, activation: str, tile_m: int,
+                          tile_f: int, interpret: bool):
+    """Runs both backward kernels. Returns (dx, dw1, dw2, dw3|None, dscale).
+
+    dW outputs are f32 (accumulation dtype); caller casts to param dtype.
+    Empty experts (no tiles) are zero-masked by the caller.
+    """
+    rows, H = x.shape
+    E, _, F = w1.shape
+    if F % tile_f != 0:
+        tile_f = next(
+            (c for c in range(min(tile_f, F), 0, -128) if F % c == 0), F)
+    num_m, num_f = rows // tile_m, F // tile_f
+    scale2d = scale.reshape(rows, 1)
+    gated = w3 is not None
+
+    # ---- dx kernel: grid (m, f) ----
+    x_spec = pl.BlockSpec((tile_m, H), lambda m, f, te, tv: (m, 0))
+    w1_spec = pl.BlockSpec((1, H, tile_f), lambda m, f, te, tv: (te[m], 0, f))
+    w2_spec = pl.BlockSpec((1, tile_f, H), lambda m, f, te, tv: (te[m], f, 0))
+    s_spec = pl.BlockSpec((tile_m, 1), lambda m, f, te, tv: (m, 0))
+    dy_spec = pl.BlockSpec((tile_m, H), lambda m, f, te, tv: (m, 0))
+    dx_spec = pl.BlockSpec((tile_m, H), lambda m, f, te, tv: (m, 0))
+    ds_spec = pl.BlockSpec((tile_m, 1), lambda m, f, te, tv: (m, 0))
+
+    in_specs = [x_spec, w1_spec, w2_spec]
+    inputs = [x, w1, w2]
+    if gated:
+        in_specs.append(pl.BlockSpec((1, H, tile_f),
+                                     lambda m, f, te, tv: (te[m], 0, f)))
+        inputs.append(w3)
+    in_specs += [s_spec, dy_spec]
+    inputs += [scale2d, dy]
+
+    def dx_body(*refs):
+        te, tv = refs[0], refs[1]
+        if gated:
+            x_r, w1_r, w2_r, w3_r, s_r, dy_r, dx_r, ds_r, a1, a2 = refs[2:]
+        else:
+            x_r, w1_r, w2_r, s_r, dy_r, dx_r, ds_r, a1, a2 = refs[2:]
+            w3_r = None
+        _dx_body(te, tv, x_r, w1_r, w2_r, w3_r, s_r, dy_r, dx_r, ds_r,
+                 a1, a2, activation=activation, num_f=num_f)
+
+    dx, dscale = pl.pallas_call(
+        dx_body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(num_m, num_f),
+            in_specs=in_specs,
+            out_specs=[dx_spec, ds_spec],
+            scratch_shapes=[pltpu.VMEM((tile_m, H), jnp.float32),
+                            pltpu.VMEM((tile_m, 1), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((rows, H), x.dtype),
+                   jax.ShapeDtypeStruct((rows, 1), jnp.float32)],
+        interpret=interpret,
+        name="flashmoe_bwd_dx",
+    )(tile_expert, tile_valid, *inputs)
+
+    # ---- dW kernel: grid (f, m) — m innermost ----
+    x_spec2 = pl.BlockSpec((tile_m, H), lambda f, m, te, tv: (m, 0))
+    w1_spec2 = pl.BlockSpec((1, H, tile_f),
+                            lambda f, m, te, tv: (te[m], 0, f))
+    w2_spec2 = pl.BlockSpec((1, tile_f, H),
+                            lambda f, m, te, tv: (te[m], f, 0))
+    s_spec2 = pl.BlockSpec((tile_m, 1), lambda f, m, te, tv: (m, 0))
+    dy_spec2 = pl.BlockSpec((tile_m, H), lambda f, m, te, tv: (m, 0))
+    dw1_spec = pl.BlockSpec((1, H, tile_f),
+                            lambda f, m, te, tv: (te[m], 0, f))
+    dw2_spec = pl.BlockSpec((1, tile_f, H),
+                            lambda f, m, te, tv: (te[m], f, 0))
+
+    in_specs2 = [x_spec2, w1_spec2, w2_spec2]
+    if gated:
+        in_specs2.append(pl.BlockSpec((1, H, tile_f),
+                                      lambda f, m, te, tv: (te[m], 0, f)))
+    in_specs2 += [s_spec2, dy_spec2]
+    out_specs2 = [dw1_spec, dw2_spec]
+    out_shapes2 = [jax.ShapeDtypeStruct((E, H, F), jnp.float32),
+                   jax.ShapeDtypeStruct((E, F, H), jnp.float32)]
+    if gated:
+        out_specs2.append(pl.BlockSpec((1, H, tile_f),
+                                       lambda f, m, te, tv: (te[m], 0, f)))
+        out_shapes2.append(jax.ShapeDtypeStruct((E, H, F), jnp.float32))
+
+    def dw_body(*refs):
+        te, tv = refs[0], refs[1]
+        if gated:
+            x_r, w1_r, w2_r, w3_r, s_r, dy_r, dw1_r, dw2_r, dw3_r = refs[2:]
+        else:
+            x_r, w1_r, w2_r, s_r, dy_r, dw1_r, dw2_r = refs[2:]
+            w3_r, dw3_r = None, None
+        _dw_body(te, tv, x_r, w1_r, w2_r, w3_r, s_r, dy_r, dw1_r, dw2_r,
+                 dw3_r, activation=activation)
+
+    dws = pl.pallas_call(
+        dw_body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(num_f, num_m),
+            in_specs=in_specs2,
+            out_specs=out_specs2,
+        ),
+        out_shape=out_shapes2,
+        interpret=interpret,
+        name="flashmoe_bwd_dw",
+    )(tile_expert, tile_valid, *inputs)
+
+    dw1, dw2 = dws[0], dws[1]
+    dw3 = dws[2] if gated else None
+
+    # zero-mask experts that received no tiles (their blocks are untouched)
+    active = jnp.zeros((E,), jnp.int32).at[tile_expert].add(tile_valid) > 0
+    dw1 = jnp.where(active[:, None, None], dw1, 0.0)
+    dw2 = jnp.where(active[:, None, None], dw2, 0.0)
+    if gated:
+        dw3 = jnp.where(active[:, None, None], dw3, 0.0)
+    return dx, dw1, dw2, dw3, dscale[:, 0]

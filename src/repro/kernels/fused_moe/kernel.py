@@ -1,0 +1,164 @@
+"""Pallas TPU kernel: fused grouped-GEMM MoE FFN (FlashMoE Processor).
+
+TPU adaptation of FlashDMoE's in-kernel task execution (paper §3.1, Alg. 2):
+a single ``pallas_call`` whose grid enumerates tile-tasks. Grid step
+``(m, f)`` is the paper's task descriptor: row-tile ``m`` (bM=128 tokens,
+already expert-sorted and tile-aligned by the routing plan) and FFN-column
+tile ``f``. The owner expert of each row tile is read from the scalar-
+prefetched ``tile_expert`` table — the exact analogue of the Scheduler
+handing a decoded task descriptor to a Processor block.
+
+Per grid step, fully fused in VMEM:
+    GEMM0:   h  = x_m @ W1[e][:, f-block]          (MXU, f32 accumulate)
+    act:     h  = act(h) (* x_m @ W3[e][:, f-block] if gated)
+    GEMM1:   acc += h @ W2[e][f-block, :]          (accumulated over f)
+    combine: y_m = acc * scale_m                   (epilogue at last f)
+
+Null tiles (capacity padding) are skipped via ``tile_valid`` predication —
+the work-conserving scheduler never wastes MXU cycles on padding (§3.2.1).
+
+Block-shape rationale (paper §3: "Determining tile dimensions"): bM=128
+matches the MXU systolic height and the paper's tile height; the full H is
+kept resident per row-tile (activation reuse across all f-tiles = maximal
+arithmetic intensity for GEMM0); bF tiles the FFN dim so VMEM holds
+x(bM,H) + w1/w3(H,bF) + w2(bF,H) + acc(bM,H) — <= ~8 MiB at H=4096,
+bF=512, bf16 weights, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "identity":
+        return x
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def _kernel_body(
+    # scalar prefetch
+    tile_expert_ref,
+    tile_valid_ref,
+    # inputs
+    x_ref,        # (bM, H)
+    w1_ref,       # (1, H, bF)
+    w2_ref,       # (1, bF, H)
+    scale_ref,    # (bM, 1)
+    # outputs
+    out_ref,      # (bM, H)
+    # scratch
+    acc_ref,      # (bM, H) f32
+    *,
+    activation: str,
+    num_f_tiles: int,
+    w3_ref=None,
+):
+    m = pl.program_id(0)
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(tile_valid_ref[m] == 1)
+    def _compute():
+        x = x_ref[...]
+        w1 = w1_ref[0]
+        h = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+        h = _act(activation, h)
+        if w3_ref is not None:
+            g = jnp.dot(x, w3_ref[0], preferred_element_type=jnp.float32)
+            h = h * g
+        w2 = w2_ref[0]
+        acc_ref[...] += jnp.dot(
+            h.astype(w2.dtype), w2, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(f == num_f_tiles - 1)
+    def _epilogue():
+        y = acc_ref[...] * scale_ref[...].astype(jnp.float32)
+        out_ref[...] = y.astype(out_ref.dtype)
+
+
+def fused_moe_kernel(
+    x: jax.Array,              # (rows, H) packed, expert-sorted, tile-aligned
+    w1: jax.Array,             # (E, H, F)
+    w2: jax.Array,             # (E, F, H)
+    w3: Optional[jax.Array],   # (E, H, F) | None
+    tile_expert: jax.Array,    # (rows // bM,) int32
+    tile_valid: jax.Array,     # (rows // bM,) int32
+    scale: jax.Array,          # (rows,) f32
+    *,
+    activation: str = "gelu",
+    tile_m: int = 128,
+    tile_f: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    rows, H = x.shape
+    E, _, F = w1.shape
+    assert rows % tile_m == 0, (rows, tile_m)
+    if F % tile_f != 0:
+        # choose the largest divisor of F that is <= tile_f and % 128 == 0
+        tile_f = next(
+            (c for c in range(min(tile_f, F), 0, -128) if F % c == 0), F
+        )
+    num_m = rows // tile_m
+    num_f = F // tile_f
+
+    scale2d = scale.reshape(rows, 1)
+
+    grid = (num_m, num_f)
+    x_spec = pl.BlockSpec((tile_m, H), lambda m, f, te, tv: (m, 0))
+    w1_spec = pl.BlockSpec((1, H, tile_f), lambda m, f, te, tv: (te[m], 0, f))
+    w2_spec = pl.BlockSpec((1, tile_f, H), lambda m, f, te, tv: (te[m], f, 0))
+    scale_spec = pl.BlockSpec((tile_m, 1), lambda m, f, te, tv: (m, 0))
+    out_spec = pl.BlockSpec((tile_m, H), lambda m, f, te, tv: (m, 0))
+
+    in_specs = [x_spec, w1_spec, w2_spec, scale_spec]
+    inputs = [x, w1, w2, scale2d]
+    w3_kw = {"w3_ref": None}
+    if w3 is not None:
+        in_specs.insert(3, pl.BlockSpec(
+            (1, H, tile_f), lambda m, f, te, tv: (te[m], 0, f)))
+        inputs.insert(3, w3)
+
+    def body(*refs):
+        te, tv = refs[0], refs[1]
+        if w3 is not None:
+            x_r, w1_r, w2_r, w3_r, s_r, o_r, a_r = refs[2:]
+            _kernel_body(te, tv, x_r, w1_r, w2_r, s_r, o_r, a_r,
+                         activation=activation, num_f_tiles=num_f,
+                         w3_ref=w3_r)
+        else:
+            x_r, w1_r, w2_r, s_r, o_r, a_r = refs[2:]
+            _kernel_body(te, tv, x_r, w1_r, w2_r, s_r, o_r, a_r,
+                         activation=activation, num_f_tiles=num_f,
+                         w3_ref=None)
+
+    return pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            scratch_shapes=[pltpu.VMEM((tile_m, H), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, H), x.dtype),
+        interpret=interpret,
+        name="flashmoe_fused_ffn",
+    )(tile_expert, tile_valid, *inputs)

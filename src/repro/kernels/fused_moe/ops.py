@@ -1,0 +1,116 @@
+"""Jit'd public wrapper for the fused MoE grouped-GEMM kernel, with a
+custom VJP backed by the fused backward kernels (backward.py) — training
+support the paper leaves as future work (§5).
+
+Gradient checking: tests/test_fused_moe_kernel.py verifies the custom VJP
+against jax.grad of the pure-jnp reference over shape/dtype/activation
+sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_moe.backward import fused_moe_bwd_kernels
+from repro.kernels.fused_moe.kernel import fused_moe_kernel
+from repro.kernels.fused_moe.ref import fused_moe_ffn_ref
+
+# VMEM working-set budget (bytes) used to pick tile_f. Conservative for
+# TPU v5e (re-derived in benchmarks/bench_memory.py).
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def pick_tile_f(hidden: int, ffn: int, itemsize: int = 2,
+                tile_m: int = 128, budget: int = _VMEM_BUDGET) -> int:
+    """Largest f-tile (multiple of 128, divisor of F) fitting the budget.
+
+    Working set per grid step:
+      x (bM, H) + acc (bM, H, f32) + w1/w3 (H, bF) + w2 (bF, H) + h (bM, bF).
+    """
+    fixed = tile_m * hidden * itemsize + tile_m * hidden * 4
+    best = 128
+    for cand in range(128, min(ffn, 2048) + 1, 128):
+        per_f = 2 * hidden * cand * itemsize + tile_m * cand * 4
+        if fixed + per_f <= budget:
+            best = cand
+    for cand in range(best, 0, -128):
+        if ffn % cand == 0:
+            return cand
+    return min(128, ffn)
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(7, 8, 9, 10),
+)
+def _fused_moe_cv(x, w1, w2, w3, tile_expert, tile_valid, scale,
+                  activation, tile_m, tile_f, interpret):
+    return fused_moe_kernel(
+        x, w1, w2, w3, tile_expert, tile_valid, scale,
+        activation=activation, tile_m=tile_m, tile_f=tile_f,
+        interpret=interpret)
+
+
+def _fused_moe_fwd(x, w1, w2, w3, tile_expert, tile_valid, scale,
+                   activation, tile_m, tile_f, interpret):
+    y = _fused_moe_cv(x, w1, w2, w3, tile_expert, tile_valid, scale,
+                      activation, tile_m, tile_f, interpret)
+    return y, (x, w1, w2, w3, tile_expert, tile_valid, scale)
+
+
+def _fused_moe_bwd(activation, tile_m, tile_f, interpret, res, dy):
+    x, w1, w2, w3, tile_expert, tile_valid, scale = res
+    dx, dw1, dw2, dw3, dscale = fused_moe_bwd_kernels(
+        x, w1, w2, w3, tile_expert, tile_valid, scale, dy,
+        activation=activation, tile_m=tile_m, tile_f=tile_f,
+        interpret=interpret)
+    dw1 = dw1.astype(w1.dtype)
+    dw2 = dw2.astype(w2.dtype)
+    dw3 = dw3.astype(w3.dtype) if w3 is not None else None
+    return (dx, dw1, dw2, dw3, None, None, dscale.astype(scale.dtype))
+
+
+_fused_moe_cv.defvjp(_fused_moe_fwd, _fused_moe_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "tile_m", "tile_f", "interpret",
+                     "use_kernel"),
+)
+def fused_moe_ffn(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    w3: Optional[jax.Array],
+    tile_expert: jax.Array,
+    tile_valid: jax.Array,
+    scale: jax.Array,
+    *,
+    activation: str = "gelu",
+    tile_m: int = 128,
+    tile_f: Optional[int] = None,
+    interpret: bool = True,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Fused expert FFN over a packed, expert-sorted buffer.
+
+    Args:
+      x: (rows, H); rows % tile_m == 0, sorted by expert, zero-padded.
+      w1/w2/w3: expert weights (E, H, F), (E, F, H), optional gate (E, H, F).
+      tile_expert/tile_valid: per-tile task table from the routing plan.
+      scale: (rows,) per-row combine weight (0 for padding rows).
+    """
+    if not use_kernel:
+        return fused_moe_ffn_ref(
+            x, w1, w2, w3, tile_expert, scale,
+            activation=activation, tile_m=tile_m)
+    if tile_f is None:
+        tile_f = pick_tile_f(x.shape[1], w1.shape[2], x.dtype.itemsize,
+                             tile_m)
+    return _fused_moe_cv(x, w1, w2, w3, tile_expert, tile_valid,
+                         scale.astype(jnp.float32), activation, tile_m,
+                         tile_f, interpret)

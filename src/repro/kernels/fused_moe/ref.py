@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the fused MoE grouped-GEMM kernel.
+
+Semantics (paper §3.1, task chain GEMM0 -> act -> GEMM1 -> combine-scale):
+
+  for every bM row-tile t with owner expert e = tile_expert[t]:
+      h = act(X[t] @ W1[e] (* optionally gated by X[t] @ W3[e]))
+      Y[t] = (h @ W2[e]) * scale[t]           # scale = combine weight
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "identity":
+        return x
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def fused_moe_ffn_ref(
+    x: jax.Array,              # (rows, H) packed, expert-sorted
+    w1: jax.Array,             # (E, H, F)
+    w2: jax.Array,             # (E, F, H)
+    w3: jax.Array | None,      # (E, H, F) or None (gated FFN when present)
+    tile_expert: jax.Array,    # (rows // tile_m,) int32
+    scale: jax.Array,          # (rows,) float32 combine weights
+    *,
+    activation: str = "gelu",
+    tile_m: int = 128,
+) -> jax.Array:
+    rows, H = x.shape
+    E = w1.shape[0]
+    row_expert = jnp.repeat(tile_expert, tile_m)  # (rows,)
+    xf = x.astype(jnp.float32)
+
+    out = jnp.zeros((rows, H), jnp.float32)
+    for e in range(E):
+        h = _act(activation, xf @ w1[e].astype(jnp.float32))
+        if w3 is not None:
+            h = h * (xf @ w3[e].astype(jnp.float32))
+        y = h @ w2[e].astype(jnp.float32)
+        out = jnp.where((row_expert == e)[:, None], y, out)
+    return (out * scale[:, None]).astype(x.dtype)

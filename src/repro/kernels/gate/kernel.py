@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: FusedGate (paper Algorithm 1, line 1).
+
+One ``pallas_call`` computes, per bM-row tile: router GEMM (x @ W_g),
+softmax/sigmoid scores, iterative top-k (k rounds of max+mask — k is 2..8,
+so unrolled), and renormalized combine weights. Fusing the top-k into the
+score computation keeps the (T, E) affinity matrix in VMEM and writes only
+the (T, k) routing decisions back to HBM — the paper's rationale for fusing
+the gate into the persistent kernel (no kernel-boundary round trip of
+G_phi through global memory).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _gate_body(x_ref, wg_ref, probs_ref, topw_ref, topi_ref, *,
+               top_k: int, renormalize: bool, score_fn: str):
+    x = x_ref[...]
+    wg = wg_ref[...]
+    logits = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    if score_fn == "softmax":
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        z = jnp.exp(logits - m)
+        probs = z / jnp.sum(z, axis=-1, keepdims=True)
+    else:  # sigmoid
+        probs = jax.nn.sigmoid(logits)
+    probs_ref[...] = probs
+
+    E = probs.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
+    work = probs
+    tot = jnp.zeros((probs.shape[0], 1), jnp.float32)
+    ws, idxs = [], []
+    for _ in range(top_k):  # unrolled: k is a small static constant
+        w = jnp.max(work, axis=-1, keepdims=True)
+        i = jnp.argmax(work, axis=-1).astype(jnp.int32)[:, None]
+        ws.append(w)
+        idxs.append(i)
+        tot = tot + w
+        work = jnp.where(col == i, _NEG_INF, work)
+    top_w = jnp.concatenate(ws, axis=-1)
+    top_i = jnp.concatenate(idxs, axis=-1)
+    if renormalize:
+        top_w = top_w / jnp.maximum(tot, 1e-9)
+    topw_ref[...] = top_w
+    topi_ref[...] = top_i
+
+
+def fused_gate_kernel(
+    x: jax.Array,        # (T, H)
+    w_gate: jax.Array,   # (H, E)
+    *,
+    top_k: int,
+    renormalize: bool = True,
+    score_fn: str = "softmax",
+    tile_m: int = 128,
+    interpret: bool = False,
+):
+    T, H = x.shape
+    E = w_gate.shape[1]
+    assert T % tile_m == 0, (T, tile_m)
+    grid = (T // tile_m,)
+    body = functools.partial(
+        _gate_body, top_k=top_k, renormalize=renormalize, score_fn=score_fn)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, H), lambda m: (m, 0)),
+            pl.BlockSpec((H, E), lambda m: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_m, E), lambda m: (m, 0)),
+            pl.BlockSpec((tile_m, top_k), lambda m: (m, 0)),
+            pl.BlockSpec((tile_m, top_k), lambda m: (m, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, E), jnp.float32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+        name="flashmoe_fused_gate",
+    )(x, w_gate)

@@ -1,0 +1,76 @@
+"""Jit'd wrapper for the fused gate kernel: padding + custom VJP.
+
+Forward runs the pallas kernel; backward recomputes the (cheap) router
+GEMM + softmax + top-k in jnp and differentiates that — the router is
+O(T*H*E) which is negligible next to expert FFN flops, so recomputation
+is the right trade (same policy as flash-attention backward).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gate.kernel import fused_gate_kernel
+from repro.kernels.gate.ref import fused_gate_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _fused_gate_cv(x, w_gate, top_k, renormalize, score_fn, tile_m,
+                   interpret):
+    T = x.shape[0]
+    pad = (-T) % tile_m
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    probs, top_w, top_i = fused_gate_kernel(
+        xp, w_gate, top_k=top_k, renormalize=renormalize,
+        score_fn=score_fn, tile_m=tile_m, interpret=interpret)
+    if pad:
+        probs, top_w, top_i = probs[:T], top_w[:T], top_i[:T]
+    return probs, top_w, top_i
+
+
+def _fg_fwd(x, w_gate, top_k, renormalize, score_fn, tile_m, interpret):
+    out = _fused_gate_cv(x, w_gate, top_k, renormalize, score_fn, tile_m,
+                         interpret)
+    return out, (x, w_gate)
+
+
+def _fg_bwd(top_k, renormalize, score_fn, tile_m, interpret, res, cts):
+    x, w_gate = res
+    d_probs, d_topw, _ = cts  # top_i is integer: no cotangent
+
+    def ref2(x, w):
+        probs, top_w, _ = fused_gate_ref(
+            x, w, top_k=top_k, renormalize=renormalize, score_fn=score_fn)
+        return probs, top_w
+
+    _, vjp = jax.vjp(ref2, x, w_gate)
+    return vjp((d_probs, d_topw))
+
+
+_fused_gate_cv.defvjp(_fg_fwd, _fg_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("top_k", "renormalize", "score_fn", "tile_m",
+                     "interpret", "use_kernel"),
+)
+def fused_gate(
+    x: jax.Array,
+    w_gate: jax.Array,
+    *,
+    top_k: int,
+    renormalize: bool = True,
+    score_fn: str = "softmax",
+    tile_m: int = 128,
+    interpret: bool = True,
+    use_kernel: bool = True,
+):
+    """Fused gate: returns (probs (T,E), top_w (T,k), top_i (T,k))."""
+    if not use_kernel:
+        return fused_gate_ref(x, w_gate, top_k=top_k,
+                              renormalize=renormalize, score_fn=score_fn)
+    return _fused_gate_cv(x, w_gate, top_k, renormalize, score_fn, tile_m,
+                          interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused gate kernel (softmax + top-k + renorm)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_gate_ref(x: jax.Array, w_gate: jax.Array, *, top_k: int,
+                   renormalize: bool = True, score_fn: str = "softmax"):
+    """Returns (probs (T,E) f32, top_w (T,k) f32, top_i (T,k) i32)."""
+    logits = jnp.einsum("th,he->te", x, w_gate,
+                        preferred_element_type=jnp.float32)
+    if score_fn == "softmax":
+        probs = jax.nn.softmax(logits, axis=-1)
+    elif score_fn == "sigmoid":
+        probs = jax.nn.sigmoid(logits)
+    else:
+        raise ValueError(score_fn)
+    top_w, top_i = jax.lax.top_k(probs, top_k)
+    if renormalize:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return probs, top_w, top_i.astype(jnp.int32)

@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the 512-chip production mesh
+# out of host placeholder devices; smoke tests and benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions every op; shard_map
+    EP dispatch composes with the production mesh);
+  * the program fits (compiled.memory_analysis() bytes per device);
+  * the collective schedule is sane (parsed from optimized HLO);
+and records flops/bytes/collective-bytes for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALL_ARCHS
+from repro.configs.base import SHAPES, cell_applicable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (hlo_cost, model_flops, roofline_terms)
+from repro.launch.steps import build_cell, lower_cell
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             dist_impl: str = "pipelined", num_chunks: int = 4,
+             moe_local_impl: str = "fused",
+             save_dir=None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    ok, reason = cell_applicable(cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "dist_impl": dist_impl, "status": "skip", "reason": reason}
+    if not ok:
+        if verbose:
+            print(f"[skip] {arch} x {shape}: {reason}")
+        _save(rec, save_dir)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        spec = build_cell(arch, shape, mesh, dist_impl=dist_impl,
+                          num_chunks=num_chunks,
+                          moe_local_impl=moe_local_impl)
+        lowered = lower_cell(spec, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        cost = hlo_cost(txt)
+        n_dev = mesh.devices.size
+        mf = model_flops(cfg, SHAPES[shape])
+        rep = roofline_terms(
+            cost, n_devices=n_dev, model_flops=mf, arch=arch, shape=shape,
+            memory_per_device=int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes))
+        rec.update({
+            "status": "ok",
+            "reason": "",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_estimate": (ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+            },
+            "xla_cost_analysis": {
+                "flops": ca.get("flops"),
+                "bytes": ca.get("bytes accessed"),
+            },
+            "roofline": rep.to_dict(),
+            "hlo_ops": {k: int(v)
+                        for k, v in cost.collective_counts.items()},
+        })
+        if verbose:
+            r = rec["roofline"]
+            print(f"[ok]  {arch:22s} {shape:12s} {mesh_name:6s} "
+                  f"compile={t_compile:6.1f}s "
+                  f"mem/dev={rec['memory']['peak_estimate']/2**30:6.2f}GiB "
+                  f"C={r['compute_s']*1e3:8.2f}ms "
+                  f"M={r['memory_s']*1e3:8.2f}ms "
+                  f"N={r['collective_s']*1e3:8.2f}ms "
+                  f"dom={r['dominant']}")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec.update({"status": "error", "reason": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        if verbose:
+            print(f"[ERR] {arch} x {shape} ({mesh_name}): {rec['reason']}")
+    _save(rec, save_dir)
+    return rec
+
+
+def _save(rec: dict, save_dir):
+    if not save_dir:
+        return
+    os.makedirs(save_dir, exist_ok=True)
+    impl = rec.get("dist_impl", "pipelined")
+    path = os.path.join(
+        save_dir,
+        f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__{impl}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--dist-impl", choices=["bulk", "pipelined"],
+                    default="pipelined")
+    ap.add_argument("--num-chunks", type=int, default=4)
+    ap.add_argument("--moe-local-impl", default="fused")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_err = n_skip = 0
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, multi,
+                               dist_impl=args.dist_impl,
+                               num_chunks=args.num_chunks,
+                               moe_local_impl=args.moe_local_impl,
+                               save_dir=args.out)
+                n_ok += rec["status"] == "ok"
+                n_err += rec["status"] == "error"
+                n_skip += rec["status"] == "skip"
+    print(f"\ndone: {n_ok} ok, {n_skip} documented skips, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,504 @@
+"""Roofline analysis from compiled HLO.
+
+XLA's ``compiled.cost_analysis()`` does NOT multiply costs by loop trip
+counts (a scan of L layers reports one layer's flops) and our step
+functions are scan-heavy (layers, KV chunks, CE chunks, SSM time steps).
+This module therefore walks the optimized HLO text itself:
+
+  * builds the computation call graph (entry -> while bodies / fusions /
+    conditionals) with TRIP COUNT multipliers extracted from while-loop
+    condition computations (`compare(i, constant(N)), direction=LT`);
+  * FLOPs: every ``dot``/``convolution`` — 2 * prod(result) *
+    prod(contracting dims) — times the product of enclosing trip counts;
+  * HBM bytes: first-order traffic model — every top-level op reads its
+    operands and writes its result; ``fusion`` ops are atomic (operands +
+    outputs only); pure-metadata ops (parameter/constant/tuple/gte/
+    bitcast) are free. Aliasing/caching ignored -> slight overcount for
+    elementwise chains, exact for the dominant GEMM/collective traffic;
+  * collective bytes: operand sizes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (x trips). For
+    all-reduce we charge 2x (reduce-scatter + all-gather phases of a ring,
+    each moving ~(n-1)/n of the buffer).
+
+HLO shapes are per-device (SPMD), so all numbers are PER CHIP:
+
+  compute_s    = flops / PEAK_FLOPS
+  memory_s     = bytes / HBM_BW
+  collective_s = coll_bytes / ICI_BW
+
+Validated against cost_analysis() on loop-free programs (tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+# ---- TPU v5e hardware model (assignment constants) ----
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (we charge one link)
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "token", "partition-id", "replica-id", "iota",
+    "get-dimension-size", "opt-barrier", "domain",
+}
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+
+    def merged(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.collective_bytes += mult * other.collective_bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] += mult * v
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] += int(mult * v)
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _parse_shape(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """All (dtype, dims) found in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    return sum(DTYPE_BYTES[dt] * (math.prod(shape) if shape else 1)
+               for dt, shape in _parse_shape(type_str))
+
+
+# XLA:CPU promotes every bf16 dot to f32 (no native bf16), inflating all
+# activation/cotangent payloads 2x relative to the TPU target where the
+# MXU executes bf16 natively. For the TPU roofline we therefore count
+# activation-scale f32 tensors (>= 1 MiB) at bf16 width. Small f32
+# buffers (softmax stats, scalars, logits-adjacent reductions we keep in
+# f32 on purpose) are counted at full width.
+_BF16_NORM_THRESHOLD = 1 << 20
+
+
+def _nbytes_norm(type_str: str) -> float:
+    total = 0.0
+    for dt, shape in _parse_shape(type_str):
+        n = math.prod(shape) if shape else 1
+        b = DTYPE_BYTES[dt] * n
+        if dt == "f32" and b >= _BF16_NORM_THRESHOLD:
+            b //= 2
+        total += b
+    return total
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.sym: Dict[str, str] = {}     # %name -> type string
+        self.ops: List[dict] = []
+        self.is_fusion_body = False
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\)|[a-z0-9]+\[[\d,]*\]"
+    r"(?:{[^}]*})?))\s*([\w\-]+)\((.*)")
+
+
+def _split_depth1(s: str) -> List[str]:
+    """Split a paren-balanced string on commas at depth 1."""
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+def _is_comp_header(line: str) -> bool:
+    st = line.strip()
+    return (st.endswith("{") and "->" in st and "=" not in st.split("->")[0]
+            and not st.startswith("//"))
+
+
+_NEW_LOGICAL = re.compile(
+    r"^\s*(ROOT\s+%|%[\w.\-]+\s*[=(]|ENTRY\b|HloModule\b|}\s*$|//)")
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _logical_lines(text: str):
+    """Join wrapped instruction/header lines (XLA wraps long tuples)."""
+    out: List[str] = []
+    for raw in text.splitlines():
+        line = _COMMENT_RE.sub("", raw.rstrip())
+        if not line.strip():
+            continue
+        if _NEW_LOGICAL.match(line) or not out:
+            out.append(line)
+        else:
+            out[-1] += " " + line.strip()
+    return out
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in _logical_lines(text):
+        if _is_comp_header(line):
+            st = line.strip()
+            is_entry = st.startswith("ENTRY")
+            if is_entry:
+                st = st[len("ENTRY"):].strip()
+            name = st.split("(", 1)[0].strip().lstrip("%").strip()
+            cur = Computation(name)
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            # paren-aware parameter declarations: name: type at depth 1
+            paren_start = st.find("(")
+            if paren_start >= 0:
+                for part in _split_depth1(st[paren_start:]):
+                    if ":" in part:
+                        pname, ptype = part.split(":", 1)
+                        cur.sym[pname.strip().lstrip("%")] = ptype.strip()
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        cur.sym[name] = type_str
+        # operand names (first parenthesized group, before attrs)
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands_str = rest[:end]
+        attrs = rest[end + 1:]
+        operands = re.findall(r"%([\w.\-]+)", operands_str)
+        cur.ops.append({
+            "name": name, "type": type_str, "op": opcode,
+            "operands": operands, "attrs": attrs, "line": line,
+        })
+    return comps, entry
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Max integer constant in the condition computation (scan bound)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    names = [cond_name]
+    # the condition may delegate to a wrapped fusion computation
+    for op in cond.ops:
+        m = re.search(r"calls=%?([\w.\-]+)", op["attrs"])
+        if m:
+            names.append(m.group(1))
+    for nm in names:
+        c = comps.get(nm)
+        if not c:
+            continue
+        for op in c.ops:
+            if op["op"] == "constant":
+                m = re.search(r"constant\((\d+)\)", op["line"])
+                if m:
+                    best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(comp: Computation, op: dict) -> float:
+    result_elems = sum(math.prod(s) if s else 1
+                       for _, s in _parse_shape(op["type"]))
+    m = re.search(r"lhs_contracting_dims={([\d,]*)}", op["attrs"] + op["line"])
+    if not m:
+        return 2.0 * result_elems  # dot with no attrs (rare)
+    cdims = [int(d) for d in m.group(1).split(",") if d]
+    lhs = op["operands"][0] if op["operands"] else None
+    lhs_type = comp.sym.get(lhs, "")
+    shapes = _parse_shape(lhs_type)
+    if not shapes:
+        return 2.0 * result_elems
+    lhs_shape = shapes[0][1]
+    k = math.prod(lhs_shape[d] for d in cdims) if cdims else 1
+    return 2.0 * result_elems * k
+
+
+def _conv_flops(comp: Computation, op: dict) -> float:
+    # output elems * 2 * kernel_elems_per_output (approx: kernel spatial *
+    # input features). Use rhs (kernel) size / output features.
+    result_elems = sum(math.prod(s) if s else 1
+                       for _, s in _parse_shape(op["type"]))
+    rhs = op["operands"][1] if len(op["operands"]) > 1 else None
+    shapes = _parse_shape(comp.sym.get(rhs, ""))
+    k_elems = math.prod(shapes[0][1]) if shapes else 1
+    # per output element: 2 * (kernel elems / output-feature dim) — cheap
+    # approximation; convs are negligible in these models (mamba conv only)
+    return 2.0 * result_elems * max(1, k_elems) ** 0.5
+
+
+def analyze_computation(comps: Dict[str, Computation], name: str,
+                        memo: Dict[str, HloCost]) -> HloCost:
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    cost = HloCost()
+    memo[name] = cost
+    if comp is None:
+        return cost
+    for op in comp.ops:
+        opc = op["op"]
+        if opc in _FREE_OPS:
+            continue
+        coll = next((c for c in _COLLECTIVES if opc.startswith(c)), None)
+        if coll and opc.endswith("-done"):
+            continue
+        if coll:
+            nb = sum(_nbytes_norm(comp.sym.get(o, ""))
+                     for o in op["operands"])
+            if coll == "all-reduce":
+                nb *= 2.0  # ring RS+AG phases
+            cost.collective_bytes += nb
+            cost.collectives[coll] += nb
+            cost.collective_counts[coll] += 1
+            cost.bytes += _nbytes_norm(op["type"])
+            continue
+        if opc == "while":
+            body = re.search(r"body=%?([\w.\-]+)", op["attrs"])
+            cond = re.search(r"condition=%?([\w.\-]+)", op["attrs"])
+            if body:
+                trips = _trip_count(comps, cond.group(1)) if cond else 1
+                sub = analyze_computation(comps, body.group(1), memo)
+                cost.merged(sub, trips)
+                if cond:
+                    cost.merged(analyze_computation(comps, cond.group(1),
+                                                    memo), trips)
+            continue
+        if opc == "conditional":
+            branches = re.findall(r"branch_computations={([^}]*)}",
+                                  op["attrs"])
+            names = re.findall(r"%([\w.\-]+)",
+                               branches[0]) if branches else []
+            names += re.findall(r"(?:true|false)_computation=%?([\w.\-]+)",
+                                op["attrs"])
+            if names:
+                subs = [analyze_computation(comps, n, memo) for n in names]
+                biggest = max(subs, key=lambda c: c.flops + c.bytes)
+                cost.merged(biggest, 1.0)
+            continue
+        if opc in ("fusion", "call", "custom-call", "async-start"):
+            called = re.findall(r"calls=%?([\w.\-]+)", op["attrs"]) + \
+                re.findall(r"to_apply=%?([\w.\-]+)", op["attrs"])
+            for cn in called:
+                sub = analyze_computation(comps, cn, memo)
+                # fusion is one kernel: take its flops, not its bytes
+                f_only = HloCost(flops=sub.flops,
+                                 collective_bytes=sub.collective_bytes,
+                                 collectives=sub.collectives,
+                                 collective_counts=sub.collective_counts)
+                cost.merged(f_only, 1.0)
+            res_b = _nbytes_norm(op["type"])
+            opnd_b = [_nbytes_norm(comp.sym.get(o, ""))
+                      for o in op["operands"]]
+            if "dynamic-update-slice" in op["name"]:
+                # in-place carry update: traffic = the updated slice only
+                cost.bytes += 2 * sum(b for b in opnd_b if b < res_b)
+            elif any(b >= 4 * res_b for b in opnd_b):
+                # slicing fusion: reads a slice of a big buffer
+                cost.bytes += 2 * res_b + sum(
+                    b for b in opnd_b if b < 4 * res_b)
+            else:
+                cost.bytes += res_b + sum(opnd_b)
+            continue
+        if opc == "dot":
+            cost.flops += _dot_flops(comp, op)
+        elif opc == "convolution":
+            cost.flops += _conv_flops(comp, op)
+        # traffic model with slice-aware rules: slicing ops move only the
+        # slice, not the full operand (XLA in-place updates aliased bufs)
+        if opc in ("dynamic-slice", "gather", "slice"):
+            cost.bytes += 2 * _nbytes_norm(op["type"])
+        elif opc == "dynamic-update-slice":
+            upd = (op["operands"][1] if len(op["operands"]) > 1 else None)
+            cost.bytes += 2 * _nbytes_norm(comp.sym.get(upd, ""))
+        elif opc == "scatter":
+            upd = (op["operands"][2] if len(op["operands"]) > 2 else None)
+            cost.bytes += 2 * _nbytes_norm(comp.sym.get(upd, ""))
+        elif opc in ("broadcast", "iota", "reshape", "transpose", "copy",
+                     "reverse", "pad"):
+            cost.bytes += 2 * _nbytes_norm(op["type"])
+        else:
+            # generic: read operands, write result
+            cost.bytes += _nbytes_norm(op["type"]) + sum(
+                _nbytes_norm(comp.sym.get(o, "")) for o in op["operands"])
+    return cost
+
+
+def hlo_cost(text: str) -> HloCost:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda n: len(comps[n].ops)) if comps else ""
+    memo: Dict[str, HloCost] = {}
+    return analyze_computation(comps, entry, memo)
+
+
+# ------------------------------------------------------------ terms ------
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    flops: float                 # per device
+    bytes: float                 # per device
+    collective_bytes: float      # per device
+    collectives: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float           # global analytic useful flops
+    useful_ratio: float          # model_flops / (flops * n_devices)
+    n_devices: int
+    memory_per_device: Optional[int] = None
+    notes: str = ""
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["collectives"] = dict(self.collectives)
+        return d
+
+
+def roofline_terms(cost: HloCost, *, n_devices: int, model_flops: float,
+                   arch: str = "", shape: str = "",
+                   memory_per_device: Optional[int] = None,
+                   notes: str = "") -> RooflineReport:
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = cost.bytes / HBM_BW
+    collective_s = cost.collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_hlo = cost.flops * n_devices
+    return RooflineReport(
+        arch=arch, shape=shape, flops=cost.flops, bytes=cost.bytes,
+        collective_bytes=cost.collective_bytes,
+        collectives=dict(cost.collectives),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_ratio=(model_flops / total_hlo) if total_hlo else 0.0,
+        n_devices=n_devices, memory_per_device=memory_per_device,
+        notes=notes)
+
+
+# ---------------------------------------------------- analytic flops -----
+def count_params(cfg, include_embed: bool = False) -> float:
+    """Analytic parameter count (active experts only for N_active)."""
+    H, F, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    hd, nq, nkv = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    attn = H * hd * (nq + 2 * nkv) + nq * hd * H
+    if cfg.mla is not None:
+        m = cfg.mla
+        attn = (H * nq * (m.qk_nope + m.qk_rope) + H * m.kv_lora
+                + H * m.qk_rope + m.kv_lora * nq * (m.qk_nope + m.v_head)
+                + nq * m.v_head * H)
+    if cfg.attention_free:
+        attn = 6 * H * H + H * 64 * 2   # rwkv projections + decay lora
+    ssm = 0
+    if cfg.hybrid_parallel and cfg.ssm:
+        di = cfg.ssm.d_inner or 2 * H
+        ssm = H * 2 * di + di * (H // 16 + 2 * cfg.ssm.d_state) \
+            + (H // 16) * di + di * H
+    if cfg.moe is not None:
+        mult = 3 if cfg.gated_ffn else 2
+        ffn_active = cfg.moe.top_k * mult * H * cfg.moe.d_ff_expert \
+            + mult * H * cfg.moe.d_ff_shared
+        dense_layers = cfg.moe.first_k_dense
+        ffn = ffn_active * (L - dense_layers) / L \
+            + (mult * H * F) * dense_layers / L
+    else:
+        mult = 3 if cfg.gated_ffn else 2
+        ffn = mult * H * F
+        if cfg.attention_free:
+            ffn = H * F + F * H + H * H  # channel mix
+    per_layer = attn + ssm + ffn
+    total = per_layer * L
+    if include_embed:
+        total += V * H * (1 if cfg.tie_embeddings else 2)
+    return float(total)
+
+
+def model_flops(cfg, cell) -> float:
+    """Analytic useful flops (global) for the cell: 6*N_active*D for train,
+    2*N_active*D fwd-only, + causal attention score/value flops."""
+    B, S = cell.global_batch, cell.seq_len
+    N = count_params(cfg)
+    if cell.kind == "train":
+        tokens = B * S
+        base = 6.0 * N * tokens
+        attn = 3 * 2.0 * B * cfg.n_layers * S * S * cfg.n_heads \
+            * cfg.head_dim_ if not cfg.attention_free else 0.0
+        # head/embed matmuls
+        head = 3 * 2.0 * tokens * cfg.d_model * cfg.vocab
+        return base + attn + head
+    if cell.kind == "prefill":
+        tokens = B * S
+        attn = 2.0 * B * cfg.n_layers * S * S * cfg.n_heads * cfg.head_dim_ \
+            if not cfg.attention_free else 0.0
+        return 2.0 * N * tokens + attn + 2.0 * B * cfg.d_model * cfg.vocab
+    # decode: one token; attention reads S-length KV
+    attn = 4.0 * B * cfg.n_layers * S * cfg.n_heads * cfg.head_dim_ \
+        if not cfg.attention_free else 0.0
+    if cfg.window > 0 and cfg.local_global_ratio == 0:
+        attn = 4.0 * B * cfg.n_layers * min(S, cfg.window) \
+            * cfg.n_heads * cfg.head_dim_
+    return 2.0 * N * B + attn + 2.0 * B * cfg.d_model * cfg.vocab

@@ -1,0 +1,276 @@
+"""Step-function builders + ShapeDtypeStruct input specs for every
+(architecture x shape) cell. The dry-run, benchmarks and real drivers all
+build cells through this module, so what we lower IS what we would run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell, get_config
+from repro.core.dispatch import SlotInfo
+from repro.models.model import ParallelContext, init_params, loss_fn
+from repro.models.serve import decode_step, init_cache, prefill
+from repro.optim import adamw
+from repro.optim.schedule import SCHEDULES
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    arch: str
+    shape: str
+    step_fn: Any                      # callable
+    args: Tuple                       # SDS pytrees
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    pctx: ParallelContext
+    meta: Dict[str, Any]
+
+
+def make_pctx(cfg: ArchConfig, mesh: Optional[Mesh], *, train: bool,
+              interpret: bool = True, dist_impl: str = "pipelined",
+              num_chunks: int = 4, kv_chunk: int = 1024,
+              expert_compute: str = "kernel",
+              policy: str = "auto") -> ParallelContext:
+    if mesh is None:
+        return ParallelContext(remat=train, interpret=interpret,
+                               kv_chunk=kv_chunk, dist_impl=dist_impl,
+                               num_chunks=num_chunks)
+    if policy == "auto":
+        # FSDP for big dense archs at training time (activation comm under
+        # Megatron-SP at TP=16 exceeds 3x param traffic); Megatron-SP + EP
+        # for MoE (dispatch needs seq-resident tokens) and small models.
+        dense_big = (cfg.moe is None and not cfg.enc_dec
+                     and cfg.d_model >= 2048)
+        policy = "fsdp" if (train and dense_big) else "megatron"
+    return ParallelContext(
+        mesh=mesh, dp_axes=shd.dp_axes_of(mesh), model_axis="model",
+        use_ep=((train or cfg.moe is not None)
+                and cfg.moe is not None
+                and mesh.shape.get("model", 1) > 1),
+        dist_impl=dist_impl, num_chunks=num_chunks, remat=train,
+        interpret=interpret, kv_chunk=kv_chunk,
+        ep_world=mesh.shape.get("model", 1),
+        expert_compute=expert_compute,
+        use_pallas_gate=(expert_compute == "kernel"),
+        policy=policy)
+
+
+def params_specs(cfg: ArchConfig, ep_world: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype=dtype, ep_world=ep_world),
+        jax.random.PRNGKey(0))
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell, dtype=jnp.bfloat16):
+    B, S = cell.global_batch, cell.seq_len
+    b = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cell.kind != "train":
+        del b["labels"]
+    if cfg.enc_dec:
+        b["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                           dtype)
+    return b
+
+
+def _batch_shardings(mesh: Mesh, batch_tree, policy: str = "megatron"):
+    dp = shd.dp_axes_of(mesh)
+    if policy == "fsdp":
+        dp = dp + ("model",)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % dp_size == 0 and dp_size > 1:
+            return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+    return jax.tree.map(one, batch_tree)
+
+
+def expand_moe_for_ep(cfg: ArchConfig, params, ep_world: int):
+    """No-op placeholder: init_params already stores slot-major weights."""
+    return params
+
+
+def sync_expert_replica_grads(cfg: ArchConfig, grads, ep_world: int):
+    """Tie replicated expert weights: sum replica-group gradients.
+
+    When E < EP world, experts are replicated R times (slot-major); the
+    logical expert's gradient is the SUM over its replicas' grads,
+    broadcast back to every replica (keeps copies bit-identical).
+    """
+    if cfg.moe is None or ep_world <= 1:
+        return grads
+    info = SlotInfo.make(cfg.moe.num_experts, ep_world)
+    if info.replicas == 1:
+        return grads
+
+    def sync(path, g):
+        names = [shd._pstr(p) for p in path]
+        if "moe" in names and names[-1] in ("w1", "w2", "w3"):
+            S = g.shape[:1][0] if g.ndim >= 3 else None
+            lead = g.shape[0] if names[0] != "layers" else g.shape[1]
+            # layers-stacked: (L, slots, ...) vs front: (slots, ...)
+            ax = 1 if names[0] == "layers" else 0
+            E, R = info.num_experts, info.replicas
+            shp = g.shape
+            g2 = g.reshape(shp[:ax] + (E, R) + shp[ax + 1:])
+            g2 = jnp.sum(g2, axis=ax + 1, keepdims=True)
+            g2 = jnp.broadcast_to(g2, shp[:ax] + (E, R) + shp[ax + 1:])
+            return g2.reshape(shp)
+        return g
+    return jax.tree_util.tree_map_with_path(sync, grads)
+
+
+def build_train_step(cfg: ArchConfig, pctx: ParallelContext,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None,
+                     schedule: str = "cosine", total_steps: int = 10000,
+                     warmup: int = 200, ce_chunks: int = 8):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    sched = SCHEDULES[schedule]
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, pctx, ce_chunks=ce_chunks),
+            has_aux=True)(params)
+        grads = sync_expert_replica_grads(cfg, grads, pctx.ep_world)
+        lr_scale = sched(opt_state["count"], warmup=warmup,
+                         total=total_steps)
+        params, opt_state, om = adamw.update(opt_cfg, params, grads,
+                                             opt_state, lr_scale)
+        metrics = {**metrics, **om, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig, pctx: ParallelContext,
+                       seq_budget: int, dtype=jnp.bfloat16):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch, seq_budget, pctx, dtype=dtype)
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig, pctx: ParallelContext):
+    def serve_step(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens, pctx)
+    return serve_step
+
+
+def default_schedule(cfg: ArchConfig) -> str:
+    return "wsd" if cfg.name.startswith("minicpm") else "cosine"
+
+
+def build_cell(arch: str, shape: str, mesh: Optional[Mesh], *,
+               interpret: bool = True, dtype=jnp.bfloat16,
+               dist_impl: str = "pipelined", num_chunks: int = 4,
+               moe_local_impl: str = "fused",
+               expert_compute: str = "einsum",
+               policy: str = "auto") -> CellSpec:
+    """Assemble the (step_fn, SDS args, shardings) for one cell.
+
+    ``expert_compute`` defaults to the cost-equivalent einsum for dry-run
+    roofline fidelity (the pallas kernel's interpret-mode loop pollutes
+    HLO byte counts on CPU); pass "kernel" to lower the pallas path.
+    """
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    train = cell.kind == "train"
+    ep_world = mesh.shape.get("model", 1) if mesh is not None else 1
+    pctx = make_pctx(cfg, mesh, train=train, interpret=interpret,
+                     dist_impl=dist_impl, num_chunks=num_chunks,
+                     expert_compute=expert_compute, policy=policy)
+    if moe_local_impl != "fused":
+        pctx = dataclasses.replace(pctx, moe_impl=moe_local_impl)
+
+    p_sds = params_specs(cfg, ep_world, dtype)
+    b_sds = batch_specs(cfg, cell, dtype)
+    serve_layout = cell.kind == "decode"
+    if mesh is not None:
+        p_sh = shd.params_shardings(cfg, mesh, p_sds, serve=serve_layout)
+        b_sh = _batch_shardings(mesh, b_sds, pctx.policy)
+    else:
+        p_sh = b_sh = None
+
+    meta = {"arch": arch, "shape": shape, "kind": cell.kind,
+            "global_batch": cell.global_batch, "seq_len": cell.seq_len,
+            "ep_world": ep_world}
+
+    if train:
+        o_sds = jax.eval_shape(adamw.init, p_sds)
+        step_fn = build_train_step(cfg, pctx,
+                                   schedule=default_schedule(cfg))
+        if mesh is not None:
+            o_sh = shd.opt_shardings(cfg, mesh, o_sds)
+            m_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                jax.eval_shape(step_fn, p_sds, o_sds,
+                                               b_sds)[2])
+            in_sh = (p_sh, o_sh, b_sh)
+            out_sh = (p_sh, o_sh, m_sh)
+        else:
+            in_sh = out_sh = None
+        return CellSpec(arch, shape, step_fn, (p_sds, o_sds, b_sds),
+                        in_sh, out_sh, donate_argnums=(0, 1), pctx=pctx,
+                        meta=meta)
+
+    if cell.kind == "prefill":
+        step_fn = build_prefill_step(cfg, pctx, cell.seq_len, dtype)
+        if mesh is not None:
+            out_sds = jax.eval_shape(step_fn, p_sds, b_sds)
+            logits_sh = NamedSharding(mesh, P(None, None))
+            c_sh = shd.cache_shardings(cfg, mesh, out_sds[1])
+            in_sh = (p_sh, b_sh)
+            out_sh = (logits_sh, c_sh)
+        else:
+            in_sh = out_sh = None
+        return CellSpec(arch, shape, step_fn, (p_sds, b_sds), in_sh,
+                        out_sh, donate_argnums=(), pctx=pctx, meta=meta)
+
+    # decode: one new token against a seq_len cache
+    B = cell.global_batch
+    cache_sds = init_cache(cfg, B, cell.seq_len, dtype, for_spec=True)
+    tok_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    step_fn = build_decode_step(cfg, pctx)
+    if mesh is not None:
+        seq_sharded = (shape == "long_500k")
+        c_sh = shd.cache_shardings(cfg, mesh, cache_sds,
+                                   seq_sharded=seq_sharded)
+        dp_size = 1
+        for a in shd.dp_axes_of(mesh):
+            dp_size *= mesh.shape[a]
+        tok_sh = NamedSharding(
+            mesh, P(shd.dp_axes_of(mesh)) if B % dp_size == 0 and dp_size > 1
+            else P(None))
+        vocab_ok = get_config(arch).vocab % mesh.shape.get("model", 1) == 0
+        logits_sh = NamedSharding(
+            mesh, P(None, "model") if vocab_ok else P(None, None))
+        in_sh = (p_sh, c_sh, tok_sh)
+        out_sh = (logits_sh, c_sh)
+    else:
+        in_sh = out_sh = None
+    return CellSpec(arch, shape, step_fn, (p_sds, cache_sds, tok_sds),
+                    in_sh, out_sh, donate_argnums=(1,), pctx=pctx,
+                    meta=meta)
+
+
+def lower_cell(spec: CellSpec, mesh: Optional[Mesh]):
+    """jit + lower a cell (no compile). Returns the Lowered object."""
+    kwargs = {}
+    if spec.in_shardings is not None:
+        kwargs["in_shardings"] = spec.in_shardings
+        kwargs["out_shardings"] = spec.out_shardings
+    jitted = jax.jit(spec.step_fn, donate_argnums=spec.donate_argnums,
+                     **kwargs)
+    if mesh is not None:
+        with jax.set_mesh(mesh):
+            return jitted.lower(*spec.args)
+    return jitted.lower(*spec.args)

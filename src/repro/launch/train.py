@@ -1,0 +1,127 @@
+"""Training driver: data pipeline -> jitted train step -> checkpoints,
+with fault-tolerance plumbing (watchdog, straggler tracker, heartbeat,
+retry-with-restore) and elastic restart.
+
+CPU-scale example (reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b \
+      --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM, shard_batch
+from repro.distributed.elastic import make_elastic_mesh
+from repro.distributed.fault_tolerance import (StepWatchdog,
+                                               StragglerTracker,
+                                               retry_step, write_heartbeat)
+from repro.launch.steps import build_train_step, default_schedule, make_pctx
+from repro.models.model import init_params
+from repro.optim import adamw
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dtype", default="float32")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dtype = jnp.bfloat16 if args.dtype == "bfloat16" else jnp.float32
+
+    mesh = make_elastic_mesh(cfg=cfg) if len(jax.devices()) > 1 else None
+    pctx = make_pctx(cfg, mesh, train=True)
+    ep_world = pctx.ep_world
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed), dtype=dtype,
+                         ep_world=ep_world)
+    opt_state = adamw.init(params)
+    data = SyntheticLM(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed, frames=cfg.enc_seq if cfg.enc_dec else 0,
+        d_frame=cfg.d_model if cfg.enc_dec else 0))
+
+    start = 0
+    checkpointer = None
+    if args.ckpt_dir:
+        checkpointer = ckpt.AsyncCheckpointer(args.ckpt_dir)
+        last = ckpt.latest_step(args.ckpt_dir)
+        if args.resume and last is not None:
+            state = {"params": params, "opt": opt_state}
+            state, meta = ckpt.restore(args.ckpt_dir, last, state)
+            params, opt_state = state["params"], state["opt"]
+            data.load_state_dict(meta["data"])
+            start = int(meta["step"])
+            print(f"resumed from step {start}")
+
+    step_fn = build_train_step(
+        cfg, pctx, adamw.AdamWConfig(lr=args.lr),
+        schedule=default_schedule(cfg), total_steps=args.steps,
+        warmup=max(1, args.steps // 20))
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    tracker = StragglerTracker()
+    watchdog = StepWatchdog(
+        on_timeout=lambda dl: print(f"[watchdog] step exceeded {dl:.1f}s"))
+
+    t_start = time.time()
+    for step in range(start, args.steps):
+        batch = data.next()
+        if mesh is not None:
+            batch = shard_batch(batch, mesh)
+        else:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+
+        def run():
+            with watchdog.step():
+                return jitted(params, opt_state, batch)
+
+        t0 = time.time()
+        params, opt_state, metrics = retry_step(run)
+        metrics = jax.tree.map(float, metrics)
+        dt = time.time() - t0
+        straggler = tracker.record(dt)
+        if args.ckpt_dir:
+            write_heartbeat(os.path.join(args.ckpt_dir, "heartbeat.json"),
+                            step, {"loss": metrics["loss"]})
+        if step % args.log_every == 0 or step == args.steps - 1:
+            toks = args.batch * args.seq / dt
+            print(f"step {step:5d} loss={metrics['loss']:.4f} "
+                  f"ce={metrics['ce']:.4f} gnorm={metrics['grad_norm']:.3f} "
+                  f"{dt*1e3:7.1f}ms {toks:9.0f} tok/s"
+                  + ("  [straggler]" if straggler else ""))
+        if checkpointer and (step + 1) % args.ckpt_every == 0:
+            checkpointer.save_async(
+                step + 1, {"params": params, "opt": opt_state},
+                {"data": data.state_dict(), "arch": cfg.name})
+    if checkpointer:
+        checkpointer.wait()
+    stats = tracker.stats()
+    print(f"done in {time.time()-t_start:.1f}s; step p50={stats.median*1e3:.0f}ms "
+          f"p95={stats.p95*1e3:.0f}ms delay-ratio={stats.max_delay_ratio:.2f}")
+    return metrics
+
+
+if __name__ == "__main__":
+    main()

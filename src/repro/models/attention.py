@@ -1,0 +1,401 @@
+"""Attention variants: GQA (+bias/qk-norm/RoPE), sliding-window,
+local:global interleave, MLA (DeepSeek-v2), and decode paths.
+
+Prefill/train uses a flash-style chunked attention (online softmax over KV
+blocks, `lax.scan`) so the (S, S) score matrix is never materialized —
+required for the 32k prefill shapes to fit the memory analysis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def _is_static_zero(x) -> bool:
+    return isinstance(x, (int, float)) and x == 0
+
+
+def rope_any(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """apply_rope that accepts a traced theta (per-layer local/global)."""
+    hd = x.shape[-1]
+    theta = jnp.asarray(theta, jnp.float32)
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+def _window_mask(q_pos, k_pos, window):
+    """(q, k) admissibility under a (possibly traced) sliding window.
+
+    window <= 0 means no window. Shapes broadcast: q_pos (..., 1),
+    k_pos (1, ...).
+    """
+    if _is_static_zero(window):
+        return None
+    inside = q_pos - k_pos < window
+    return inside | (jnp.asarray(window) <= 0)
+
+
+def init_gqa_params(key, d_model: int, n_heads: int, n_kv_heads: int,
+                    head_dim: int, *, qkv_bias: bool = False,
+                    qk_norm: bool = False, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads * head_dim)) * s
+               ).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, n_kv_heads * head_dim)) * s
+               ).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, n_kv_heads * head_dim)) * s
+               ).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads * head_dim, d_model))
+               * (n_heads * head_dim) ** -0.5).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((head_dim,), dtype)
+    return p
+
+
+def _attn_mask(q_pos, k_pos, Skv, causal, window, Sq, Kc):
+    mask = jnp.broadcast_to(k_pos[None, :] <= Skv - 1, (Sq, Kc))
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    wm = _window_mask(q_pos[:, None], k_pos[None, :], window)
+    if wm is not None:
+        mask &= wm
+    return mask
+
+
+def _chunked_attn_fwd(qf, kc, vc, window, *, causal, q_offset, kv_chunk,
+                      Skv, Sq):
+    """Online-softmax forward. qf: (B,Sq,nkv,g,hd) pre-scaled;
+    kc/vc: (n, B, Kc, nkv, hd|dv). Returns (out, lse)."""
+    B, _, nkv, g, hd = qf.shape
+    dv = vc.shape[-1]
+    n_chunks = kc.shape[0]
+    q_pos = q_offset + jnp.arange(Sq)
+
+    qf32 = qf.astype(jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        j, k_j, v_j = xs
+        k_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf32, k_j.astype(jnp.float32))
+        mask = _attn_mask(q_pos, k_pos, Skv, causal, window, Sq, kv_chunk)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, v_j.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, nkv, g, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nkv, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, nkv, g, Sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,nkv,g,Sq,dv)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _chunked_attn_cv(qf, kc, vc, window, causal, q_offset, kv_chunk, Skv,
+                     Sq):
+    out, _ = _chunked_attn_fwd(qf, kc, vc, window, causal=causal,
+                               q_offset=q_offset, kv_chunk=kv_chunk,
+                               Skv=Skv, Sq=Sq)
+    return out
+
+
+def _cv_fwd(qf, kc, vc, window, causal, q_offset, kv_chunk, Skv, Sq):
+    out, lse = _chunked_attn_fwd(qf, kc, vc, window, causal=causal,
+                                 q_offset=q_offset, kv_chunk=kv_chunk,
+                                 Skv=Skv, Sq=Sq)
+    return out, (qf, kc, vc, window, out, lse)
+
+
+def _cv_bwd(causal, q_offset, kv_chunk, Skv, Sq, res, dout):
+    """FlashAttention-2 style backward: recompute scores per KV chunk —
+    O(Sq * Kc) live memory instead of O(Sq * Skv) saved residuals."""
+    qf, kc, vc, window, out, lse = res
+    qf32 = qf.astype(jnp.float32)
+    dout = dout.astype(jnp.float32)
+    D = jnp.sum(dout * out, axis=-1)                  # (B,nkv,g,Sq)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(dq, xs):
+        j, k_j, v_j = xs
+        k_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        kf = k_j.astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf32, kf)
+        mask = _attn_mask(q_pos, k_pos, Skv, causal, window, Sq, kv_chunk)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])               # (B,h,g,Sq,Kc)
+        dv_j = jnp.einsum("bhgqk,bhgqd->bkhd", p, dout)
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", dout, v_j.astype(jnp.float32))
+        ds = p * (dp - D[..., None])
+        dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kf)
+        dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qf32)
+        return dq, (dk_j, dv_j)
+
+    n_chunks = kc.shape[0]
+    dq0 = jnp.zeros_like(qf, jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(body, dq0,
+                                (jnp.arange(n_chunks), kc, vc))
+    import numpy as np
+    zero_w = np.zeros(jnp.shape(window), jax.dtypes.float0)
+    return (dq.astype(qf.dtype), dk.astype(kc.dtype), dv.astype(vc.dtype),
+            zero_w)
+
+
+_chunked_attn_cv.defvjp(_cv_fwd, _cv_bwd)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      q_offset: int = 0, kv_chunk: int = 1024,
+                      scale: Optional[float] = None) -> jax.Array:
+    """Flash-style attention over KV chunks (no S x S materialization),
+    with a FlashAttention-2 custom VJP (recompute-in-backward) so training
+    memory stays O(S * kv_chunk) per layer.
+
+    q: (B, Sq, nq, hd); k/v: (B, Skv, nkv, hd); nq % nkv == 0.
+    ``window`` > 0 enables sliding-window masking (Mistral/gemma3-local);
+    it may be a traced per-layer value (local:global interleave).
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+    """
+    B, Sq, nq, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # may differ from hd (MLA: k=192, v=128)
+    g = nq // nkv
+    if scale is None:
+        scale = hd ** -0.5
+    kv_chunk = min(kv_chunk, Skv)
+    pad = (-Skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // kv_chunk
+
+    # qf keeps q's dtype: the custom-VJP boundary must be bf16 so dq (and
+    # the whole upstream cotangent chain + its collectives) stays bf16;
+    # the f32 upcast happens inside the fwd/bwd bodies (§Perf iter 4).
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, Sq, nkv, g, hd)
+    kc = k.reshape(B, n_chunks, kv_chunk, nkv, hd).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, kv_chunk, nkv, dv).swapaxes(0, 1)
+    window_arg = jnp.asarray(window, jnp.int32)
+    out = _chunked_attn_cv(qf, kc, vc, window_arg, causal, q_offset,
+                           kv_chunk, Skv, Sq)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, nq, dv)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     *, kv_len, window: int = 0,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-position attention vs a cache.
+
+    q: (B, nq, hd); caches: (B, Smax, nkv, hd); kv_len: scalar/int — number
+    of valid cache positions (the new token is at kv_len - 1).
+    """
+    B, nq, hd = q.shape
+    Smax, nkv = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = nq // nkv
+    if scale is None:
+        scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, nkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(Smax)
+    mask = pos[None, :] < kv_len
+    if not _is_static_zero(window):
+        mask &= (pos[None, :] > kv_len - 1 - window) \
+            | (jnp.asarray(window) <= 0)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, nq, dv)
+
+
+def sharded_decode_attention(q, k_cache, v_cache, *, kv_len, axis: str,
+                             window: int = 0, scale=None):
+    """Decode attention with the KV cache sharded on sequence over ``axis``.
+
+    Flash-decoding: each shard computes a partial (max, sum, weighted-V)
+    over its local keys; shards combine with a log-sum-exp reduction
+    (ppermute-free, one psum). Used for long_500k cells. Runs inside
+    shard_map; k_cache/v_cache are the local shards; kv positions of this
+    shard are offset by rank * S_local.
+    """
+    B, nq, hd = q.shape
+    S_loc, nkv = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = nq // nkv
+    if scale is None:
+        scale = hd ** -0.5
+    rank = jax.lax.axis_index(axis)
+    offset = rank * S_loc
+    qf = (q.astype(jnp.float32) * scale).reshape(B, nkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    pos = offset + jnp.arange(S_loc)
+    mask = pos[None, :] < kv_len
+    if not _is_static_zero(window):
+        mask &= (pos[None, :] > kv_len - 1 - window) \
+            | (jnp.asarray(window) <= 0)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m_loc = s.max(-1)
+    p = jnp.exp(s - m_loc[..., None])
+    l_loc = p.sum(-1)
+    o_loc = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    m = jax.lax.pmax(m_loc, axis)
+    corr = jnp.exp(m_loc - m)
+    l = jax.lax.psum(l_loc * corr, axis)
+    o = jax.lax.psum(o_loc * corr[..., None], axis)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, nq, dv)
+
+
+def _project_qkv(params, x, n_heads, n_kv_heads, head_dim, *,
+                 qk_norm=False, rope_theta=0.0, positions=None,
+                 use_rope: Optional[bool] = None):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsh,hd->bsd", x, params["wq"])
+    k = jnp.einsum("bsh,hd->bsd", x, params["wk"])
+    v = jnp.einsum("bsh,hd->bsd", x, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv_heads, head_dim)
+    v = v.reshape(B, S, n_kv_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if use_rope is None:
+        use_rope = not _is_static_zero(rope_theta)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q = rope_any(q, positions, rope_theta)
+        k = rope_any(k, positions, rope_theta)
+    return q, k, v
+
+
+def gqa_attention(params: dict, x: jax.Array, *, n_heads: int,
+                  n_kv_heads: int, head_dim: int, causal: bool = True,
+                  window: int = 0, qk_norm: bool = False,
+                  rope_theta: float = 10000.0,
+                  positions: Optional[jax.Array] = None,
+                  kv_chunk: int = 1024,
+                  use_rope: Optional[bool] = None,
+                  pctx=None, expand_kv: bool = False) -> jax.Array:
+    """Full GQA block for train/prefill: proj -> rope -> flash -> out proj.
+
+    Parallelism: with ``expand_kv`` (heads-TP mode) the KV heads are
+    replicated up to the q-head count so the head dim shards over the
+    model axis (GQA "KV replication"). With ``pctx`` set (CP mode),
+    queries are context-parallel (seq over 'model') with replicated
+    attention weights; GSPMD inserts the KV all-gather (Megatron-CP).
+    """
+    B, S, H = x.shape
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim,
+                           qk_norm=qk_norm, rope_theta=rope_theta,
+                           positions=positions, use_rope=use_rope)
+    if expand_kv and n_heads != n_kv_heads:
+        g = n_heads // n_kv_heads
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    if pctx is not None:
+        from repro.models.model import sp_constrain
+        q = sp_constrain(q, pctx)
+    o = chunked_attention(q, k, v, causal=causal, window=window,
+                          kv_chunk=kv_chunk)
+    if pctx is not None:
+        from repro.models.model import sp_constrain
+        o = sp_constrain(o, pctx)
+    o = o.reshape(B, S, n_heads * head_dim).astype(x.dtype)
+    return jnp.einsum("bsd,dh->bsh", o, params["wo"])
+
+
+# ---------------------------------------------------------------- MLA ----
+def init_mla_params(key, d_model: int, n_heads: int, *, kv_lora: int = 512,
+                    qk_nope: int = 128, qk_rope: int = 64, v_head: int = 128,
+                    dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads * (qk_nope + qk_rope)))
+               * s).astype(dtype),
+        "w_dkv": (jax.random.normal(ks[1], (d_model, kv_lora)) * s).astype(dtype),
+        "w_kr": (jax.random.normal(ks[2], (d_model, qk_rope)) * s).astype(dtype),
+        "w_uk": (jax.random.normal(ks[3], (kv_lora, n_heads * qk_nope))
+                 * kv_lora ** -0.5).astype(dtype),
+        "w_uv": (jax.random.normal(ks[4], (kv_lora, n_heads * v_head))
+                 * kv_lora ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[5], (n_heads * v_head, d_model))
+               * (n_heads * v_head) ** -0.5).astype(dtype),
+        "ckv_norm": jnp.zeros((kv_lora,), dtype),
+    }
+
+
+def mla_expand_kv(params, c_kv, k_rope, n_heads, qk_nope, v_head):
+    """Up-project the latent cache into per-head K/V (decode + prefill)."""
+    B, S, _ = c_kv.shape
+    k_nope = jnp.einsum("bsc,cd->bsd", c_kv, params["w_uk"]
+                        ).astype(c_kv.dtype).reshape(B, S, n_heads, qk_nope)
+    v = jnp.einsum("bsc,cd->bsd", c_kv, params["w_uv"]
+                   ).astype(c_kv.dtype).reshape(B, S, n_heads, v_head)
+    k_r = jnp.broadcast_to(k_rope[:, :, None, :],
+                           (B, S, n_heads, k_rope.shape[-1]))
+    k = jnp.concatenate([k_nope, k_r], axis=-1)
+    return k, v
+
+
+def mla_attention(params: dict, x: jax.Array, *, n_heads: int,
+                  kv_lora: int = 512, qk_nope: int = 128, qk_rope: int = 64,
+                  v_head: int = 128, rope_theta: float = 10000.0,
+                  positions: Optional[jax.Array] = None, causal: bool = True,
+                  kv_chunk: int = 1024, pctx=None) -> jax.Array:
+    """Multi-head Latent Attention (DeepSeek-v2), train/prefill form."""
+    B, S, H = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = jnp.einsum("bsh,hd->bsd", x, params["wq"]).astype(x.dtype)
+    q = q.reshape(B, S, n_heads, qk_nope + qk_rope)
+    q_n, q_r = q[..., :qk_nope], q[..., qk_nope:]
+    q_r = apply_rope(q_r, positions, rope_theta)
+    q = jnp.concatenate([q_n, q_r], axis=-1)
+
+    c_kv = jnp.einsum("bsh,hc->bsc", x, params["w_dkv"]).astype(x.dtype)
+    c_kv = rms_norm(c_kv, params["ckv_norm"])
+    k_rope = jnp.einsum("bsh,hr->bsr", x, params["w_kr"]).astype(x.dtype)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0]
+    k, v = mla_expand_kv(params, c_kv, k_rope, n_heads, qk_nope, v_head)
+
+    if pctx is not None:
+        from repro.models.model import sp_constrain
+        q = sp_constrain(q, pctx)
+    o = chunked_attention(q, k, v, causal=causal, kv_chunk=kv_chunk,
+                          scale=(qk_nope + qk_rope) ** -0.5)
+    if pctx is not None:
+        from repro.models.model import sp_constrain
+        o = sp_constrain(o, pctx)
+    o = o.reshape(B, S, n_heads * v_head).astype(x.dtype)
+    return jnp.einsum("bsd,dh->bsh", o, params["wo"])

@@ -1,0 +1,179 @@
+"""Common layers: norms, rotary embeddings, dense FFN, embeddings, loss."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+def dense_ffn(params: dict, x: jax.Array, activation: str = "silu",
+              gated: bool = True) -> jax.Array:
+    """Position-wise FFN (paper Eq. 1), optionally GLU-gated.
+
+    Boundary dtype = x.dtype (bf16 in production): the MXU accumulates in
+    f32 internally; keeping outputs/cotangents in bf16 halves activation
+    memory and every activation-gradient collective (§Perf iteration 4).
+    """
+    h = jnp.einsum("...h,hf->...f", x, params["w1"])
+    if activation == "silu":
+        h = jax.nn.silu(h)
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif activation == "relu":
+        h = jax.nn.relu(h)
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    if gated:
+        g = jnp.einsum("...h,hf->...f", x, params["w3"])
+        h = h * g
+    return jnp.einsum("...f,fh->...h", h.astype(x.dtype), params["w2"])
+
+
+def init_dense_ffn(key: jax.Array, d_model: int, d_ff: int, gated: bool,
+                   dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    p = {
+        "w1": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["w3"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def _ce_chunk_stats(h, w, lab, n_valid=0):
+    logits = jnp.einsum("th,hv->tv", h, w,
+                        preferred_element_type=jnp.float32)
+    if n_valid and n_valid != w.shape[1]:  # mask vocab-padding columns
+        col = jnp.arange(w.shape[1])
+        logits = jnp.where(col < n_valid, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # gold logit via one-hot reduction, NOT take_along_axis: gathering
+    # along the vocab dim (sharded over 'model') would force GSPMD to
+    # replicate the whole logits chunk (§Perf iteration 5); the masked
+    # reduction keeps everything vocab-sharded + one tiny psum.
+    col = jnp.arange(w.shape[1])
+    onehot = (col[None, :] == jnp.maximum(lab, 0)[:, None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    valid = (lab >= 0).astype(jnp.float32)
+    return logits, lse, gold, valid
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _fused_lce(hidden, w, labels, num_chunks, n_valid):
+    """Fused linear + cross-entropy: never materializes more than one
+    (T/num_chunks, V) logits block, in forward OR backward."""
+    loss, _ = _lce_fwd_impl(hidden, w, labels, num_chunks, n_valid)
+    return loss
+
+
+def _lce_fwd_impl(hidden, w, labels, num_chunks, n_valid=0):
+    Tc = hidden.shape[0] // num_chunks
+    h_chunks = hidden.reshape(num_chunks, Tc, -1)
+    l_chunks = labels.reshape(num_chunks, Tc)
+
+    def body(carry, xs):
+        h, lab = xs
+        _, lse, gold, valid = _ce_chunk_stats(h, w, lab, n_valid)
+        nll = (lse - gold) * valid
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), lse
+
+    (tot, cnt), lses = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (h_chunks, l_chunks))
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt, (lses, cnt)
+
+
+def _lce_fwd(hidden, w, labels, num_chunks, n_valid):
+    loss, (lses, cnt) = _lce_fwd_impl(hidden, w, labels, num_chunks,
+                                      n_valid)
+    return loss, (hidden, w, labels, lses, cnt)
+
+
+def _lce_bwd(num_chunks, n_valid, res, dloss):
+    hidden, w, labels, lses, cnt = res
+    Tc = hidden.shape[0] // num_chunks
+    h_chunks = hidden.reshape(num_chunks, Tc, -1)
+    l_chunks = labels.reshape(num_chunks, Tc)
+
+    def body(dw, xs):
+        h, lab, lse = xs
+        logits = jnp.einsum("th,hv->tv", h, w,
+                            preferred_element_type=jnp.float32)
+        if n_valid and n_valid != w.shape[1]:
+            col = jnp.arange(w.shape[1])
+            logits = jnp.where(col < n_valid, logits, -1e30)
+        p = jnp.exp(logits - lse[:, None])
+        onehot = jax.nn.one_hot(jnp.maximum(lab, 0), w.shape[1],
+                                dtype=jnp.float32)
+        valid = (lab >= 0).astype(jnp.float32)[:, None]
+        dlogits = (p - onehot) * valid * (dloss / cnt)
+        dh = jnp.einsum("tv,hv->th", dlogits.astype(w.dtype), w,
+                        preferred_element_type=jnp.float32)
+        dw = dw + jnp.einsum("th,tv->hv", h.astype(jnp.float32), dlogits,
+                             preferred_element_type=jnp.float32)
+        return dw, dh.astype(h.dtype)
+
+    dw0 = jnp.zeros(w.shape, jnp.float32)
+    dw, dh = jax.lax.scan(body, dw0, (h_chunks, l_chunks, lses))
+    return (dh.reshape(hidden.shape), dw.astype(w.dtype), None)
+
+
+_fused_lce.defvjp(_lce_fwd, _lce_bwd)
+
+
+def chunked_cross_entropy(hidden: jax.Array, w: jax.Array,
+                          labels: jax.Array, num_chunks: int = 8,
+                          n_valid: int = 0):
+    """CE loss without materializing full (T, V) logits (fwd or bwd).
+
+    hidden: (T, H); w: (H, V); labels: (T,) int32 (-1 = ignore).
+    ``n_valid``: real vocab size when w has padding columns (masked).
+    """
+    T = hidden.shape[0]
+    pad = (-T) % num_chunks
+    if pad:
+        hidden = jnp.pad(hidden, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, pad),), constant_values=-1)
+    return _fused_lce(hidden, w, labels, num_chunks, n_valid)

@@ -1,0 +1,462 @@
+"""Model zoo assembly: init / train / prefill / decode for all 10 archs.
+
+One generic transformer stack driven by ``ArchConfig``:
+  * dense | vlm       — GQA attention + dense FFN
+  * moe               — GQA or MLA attention + FlashMoE FFN
+  * ssm (rwkv6)       — time-mix + channel-mix
+  * hybrid (hymba)    — parallel attention + Mamba heads
+  * audio (whisper)   — encoder-decoder, stubbed conv frontend
+
+Layers are stacked and scanned (``lax.scan``) so HLO size is O(1) in depth;
+heterogeneous leading layers (deepseek's dense layer 0) sit in an unscanned
+"front" list. MoE weights are stored slot-major (see core/dispatch.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.dispatch import SlotInfo, distributed_moe
+from repro.core.gate import GateConfig
+from repro.core.moe import (MoEConfig, init_moe_params, moe_layer,
+                            moe_ffn_gather, run_gate, shared_expert_ffn)
+from repro.models.attention import (decode_attention, gqa_attention,
+                                    init_gqa_params, init_mla_params,
+                                    mla_attention, mla_expand_kv,
+                                    _project_qkv)
+from repro.models.layers import (apply_rope, chunked_cross_entropy,
+                                 dense_ffn, init_dense_ffn, layer_norm,
+                                 rms_norm)
+from repro.models.ssm import (init_mamba_params, init_rwkv6_params,
+                              mamba_mixer, rwkv6_channel_mix,
+                              rwkv6_time_mix_chunked,
+                              rwkv6_time_mix_recurrent)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    """How a step function should distribute itself."""
+    mesh: Optional[Any] = None           # jax.sharding.Mesh
+    dp_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    use_ep: bool = False                 # shard_map EP MoE (train/prefill)
+    dist_impl: str = "pipelined"         # bulk | pipelined
+    num_chunks: int = 4
+    remat: bool = True
+    interpret: bool = True
+    moe_impl: str = "fused"              # local MoE impl when not EP
+    kv_chunk: int = 1024
+    ep_world: int = 1                    # slot-major expansion factor
+    expert_compute: str = "kernel"       # kernel | einsum (dry-run)
+    use_pallas_gate: bool = True
+    # "megatron": TP weights + seq-resident activations (default).
+    # "fsdp": batch sharded over (data x model); weights stay sharded for
+    # storage and are all-gathered per layer by GSPMD — activation
+    # collectives vanish; comm scales with params, not tokens (§Perf
+    # iteration 6; the right regime for big-H dense archs at TP=16).
+    policy: str = "megatron"
+
+
+LOCAL = ParallelContext()
+
+
+def _norm(cfg: ArchConfig, p, x):
+    if cfg.norm == "ln":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def _init_norm(cfg: ArchConfig, dtype):
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _moe_config(cfg: ArchConfig, pctx: ParallelContext) -> MoEConfig:
+    m = cfg.moe
+    gc = GateConfig(
+        num_experts=m.num_experts, top_k=m.top_k,
+        capacity_factor=m.capacity_factor, score_fn=m.score_fn,
+        aux_loss=m.aux_loss, router_z_loss=m.router_z_loss)
+    return MoEConfig(
+        gate=gc, d_model=cfg.d_model, d_ff=m.d_ff_expert,
+        activation=cfg.activation, gated=cfg.gated_ffn,
+        d_ff_shared=m.d_ff_shared, impl=pctx.moe_impl,
+        dist_impl=pctx.dist_impl, num_chunks=pctx.num_chunks,
+        interpret=pctx.interpret, expert_compute=pctx.expert_compute,
+        use_pallas_gate=pctx.use_pallas_gate)
+
+
+def sinusoidal_pos(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(1, half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------------------------------------------ init -------
+def _init_layer(cfg: ArchConfig, key, dtype, ep_world: int,
+                moe_layer_: bool) -> dict:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm1": _init_norm(cfg, dtype),
+                         "norm2": _init_norm(cfg, dtype)}
+    if cfg.attention_free:
+        p["rwkv"] = init_rwkv6_params(
+            ks[0], cfg.d_model, head_dim=cfg.ssm.head_dim,
+            d_ff=cfg.d_ff, dtype=dtype)
+        return p
+    if cfg.mla is not None:
+        p["attn"] = init_mla_params(
+            ks[0], cfg.d_model, cfg.n_heads, kv_lora=cfg.mla.kv_lora,
+            qk_nope=cfg.mla.qk_nope, qk_rope=cfg.mla.qk_rope,
+            v_head=cfg.mla.v_head, dtype=dtype)
+    else:
+        p["attn"] = init_gqa_params(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=dtype)
+    if cfg.hybrid_parallel:
+        p["mamba"] = init_mamba_params(
+            ks[1], cfg.d_model, cfg.ssm.d_inner or 2 * cfg.d_model,
+            d_state=cfg.ssm.d_state, d_conv=cfg.ssm.d_conv,
+            dt_rank=cfg.ssm.dt_rank or max(1, cfg.d_model // 16),
+            dtype=dtype)
+        p["attn_norm_out"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ssm_norm_out"] = jnp.zeros((cfg.d_model,), dtype)
+    if moe_layer_:
+        mcfg = _moe_config(cfg, LOCAL)
+        mp = init_moe_params(ks[2], mcfg, dtype=dtype)
+        info = SlotInfo.make(cfg.moe.num_experts, max(1, ep_world))
+        for w in ("w1", "w2", "w3"):
+            if w in mp:
+                mp[w] = info.expand_expert_weights(mp[w])
+        p["moe"] = mp
+    else:
+        p["ffn"] = init_dense_ffn(ks[2], cfg.d_model, cfg.d_ff,
+                                  cfg.gated_ffn, dtype=dtype)
+    return p
+
+
+def _init_enc_layer(cfg: ArchConfig, key, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": _init_norm(cfg, dtype), "norm2": _init_norm(cfg, dtype),
+        "attn": init_gqa_params(ks[0], cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.head_dim_, dtype=dtype),
+        "ffn": init_dense_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_ffn,
+                              dtype=dtype),
+    }
+
+
+def _init_cross_attn(cfg: ArchConfig, key, dtype) -> dict:
+    p = init_gqa_params(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.head_dim_, dtype=dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.bfloat16,
+                ep_world: int = 1) -> dict:
+    ks = jax.random.split(key, 8)
+    n_front = cfg.moe.first_k_dense if cfg.moe else 0
+    n_scan = cfg.n_layers - n_front
+
+    layer_keys = jax.random.split(ks[0], n_scan)
+    moe_on = cfg.moe is not None
+    layers = jax.vmap(
+        lambda k: _init_layer(cfg, k, dtype, ep_world, moe_on)
+    )(layer_keys)
+
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(ks[1], (cfg.vocab_padded, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "layers": layers,
+        "final_norm": _init_norm(cfg, dtype),
+    }
+    params["front"] = [
+        _init_layer(cfg, k, dtype, ep_world, moe_layer_=False)
+        for k in jax.random.split(ks[2], n_front)
+    ] if n_front else []
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(ks[3], (cfg.d_model, cfg.vocab_padded))
+            * cfg.d_model ** -0.5).astype(dtype)
+    if cfg.enc_dec:
+        enc_keys = jax.random.split(ks[4], cfg.enc_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_enc_layer(cfg, k, dtype))(enc_keys)
+        params["enc_norm"] = _init_norm(cfg, dtype)
+        cross_keys = jax.random.split(ks[5], n_scan)
+        params["cross"] = jax.vmap(
+            lambda k: _init_cross_attn(cfg, k, dtype))(cross_keys)
+        params["cross_norm"] = jax.vmap(
+            lambda k: _init_norm(cfg, dtype))(jax.random.split(ks[6], n_scan))
+        # frame-embedding projection (conv frontend stub -> d_model)
+        params["enc_in_proj"] = (
+            jax.random.normal(ks[7], (cfg.d_model, cfg.d_model))
+            * cfg.d_model ** -0.5).astype(dtype)
+    return params
+
+
+# ------------------------------------------------- FFN / MoE sublayer ----
+def _apply_ffn(cfg: ArchConfig, p_layer, x, pctx: ParallelContext,
+               decode: bool):
+    """x: (..., H) -> (y same shape, aux scalar). The EP path takes the
+    3D (B, S, H) resident layout directly (seq sharded over 'model')."""
+    zero = jnp.zeros((), jnp.float32)
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1])
+    if "ffn" in p_layer:
+        return dense_ffn(p_layer["ffn"], x2d, cfg.activation,
+                         cfg.gated_ffn).reshape(shape), zero
+    mcfg = _moe_config(cfg, pctx)
+    mp = p_layer["moe"]
+    if decode:
+        og = run_gate(mp, x2d, dataclasses.replace(mcfg, use_pallas_gate=False))
+        info = SlotInfo.make(cfg.moe.num_experts, max(1, pctx.ep_world))
+        og = dataclasses.replace(
+            og, expert_indices=(og.expert_indices * info.replicas))
+        y = moe_ffn_gather(mp, x2d, mcfg, og)
+        if mcfg.d_ff_shared > 0:
+            y = y + shared_expert_ffn(mp, x2d, mcfg)
+        return y.reshape(shape), og.aux_loss + og.z_loss
+    if pctx.use_ep and pctx.mesh is not None \
+            and pctx.mesh.shape[pctx.model_axis] > 1 and x.ndim == 3:
+        y, aux = distributed_moe(mp, x, mcfg, pctx.mesh,
+                                 ep_axis=pctx.model_axis,
+                                 dp_axes=pctx.dp_axes)
+        return y, aux["aux_loss"] + aux["z_loss"]
+    y, aux = moe_layer(mp, x2d, mcfg)
+    return y.reshape(shape), aux["aux_loss"] + aux["z_loss"]
+
+
+# ------------------------------------------------------- train blocks ----
+def _layer_theta_window(cfg: ArchConfig, is_global):
+    """Per-layer (rope_theta, window) for local:global interleave."""
+    if cfg.local_global_ratio > 0:
+        theta = jnp.where(is_global, cfg.rope_theta, 10000.0)
+        window = jnp.where(is_global, 0, cfg.local_window)
+        return theta, window
+    return jnp.asarray(cfg.rope_theta), jnp.asarray(cfg.window)
+
+
+def heads_tp_mode(cfg: ArchConfig, pctx: ParallelContext) -> bool:
+    """Heads-TP attention when q-heads divide the model axis; else CP."""
+    if pctx.mesh is None or "model" not in pctx.mesh.shape:
+        return False
+    if pctx.policy == "fsdp":
+        return False  # attention is fully local under FSDP
+    return cfg.n_heads % pctx.mesh.shape["model"] == 0
+
+
+def fsdp_constrain(x, pctx: ParallelContext):
+    """FSDP residency: batch over (dp_axes + model); everything local."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    axes = tuple(pctx.dp_axes) + ("model",)
+    total = 1
+    for a in axes:
+        total *= pctx.mesh.shape[a]
+    if x.shape[0] % total:
+        return x
+    parts = [axes] + [None] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pctx.mesh, P(*parts)))
+
+
+def sp_constrain(x, pctx: ParallelContext, seq_dim: int = 1):
+    """Sequence(context)-parallel constraint: shard the seq dim over the
+    'model' axis. This is how attention parallelizes when head counts
+    don't divide the TP degree (qwen 28q/4kv, hymba 25/5, whisper 6/6):
+    each model rank owns S/TP query rows against the full KV (Megatron
+    context-parallel / ring-attention layout; XLA inserts the KV
+    all-gather and the output resharding)."""
+    if pctx.mesh is None or "model" not in pctx.mesh.shape:
+        return x
+    if pctx.policy == "fsdp":
+        return fsdp_constrain(x, pctx)
+    if x.shape[seq_dim] % pctx.mesh.shape["model"]:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    parts = [None] * x.ndim
+    parts[0] = pctx.dp_axes
+    parts[seq_dim] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pctx.mesh, P(*parts)))
+
+
+def _attn_branch(cfg, p_layer, x, is_global, pctx, positions=None):
+    theta, window = _layer_theta_window(cfg, is_global)
+    heads_tp = heads_tp_mode(cfg, pctx)
+    if cfg.mla is not None:
+        return mla_attention(
+            p_layer["attn"], x, n_heads=cfg.n_heads,
+            kv_lora=cfg.mla.kv_lora, qk_nope=cfg.mla.qk_nope,
+            qk_rope=cfg.mla.qk_rope, v_head=cfg.mla.v_head,
+            rope_theta=cfg.rope_theta, positions=positions,
+            kv_chunk=pctx.kv_chunk,
+            pctx=None if heads_tp else pctx)
+    return gqa_attention(
+        p_layer["attn"], x, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        window=window, qk_norm=cfg.qk_norm, rope_theta=theta,
+        positions=positions, kv_chunk=pctx.kv_chunk,
+        use_rope=(cfg.pos_emb == "rope"),
+        pctx=None if heads_tp else pctx,
+        expand_kv=heads_tp)
+
+
+def _block_train(cfg: ArchConfig, p_layer, x, is_global,
+                 pctx: ParallelContext, enc_out=None, p_cross=None,
+                 p_cross_norm=None):
+    """One block, train/prefill math (no cache). x: (B, S, H)."""
+    B, S, H = x.shape
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.attention_free:
+        h = _norm(cfg, p_layer["norm1"], x)
+        y, _, _ = rwkv6_time_mix_chunked(p_layer["rwkv"], h,
+                                         head_dim=cfg.ssm.head_dim)
+        x = x + y
+        h = _norm(cfg, p_layer["norm2"], x)
+        y, _ = rwkv6_channel_mix(p_layer["rwkv"], h)
+        return x + y, aux
+
+    h = _norm(cfg, p_layer["norm1"], x)
+    attn_out = _attn_branch(cfg, p_layer, h, is_global, pctx)
+    if cfg.hybrid_parallel:
+        ssm_out, _, _ = mamba_mixer(
+            p_layer["mamba"], h, d_state=cfg.ssm.d_state,
+            dt_rank=cfg.ssm.dt_rank or max(1, cfg.d_model // 16))
+        attn_out = 0.5 * (rms_norm(attn_out, p_layer["attn_norm_out"])
+                          + rms_norm(ssm_out, p_layer["ssm_norm_out"]))
+    x = x + attn_out
+    if enc_out is not None:  # whisper decoder cross-attention
+        h = _norm(cfg, p_cross_norm, x)
+        q, _, _ = _project_qkv(p_cross, h, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim_)
+        _, k, v = _project_qkv(p_cross, enc_out, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim_)
+        from repro.models.attention import chunked_attention
+        o = chunked_attention(q, k, v, causal=False, kv_chunk=pctx.kv_chunk)
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim_).astype(x.dtype)
+        x = x + jnp.einsum("bsd,dh->bsh", o, p_cross["wo"]).astype(x.dtype)
+    h = _norm(cfg, p_layer["norm2"], x)
+    y, aux = _apply_ffn(cfg, p_layer, h, pctx, decode=False)
+    return x + y, aux
+
+
+def _encoder(cfg: ArchConfig, params, frames, pctx):
+    """Whisper encoder over stubbed frame embeddings (B, enc_seq, H)."""
+    x = jnp.einsum("bsd,dh->bsh", frames, params["enc_in_proj"],
+                   preferred_element_type=jnp.float32).astype(frames.dtype)
+    pos = sinusoidal_pos(jnp.arange(x.shape[1]), cfg.d_model)
+    x = x + pos[None].astype(x.dtype)
+
+    def body(x, p_layer):
+        h = _norm(cfg, p_layer["norm1"], x)
+        o = gqa_attention(p_layer["attn"], h, n_heads=cfg.n_heads,
+                          n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                          causal=False, rope_theta=0.0,
+                          kv_chunk=pctx.kv_chunk)
+        x = x + o
+        h = _norm(cfg, p_layer["norm2"], x)
+        return x + dense_ffn(p_layer["ffn"], h, cfg.activation,
+                             cfg.gated_ffn), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def _embed(cfg: ArchConfig, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.pos_emb == "sinusoidal":
+        S = tokens.shape[-1]
+        x = x + sinusoidal_pos(jnp.arange(S), cfg.d_model)[None].astype(x.dtype)
+    return x
+
+
+def _unembed(cfg: ArchConfig, params, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...h,hv->...v", h, w,
+                        preferred_element_type=jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:  # mask pad columns
+        col = jnp.arange(cfg.vocab_padded)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def _layer_flags(cfg: ArchConfig, n_scan: int, offset: int = 0):
+    idx = jnp.arange(offset, offset + n_scan)
+    if cfg.local_global_ratio > 0:
+        r = cfg.local_global_ratio + 1
+        return (idx % r) == (r - 1)
+    return jnp.zeros((n_scan,), bool)
+
+
+def forward(cfg: ArchConfig, params, batch: Dict[str, jax.Array],
+            pctx: ParallelContext = LOCAL):
+    """Hidden states for training. batch: tokens (B,S) [+ frames].
+
+    Returns (hidden (B,S,H), aux_loss scalar).
+    """
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    if pctx.mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        if pctx.policy == "fsdp":
+            x = fsdp_constrain(x, pctx)
+        else:
+            x = jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(
+                    pctx.mesh, P(pctx.dp_axes, None, None)))
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _encoder(cfg, params, batch["frames"], pctx)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    n_front = len(params.get("front", []))
+    for i, p_layer in enumerate(params.get("front", [])):
+        x, aux = _block_train(cfg, p_layer, x, jnp.asarray(False), pctx)
+        aux_total += aux
+
+    n_scan = cfg.n_layers - n_front
+    flags = _layer_flags(cfg, n_scan, n_front)
+
+    def body(carry, xs):
+        x, aux_total = carry
+        # resident activation layout between layers: seq over 'model'
+        # (Megatron-SP) — saved-for-backward activations are 1/TP sized.
+        x = sp_constrain(x, pctx)
+        if cfg.enc_dec:
+            p_layer, is_global, p_cross, p_cnorm = xs
+            fn = lambda x: _block_train(cfg, p_layer, x, is_global, pctx,
+                                        enc_out, p_cross, p_cnorm)
+        else:
+            p_layer, is_global = xs
+            fn = lambda x: _block_train(cfg, p_layer, x, is_global, pctx)
+        if pctx.remat:
+            fn = jax.checkpoint(fn)
+        x, aux = fn(x)
+        return (x, aux_total + aux), None
+
+    xs = (params["layers"], flags)
+    if cfg.enc_dec:
+        xs = (params["layers"], flags, params["cross"], params["cross_norm"])
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), xs)
+    x = _norm(cfg, params["final_norm"], x)
+    return x, aux_total
+
+
+def loss_fn(cfg: ArchConfig, params, batch, pctx: ParallelContext = LOCAL,
+            ce_chunks: int = 8):
+    """Next-token CE + MoE aux losses."""
+    h, aux = forward(cfg, params, batch, pctx)
+    B, S, H = h.shape
+    labels = batch["labels"].reshape(B * S)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ce = chunked_cross_entropy(h.reshape(B * S, H).astype(w.dtype), w,
+                               labels, num_chunks=ce_chunks,
+                               n_valid=cfg.vocab)
+    return ce + aux, {"ce": ce, "aux": aux}

@@ -1,0 +1,391 @@
+"""Serving: KV/state cache, prefill, and single-token decode.
+
+Cache layouts per family (stacked over scanned layers):
+  * GQA:    k/v (L, B, C, n_kv, hd). C = sliding window for uniform-SWA
+            archs (mixtral: ring buffer — 500k decode holds 4096 slots),
+            else the full sequence budget.
+  * MLA:    latent ckv (L, B, C, kv_lora) + shared k_rope (L, B, C, r) —
+            the DeepSeek cache-compression carried faithfully.
+  * RWKV6:  matrix state (L, B, nh, hd, hd) + token-shift prevs — O(1).
+  * Mamba:  ssm state (L, B, d_inner, N) + conv state — O(1).
+  * Whisper: decoder self K/V + precomputed encoder cross K/V.
+
+Positions are absolute; RoPE is applied when keys are inserted, so ring
+slots never need re-rotation (attention is permutation-invariant over KV).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    rope_any, _project_qkv)
+from repro.models.layers import apply_rope, rms_norm
+from repro.models.model import (LOCAL, ParallelContext, _apply_ffn, _embed,
+                                _encoder, _layer_flags, _layer_theta_window,
+                                _norm, _unembed, sinusoidal_pos)
+from repro.models.ssm import (mamba_mixer, rwkv6_channel_mix,
+                              rwkv6_time_mix_chunked,
+                              rwkv6_time_mix_recurrent)
+
+
+def cache_len_for(cfg: ArchConfig, seq_budget: int) -> int:
+    if cfg.window > 0 and cfg.local_global_ratio == 0:
+        return min(cfg.window, seq_budget)
+    return seq_budget
+
+
+def _layer_cache_spec(cfg: ArchConfig, batch: int, C: int, dtype):
+    """ShapeDtypeStructs of one layer's cache (stacked by caller)."""
+    spec: Dict[str, Any] = {}
+    if cfg.attention_free:
+        nh = cfg.d_model // cfg.ssm.head_dim
+        spec["state"] = ((batch, nh, cfg.ssm.head_dim, cfg.ssm.head_dim),
+                         jnp.float32)
+        spec["tm_prev"] = ((batch, cfg.d_model), dtype)
+        spec["cm_prev"] = ((batch, cfg.d_model), dtype)
+        return spec
+    if cfg.mla is not None:
+        spec["ckv"] = ((batch, C, cfg.mla.kv_lora), dtype)
+        spec["kr"] = ((batch, C, cfg.mla.qk_rope), dtype)
+    else:
+        spec["k"] = ((batch, C, cfg.n_kv_heads, cfg.head_dim_), dtype)
+        spec["v"] = ((batch, C, cfg.n_kv_heads, cfg.head_dim_), dtype)
+    if cfg.hybrid_parallel:
+        di = cfg.ssm.d_inner or 2 * cfg.d_model
+        spec["ssm"] = ((batch, di, cfg.ssm.d_state), jnp.float32)
+        spec["conv"] = ((batch, cfg.ssm.d_conv - 1, di), dtype)
+    return spec
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_budget: int,
+               dtype=jnp.bfloat16, for_spec: bool = False):
+    """Zero cache (or ShapeDtypeStructs when for_spec=True)."""
+    C = cache_len_for(cfg, seq_budget)
+    n_front = cfg.moe.first_k_dense if cfg.moe else 0
+    n_scan = cfg.n_layers - n_front
+
+    def make(shape_dtype, lead):
+        shape, dt = shape_dtype
+        full = (lead, *shape) if lead else shape
+        if for_spec:
+            return jax.ShapeDtypeStruct(full, dt)
+        return jnp.zeros(full, dt)
+
+    layer_spec = _layer_cache_spec(cfg, batch, C, dtype)
+    cache: Dict[str, Any] = {
+        "pos": (jax.ShapeDtypeStruct((), jnp.int32) if for_spec
+                else jnp.zeros((), jnp.int32)),
+        "layers": {k: make(v, n_scan) for k, v in layer_spec.items()},
+        "front": [{k: make(v, 0) for k, v in layer_spec.items()}
+                  for _ in range(n_front)],
+    }
+    if cfg.enc_dec:
+        kv = (batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim_)
+        cache["cross_k"] = make((kv, dtype), cfg.n_layers)
+        cache["cross_v"] = make((kv, dtype), cfg.n_layers)
+    return cache
+
+
+# ------------------------------------------------------------- decode ----
+def _attn_decode(cfg: ArchConfig, p_layer, h, cache_l, pos, is_global,
+                 pctx: ParallelContext):
+    """h: (B, 1, H). Returns (attn_out (B,1,H), new cache slices)."""
+    B = h.shape[0]
+    theta, window = _layer_theta_window(cfg, is_global)
+    new = {}
+    if cfg.mla is not None:
+        m = cfg.mla
+        q = jnp.einsum("bsh,hd->bsd", h, p_layer["attn"]["wq"],
+                       preferred_element_type=jnp.float32).astype(h.dtype)
+        q = q.reshape(B, 1, cfg.n_heads, m.qk_nope + m.qk_rope)
+        q_n, q_r = q[..., :m.qk_nope], q[..., m.qk_nope:]
+        pos_b = jnp.full((B, 1), pos)
+        q_r = apply_rope(q_r, pos_b, cfg.rope_theta)
+        q = jnp.concatenate([q_n, q_r], axis=-1)[:, 0]
+        ckv = jnp.einsum("bsh,hc->bsc", h, p_layer["attn"]["w_dkv"],
+                         preferred_element_type=jnp.float32).astype(h.dtype)
+        ckv = rms_norm(ckv, p_layer["attn"]["ckv_norm"])
+        kr = jnp.einsum("bsh,hr->bsr", h, p_layer["attn"]["w_kr"],
+                        preferred_element_type=jnp.float32).astype(h.dtype)
+        kr = apply_rope(kr[:, :, None, :], pos_b, cfg.rope_theta)[:, :, 0]
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["ckv"], ckv, pos, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["kr"], kr, pos, axis=1)
+        new["ckv"], new["kr"] = ckv_c, kr_c
+        from repro.models.attention import mla_expand_kv
+        k, v = mla_expand_kv(p_layer["attn"], ckv_c, kr_c, cfg.n_heads,
+                             m.qk_nope, m.v_head)
+        o = decode_attention(q, k, v, kv_len=pos + 1,
+                             scale=(m.qk_nope + m.qk_rope) ** -0.5)
+        o = o.reshape(B, 1, cfg.n_heads * m.v_head).astype(h.dtype)
+    else:
+        pos_b = jnp.full((B, 1), pos)
+        q, k, v = _project_qkv(p_layer["attn"], h, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim_,
+                               qk_norm=cfg.qk_norm, use_rope=False)
+        if cfg.pos_emb == "rope":
+            q = rope_any(q, pos_b, theta)
+            k = rope_any(k, pos_b, theta)
+        C = cache_l["k"].shape[1]
+        slot = pos % C  # ring buffer when C < seq budget (uniform SWA)
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["k"], k, slot, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["v"], v, slot, axis=1)
+        new["k"], new["v"] = k_c, v_c
+        kv_len = jnp.minimum(pos + 1, C)
+        win = jnp.where(jnp.asarray(C) == cfg.window, 0, window)
+        o = decode_attention(q[:, 0], k_c, v_c, kv_len=kv_len, window=win)
+        o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim_).astype(h.dtype)
+    out = jnp.einsum("bsd,dh->bsh", o,
+                     p_layer["attn"]["wo"]).astype(h.dtype)
+    return out, new
+
+
+def _block_decode(cfg: ArchConfig, p_layer, x, cache_l, pos, is_global,
+                  pctx: ParallelContext, p_cross=None, p_cnorm=None,
+                  cross_kv=None):
+    """x: (B, 1, H) -> (x, new cache slices)."""
+    B = x.shape[0]
+    new: Dict[str, Any] = {}
+    if cfg.attention_free:
+        h = _norm(cfg, p_layer["norm1"], x)
+        y, state, tm_prev = rwkv6_time_mix_recurrent(
+            p_layer["rwkv"], h, head_dim=cfg.ssm.head_dim,
+            state=cache_l["state"], x_prev=cache_l["tm_prev"])
+        new["state"], new["tm_prev"] = state, tm_prev
+        x = x + y
+        h = _norm(cfg, p_layer["norm2"], x)
+        y, cm_prev = rwkv6_channel_mix(p_layer["rwkv"], h,
+                                       x_prev=cache_l["cm_prev"])
+        new["cm_prev"] = cm_prev
+        return x + y, new
+
+    h = _norm(cfg, p_layer["norm1"], x)
+    attn_out, new_attn = _attn_decode(cfg, p_layer, h, cache_l, pos,
+                                      is_global, pctx)
+    new.update(new_attn)
+    if cfg.hybrid_parallel:
+        ssm_out, ssm_state, conv_state = mamba_mixer(
+            p_layer["mamba"], h, d_state=cfg.ssm.d_state,
+            dt_rank=cfg.ssm.dt_rank or max(1, cfg.d_model // 16),
+            ssm_state=cache_l["ssm"], conv_state=cache_l["conv"])
+        new["ssm"], new["conv"] = ssm_state, conv_state
+        attn_out = 0.5 * (rms_norm(attn_out, p_layer["attn_norm_out"])
+                          + rms_norm(ssm_out, p_layer["ssm_norm_out"]))
+    x = x + attn_out
+    if cross_kv is not None:  # whisper decoder
+        h = _norm(cfg, p_cnorm, x)
+        q, _, _ = _project_qkv(p_cross, h, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim_)
+        ck, cv = cross_kv
+        o = decode_attention(q[:, 0], ck, cv, kv_len=ck.shape[1])
+        o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim_).astype(x.dtype)
+        x = x + jnp.einsum("bsd,dh->bsh", o, p_cross["wo"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+    h = _norm(cfg, p_layer["norm2"], x)
+    y, _ = _apply_ffn(cfg, p_layer, h[:, 0], pctx, decode=True)
+    return x + y[:, None], new
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens: jax.Array,
+                pctx: ParallelContext = LOCAL):
+    """One token for every sequence. tokens: (B,). Returns (logits, cache)."""
+    pos = cache["pos"]
+    x = params["embed"][tokens][:, None, :]  # (B, 1, H)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_pos(jnp.full((1,), pos), cfg.d_model)[None].astype(
+            x.dtype)
+
+    new_front = []
+    for p_layer, c_l in zip(params.get("front", []), cache["front"]):
+        x, nc = _block_decode(cfg, p_layer, x, c_l, pos, jnp.asarray(False),
+                              pctx)
+        new_front.append(nc)
+
+    n_front = len(new_front)
+    n_scan = cfg.n_layers - n_front
+    flags = _layer_flags(cfg, n_scan, n_front)
+
+    def body(x, xs):
+        if cfg.enc_dec:
+            p_layer, c_l, is_global, p_cross, p_cnorm, ck, cv = xs
+            x, nc = _block_decode(cfg, p_layer, x, c_l, pos, is_global,
+                                  pctx, p_cross, p_cnorm, (ck, cv))
+        else:
+            p_layer, c_l, is_global = xs
+            x, nc = _block_decode(cfg, p_layer, x, c_l, pos, is_global, pctx)
+        return x, nc
+
+    xs = (params["layers"], cache["layers"], flags)
+    if cfg.enc_dec:
+        xs = xs + (params["cross"], params["cross_norm"],
+                   cache["cross_k"], cache["cross_v"])
+    x, new_layers = jax.lax.scan(body, x, xs)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x[:, 0])
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    new_cache["front"] = new_front
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ------------------------------------------------------------ prefill ----
+def prefill(cfg: ArchConfig, params, batch: Dict[str, jax.Array],
+            seq_budget: int, pctx: ParallelContext = LOCAL,
+            dtype=jnp.bfloat16):
+    """Process the full prompt, build the cache, return last-token logits.
+
+    Implemented as chunked-attention forward + per-layer cache collection
+    via scan outputs. batch: tokens (B, S) [+ frames for whisper].
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    C = cache_len_for(cfg, seq_budget)
+    x = _embed(cfg, params, tokens)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _encoder(cfg, params, batch["frames"], pctx)
+
+    cache = init_cache(cfg, B, seq_budget, dtype)
+
+    def collect_kv(k, v):
+        """keep the last C positions at their ring slots (slot = pos % C)."""
+        if S >= C:
+            k, v = k[:, S - C:], v[:, S - C:]
+            if S % C:
+                k = jnp.roll(k, S % C, axis=1)
+                v = jnp.roll(v, S % C, axis=1)
+            return k.astype(dtype), v.astype(dtype)
+        pad = ((0, 0), (0, C - S), (0, 0), (0, 0))
+        return (jnp.pad(k, pad).astype(dtype), jnp.pad(v, pad).astype(dtype))
+
+    new_front = []
+    for p_layer, c_l in zip(params.get("front", []), cache["front"]):
+        x, nc = _block_prefill(cfg, p_layer, x, jnp.asarray(False), pctx,
+                               collect_kv, C, dtype)
+        new_front.append(nc)
+
+    n_front = len(new_front)
+    n_scan = cfg.n_layers - n_front
+    flags = _layer_flags(cfg, n_scan, n_front)
+
+    def body(x, xs):
+        from repro.models.model import sp_constrain
+        x = sp_constrain(x, pctx)  # resident seq-sharded activations
+        if cfg.enc_dec:
+            p_layer, is_global, p_cross, p_cnorm = xs
+            x, nc = _block_prefill(cfg, p_layer, x, is_global, pctx,
+                                   collect_kv, C, dtype, enc_out, p_cross,
+                                   p_cnorm)
+        else:
+            p_layer, is_global = xs
+            x, nc = _block_prefill(cfg, p_layer, x, is_global, pctx,
+                                   collect_kv, C, dtype)
+        return x, nc
+
+    xs = (params["layers"], flags)
+    if cfg.enc_dec:
+        xs = (params["layers"], flags, params["cross"], params["cross_norm"])
+    x, new_layers = jax.lax.scan(body, x, xs)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x[:, -1])
+
+    cache["layers"] = new_layers
+    cache["front"] = new_front
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    if cfg.enc_dec:
+        # cross K/V computed once per layer from encoder output
+        def cross_kv(p_cross):
+            _, k, v = _project_qkv(p_cross, enc_out, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim_)
+            return k.astype(dtype), v.astype(dtype)
+        ck, cv = jax.vmap(cross_kv)(params["cross"])
+        cache["cross_k"], cache["cross_v"] = ck, cv
+    return logits, cache
+
+
+def _block_prefill(cfg: ArchConfig, p_layer, x, is_global, pctx,
+                   collect_kv, C, dtype, enc_out=None, p_cross=None,
+                   p_cnorm=None):
+    """Train-math block that additionally returns its cache slice."""
+    B, S, H = x.shape
+    new: Dict[str, Any] = {}
+    if cfg.attention_free:
+        h = _norm(cfg, p_layer["norm1"], x)
+        y, state, tm_prev = rwkv6_time_mix_chunked(
+            p_layer["rwkv"], h, head_dim=cfg.ssm.head_dim)
+        new["state"], new["tm_prev"] = state, tm_prev
+        x = x + y
+        h = _norm(cfg, p_layer["norm2"], x)
+        y, cm_prev = rwkv6_channel_mix(p_layer["rwkv"], h)
+        new["cm_prev"] = cm_prev
+        return x + y, new
+
+    theta, window = _layer_theta_window(cfg, is_global)
+    h = _norm(cfg, p_layer["norm1"], x)
+    if cfg.mla is not None:
+        m = cfg.mla
+        # recompute latent kv for the cache (cheap: two skinny GEMMs)
+        ckv = jnp.einsum("bsh,hc->bsc", h, p_layer["attn"]["w_dkv"],
+                         preferred_element_type=jnp.float32).astype(h.dtype)
+        ckv = rms_norm(ckv, p_layer["attn"]["ckv_norm"])
+        kr = jnp.einsum("bsh,hr->bsr", h, p_layer["attn"]["w_kr"],
+                        preferred_element_type=jnp.float32).astype(h.dtype)
+        kr = apply_rope(kr[:, :, None, :], jnp.arange(S)[None],
+                        cfg.rope_theta)[:, :, 0]
+        new["ckv"] = ckv[:, -C:].astype(dtype) if S >= C else jnp.pad(
+            ckv, ((0, 0), (0, C - S), (0, 0))).astype(dtype)
+        new["kr"] = kr[:, -C:].astype(dtype) if S >= C else jnp.pad(
+            kr, ((0, 0), (0, C - S), (0, 0))).astype(dtype)
+        from repro.models.model import _attn_branch
+        attn_out = _attn_branch(cfg, p_layer, h, is_global, pctx)
+    else:
+        q, k, v = _project_qkv(p_layer["attn"], h, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim_,
+                               qk_norm=cfg.qk_norm, use_rope=False)
+        if cfg.pos_emb == "rope":
+            pos = jnp.arange(S)[None]
+            q = rope_any(q, pos, theta)
+            k = rope_any(k, pos, theta)
+        new["k"], new["v"] = collect_kv(k, v)  # cache keeps n_kv heads
+        from repro.models.model import heads_tp_mode, sp_constrain
+        if heads_tp_mode(cfg, pctx) and cfg.n_heads != cfg.n_kv_heads:
+            g = cfg.n_heads // cfg.n_kv_heads
+            k, v = jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2)
+        elif not heads_tp_mode(cfg, pctx):
+            q = sp_constrain(q, pctx)
+        o = chunked_attention(q, k, v, causal=True, window=window,
+                              kv_chunk=pctx.kv_chunk)
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim_).astype(x.dtype)
+        attn_out = jnp.einsum("bsd,dh->bsh", o, p_layer["attn"]["wo"],
+                              preferred_element_type=jnp.float32
+                              ).astype(x.dtype)
+    if cfg.hybrid_parallel:
+        ssm_out, ssm_state, conv_state = mamba_mixer(
+            p_layer["mamba"], h, d_state=cfg.ssm.d_state,
+            dt_rank=cfg.ssm.dt_rank or max(1, cfg.d_model // 16))
+        new["ssm"], new["conv"] = ssm_state, conv_state
+        attn_out = 0.5 * (rms_norm(attn_out, p_layer["attn_norm_out"])
+                          + rms_norm(ssm_out, p_layer["ssm_norm_out"]))
+    x = x + attn_out
+    if enc_out is not None:
+        h = _norm(cfg, p_cnorm, x)
+        q, _, _ = _project_qkv(p_cross, h, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim_)
+        _, k, v = _project_qkv(p_cross, enc_out, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim_)
+        o = chunked_attention(q, k, v, causal=False, kv_chunk=pctx.kv_chunk)
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim_).astype(x.dtype)
+        x = x + jnp.einsum("bsd,dh->bsh", o, p_cross["wo"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+    h = _norm(cfg, p_layer["norm2"], x)
+    y, _ = _apply_ffn(cfg, p_layer, h, pctx, decode=False)
+    return x + y, new

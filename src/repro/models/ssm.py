@@ -1,0 +1,261 @@
+"""Attention-free sequence mixers: RWKV-6 (Finch) and Mamba (for Hymba).
+
+RWKV-6 ships two equivalent forms (tested against each other):
+  * ``rwkv6_recurrent`` — exact per-step recurrence (decode + oracle);
+  * ``rwkv6_chunked``   — matmul (MXU-friendly) chunk-parallel form used for
+    train/prefill: intra-chunk attention-like matrices + inter-chunk state
+    carry, with log-space decay normalization at the chunk midpoint.
+    Per-step log-decay is clamped to >= -8 (decay <= e^-8 per step is
+    numerically zero anyway); with chunk=16 the worst ratio inside a chunk
+    is e^64 < fp32 max.
+
+Mamba uses the selective-SSM recurrence via lax.scan (state is tiny:
+d_inner x 16), plus an O(1)-state decode step.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+LOGW_MIN = -8.0
+
+
+# ------------------------------------------------------------- RWKV-6 ----
+def init_rwkv6_params(key, d_model: int, head_dim: int = 64,
+                      decay_lora: int = 64, d_ff: int = 0,
+                      dtype=jnp.bfloat16) -> dict:
+    n_heads = d_model // head_dim
+    d_ff = d_ff or int(3.5 * d_model)
+    ks = jax.random.split(key, 12)
+    s = d_model ** -0.5
+    nrm = lambda k, shp, sc: (jax.random.normal(k, shp) * sc).astype(dtype)
+    return {
+        "mix_r": jnp.full((d_model,), 0.5, dtype),
+        "mix_k": jnp.full((d_model,), 0.5, dtype),
+        "mix_v": jnp.full((d_model,), 0.5, dtype),
+        "mix_g": jnp.full((d_model,), 0.5, dtype),
+        "mix_w": jnp.full((d_model,), 0.5, dtype),
+        "wr": nrm(ks[0], (d_model, d_model), s),
+        "wk": nrm(ks[1], (d_model, d_model), s),
+        "wv": nrm(ks[2], (d_model, d_model), s),
+        "wg": nrm(ks[3], (d_model, d_model), s),
+        "wo": nrm(ks[4], (d_model, d_model), s),
+        # data-dependent decay (the Finch contribution): w0 + LoRA
+        "w0": jnp.full((d_model,), -2.0, dtype),
+        "w_lora_a": nrm(ks[5], (d_model, decay_lora), s),
+        "w_lora_b": nrm(ks[6], (decay_lora, d_model), decay_lora ** -0.5),
+        "u": nrm(ks[7], (n_heads, head_dim), 0.1),
+        "ln_out": jnp.zeros((d_model,), dtype),
+        # channel mix
+        "cmix_k": jnp.full((d_model,), 0.5, dtype),
+        "cmix_r": jnp.full((d_model,), 0.5, dtype),
+        "ck": nrm(ks[8], (d_model, d_ff), s),
+        "cv": nrm(ks[9], (d_ff, d_model), d_ff ** -0.5),
+        "cr": nrm(ks[10], (d_model, d_model), s),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None):
+    """x: (B, T, D) -> x shifted right by one; prev fills position 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None] if prev.ndim == 2 else prev
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv6_rkvgw(params, x, x_prev):
+    """Project token-shift mixes into r,k,v,g and log-decay lw."""
+    xs = _token_shift(x, x_prev)
+    mix = lambda m: x + (xs - x) * m
+    r = mix(params["mix_r"]) @ params["wr"]
+    k = mix(params["mix_k"]) @ params["wk"]
+    v = mix(params["mix_v"]) @ params["wv"]
+    g = mix(params["mix_g"]) @ params["wg"]
+    xw = mix(params["mix_w"])
+    w_dd = jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    lw = -jnp.exp(
+        jnp.clip((params["w0"] + w_dd).astype(jnp.float32), -20.0, 2.0))
+    lw = jnp.maximum(lw, LOGW_MIN)  # clamp for the chunked form
+    return r, k, v, g, lw
+
+
+def _heads(z, n_heads, hd):
+    B, T, _ = z.shape
+    return z.reshape(B, T, n_heads, hd)
+
+
+def rwkv6_time_mix_recurrent(params, x, *, head_dim: int = 64,
+                             state: Optional[jax.Array] = None,
+                             x_prev: Optional[jax.Array] = None):
+    """Exact recurrence. x: (B,T,D). Returns (y, state (B,h,hd,hd), x_last)."""
+    B, T, D = x.shape
+    nh = D // head_dim
+    r, k, v, g, lw = _rwkv6_rkvgw(params, x, x_prev)
+    r, k, v = (_heads(z, nh, head_dim).astype(jnp.float32) for z in (r, k, v))
+    lw = _heads(lw, nh, head_dim)
+    u = params["u"].astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, nh, head_dim, head_dim), jnp.float32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, lw_t = xs  # (B, nh, hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,nh,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., None] * kv)
+        S = jnp.exp(lw_t)[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(z, 1, 0) for z in (r, k, v, lw))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, D)
+    y = rms_norm(y, params["ln_out"])
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["wo"], state, x[:, -1]
+
+
+def rwkv6_time_mix_chunked(params, x, *, head_dim: int = 64,
+                           chunk: int = 16,
+                           state: Optional[jax.Array] = None,
+                           x_prev: Optional[jax.Array] = None):
+    """Chunk-parallel (matmul) form; equals the recurrent form to ~1e-4."""
+    B, T, D = x.shape
+    nh = D // head_dim
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+    r, k, v, g, lw = _rwkv6_rkvgw(params, x, x_prev)
+    r, k, v = (_heads(z, nh, head_dim).astype(jnp.float32) for z in (r, k, v))
+    lw = _heads(lw, nh, head_dim)
+    u = params["u"].astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, nh, head_dim, head_dim), jnp.float32)
+
+    rc = r.reshape(B, n, chunk, nh, head_dim).swapaxes(0, 1)
+    kc = k.reshape(B, n, chunk, nh, head_dim).swapaxes(0, 1)
+    vc = v.reshape(B, n, chunk, nh, head_dim).swapaxes(0, 1)
+    lwc = lw.reshape(B, n, chunk, nh, head_dim).swapaxes(0, 1)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+
+    def body(S, xs):
+        r_, k_, v_, lw_ = xs                     # (B, c, nh, hd)
+        cum = jnp.cumsum(lw_, axis=1)            # inclusive cumsum of log w
+        c0 = 0.5 * cum[:, -1:]                   # midpoint normalizer
+        # q~_t = r_t * exp(cum_{t-1} - c0);  cum_{t-1} = cum_t - lw_t
+        q_t = r_ * jnp.exp(cum - lw_ - c0)
+        k_s = k_ * jnp.exp(c0 - cum)
+        scores = jnp.einsum("bthd,bshd->bhts", q_t, k_s) * tri[None, None]
+        scores = scores + jnp.einsum(
+            "bthd,bthd->bht", r_ * u[None, None], k_)[..., None] \
+            * jnp.eye(chunk)[None, None]
+        y = jnp.einsum("bhts,bshd->bthd", scores, v_)
+        # inter-chunk: y_t += (r_t * exp(cum_{t-1})) @ S_in
+        y = y + jnp.einsum("bthk,bhkv->bthv", r_ * jnp.exp(cum - lw_), S)
+        # state update: S_out = exp(cum_c) S_in + sum_s exp(cum_c - cum_s) kv
+        k_dec = k_ * jnp.exp(cum[:, -1:] - cum)
+        S = jnp.exp(cum[:, -1])[..., None] * S \
+            + jnp.einsum("bshk,bshv->bhkv", k_dec, v_)
+        return S, y
+
+    state, ys = jax.lax.scan(body, state, (rc, kc, vc, lwc))
+    y = ys.swapaxes(0, 1).reshape(B, T, D)
+    y = rms_norm(y, params["ln_out"])
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["wo"], state, x[:, -1]
+
+
+def rwkv6_channel_mix(params, x, x_prev: Optional[jax.Array] = None):
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * params["cmix_k"]
+    xr = x + (xs - x) * params["cmix_r"]
+    k = jnp.einsum("btd,df->btf", xk, params["ck"],
+                   preferred_element_type=jnp.float32)
+    k = jnp.square(jax.nn.relu(k)).astype(x.dtype)
+    kv = jnp.einsum("btf,fd->btd", k, params["cv"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    r = jax.nn.sigmoid((xr @ params["cr"]).astype(jnp.float32)).astype(x.dtype)
+    return r * kv, x[:, -1]
+
+
+# -------------------------------------------------------------- Mamba ----
+def init_mamba_params(key, d_model: int, d_inner: int, *, d_state: int = 16,
+                      d_conv: int = 4, dt_rank: Optional[int] = None,
+                      dtype=jnp.bfloat16) -> dict:
+    if dt_rank is None:
+        dt_rank = max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None],
+                 (d_inner, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d_model, 2 * d_inner)) * s
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner)) * 0.2
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (d_inner, dt_rank + 2 * d_state))
+                   * d_inner ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, d_inner))
+                    * dt_rank ** -0.5).astype(dtype),
+        "dt_bias": jnp.zeros((d_inner,), dtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (d_inner, d_model))
+                     * d_inner ** -0.5).astype(dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, conv_state=None):
+    """x: (B,T,C); w: (K,C). Returns (y, new_conv_state (B,K-1,C))."""
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    return y, xp[:, -(K - 1):]
+
+
+def mamba_mixer(params, x, *, d_state: int = 16, dt_rank: int,
+                ssm_state: Optional[jax.Array] = None,
+                conv_state: Optional[jax.Array] = None):
+    """Selective SSM. x: (B,T,D). Returns (y, ssm_state, conv_state)."""
+    B, T, D = x.shape
+    xz = jnp.einsum("btd,de->bte", x, params["in_proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    d_inner = x_in.shape[-1]
+    x_c, conv_state = _causal_depthwise_conv(
+        x_in, params["conv_w"], params["conv_b"], conv_state)
+    x_c = jax.nn.silu(x_c.astype(jnp.float32))
+
+    proj = jnp.einsum("bti,ie->bte", x_c.astype(x.dtype), params["x_proj"],
+                      preferred_element_type=jnp.float32)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,ri->bti", dt.astype(x.dtype), params["dt_proj"],
+                   preferred_element_type=jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))        # (B,T,d_inner)
+    A = -jnp.exp(params["A_log"])                        # (d_inner, N)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, d_inner, d_state), jnp.float32)
+
+    def step(h, xs):
+        dt_t, B_t, C_t, x_t = xs   # (B,di) (B,N) (B,N) (B,di)
+        dA = jnp.exp(dt_t[..., None] * A[None])          # (B,di,N)
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("bin,bn->bi", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bc, 1, 0),
+          jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(x_c, 1, 0))
+    ssm_state, ys = jax.lax.scan(step, ssm_state, xs)
+    y = jnp.moveaxis(ys, 0, 1) + params["D"] * x_c       # (B,T,di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bti,id->btd", y.astype(x.dtype), params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, ssm_state, conv_state

@@ -1,0 +1,37 @@
+"""LR schedules: linear warmup + {cosine, linear, WSD}.
+
+WSD (Warmup-Stable-Decay) is MiniCPM's schedule [arXiv:2404.06395] —
+assigned arch minicpm-2b trains with it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int, total: int, min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, warmup: int, total: int, decay_frac: float = 0.1,
+        min_ratio: float = 0.01):
+    """Warmup -> stable (lr=1) -> fast decay over the last decay_frac."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(1.0, warmup)
+    decay_start = total * (1.0 - decay_frac)
+    prog = jnp.clip((step - decay_start)
+                    / jnp.maximum(1.0, total - decay_start), 0, 1)
+    decay = min_ratio ** prog  # exponential anneal (MiniCPM uses ~exp)
+    out = jnp.where(step < warmup, warm,
+                    jnp.where(step < decay_start, 1.0, decay))
+    return out
+
+
+def constant(step, **_):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))
+
+
+SCHEDULES = {"cosine": warmup_cosine, "wsd": wsd, "constant": constant}

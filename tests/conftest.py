@@ -1,0 +1,11 @@
+"""Test config. NOTE: no XLA_FLAGS here on purpose — unit/smoke tests see
+ONE device; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,46 @@
+"""Synthetic data pipeline: determinism, seekability, learnable structure."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLM
+
+
+def test_deterministic_and_seekable():
+    cfg = DataConfig(vocab=256, seq_len=32, global_batch=4, seed=7)
+    a, b = SyntheticLM(cfg), SyntheticLM(cfg)
+    for _ in range(3):
+        ba, bb = a.next(), b.next()
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+    # seek: restore state and resume identically
+    state = a.state_dict()
+    nxt = a.next()
+    c = SyntheticLM(cfg)
+    c.load_state_dict(state)
+    np.testing.assert_array_equal(c.next()["tokens"], nxt["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=64, seq_len=16, global_batch=2, seed=0)
+    b = SyntheticLM(cfg).next()
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_markov_structure_is_learnable():
+    """Next token is one of `branch` successors — conditional entropy is
+    far below log(vocab) (uniform noise would be unlearnable)."""
+    cfg = DataConfig(vocab=512, seq_len=64, global_batch=32, seed=1,
+                     branch=4)
+    pipe = SyntheticLM(cfg)
+    b = pipe.next()
+    succ = {}
+    for row_t, row_l in zip(b["tokens"], b["labels"]):
+        for t, l in zip(row_t, row_l):
+            succ.setdefault(int(t), set()).add(int(l))
+    sizes = [len(v) for v in succ.values()]
+    assert np.mean(sizes) <= cfg.branch + 0.5
+
+
+def test_frames_emitted_for_audio():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=2, seed=0,
+                     frames=10, d_frame=12)
+    b = SyntheticLM(cfg).next()
+    assert b["frames"].shape == (2, 10, 12)

@@ -1,0 +1,80 @@
+"""Fault-tolerance plumbing: watchdog, straggler tracker, retry/restore,
+heartbeat, elastic mesh factorization."""
+import json
+import time
+
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.elastic import best_mesh_shape
+from repro.distributed.fault_tolerance import (StepWatchdog,
+                                               StragglerTracker, retry_step,
+                                               write_heartbeat)
+
+
+def test_watchdog_fires_on_slow_step():
+    fired = []
+    wd = StepWatchdog(factor=1.0, min_deadline=0.05,
+                      on_timeout=lambda dl: fired.append(dl))
+    with wd.step():
+        time.sleep(0.15)
+    assert wd.fired == 1 and fired
+
+
+def test_watchdog_quiet_on_fast_step():
+    wd = StepWatchdog(factor=5.0, min_deadline=1.0)
+    with wd.step():
+        pass
+    assert wd.fired == 0
+    assert wd.ema is not None
+
+
+def test_straggler_tracker_flags_outlier():
+    tr = StragglerTracker(k_sigma=3.0)
+    for _ in range(30):
+        tr.record(0.10)
+    assert tr.record(1.0) is True       # 10x step = straggler
+    assert tr.record(0.10) is False
+    s = tr.stats()
+    assert s.max_delay_ratio >= 5.0
+    assert s.median == pytest.approx(0.10, rel=0.2)
+
+
+def test_retry_step_recovers_and_restores():
+    calls = {"n": 0, "restored": False}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    out = retry_step(flaky, max_retries=2,
+                     restore_fn=lambda: calls.update(restored=True))
+    assert out == "ok" and calls["n"] == 3 and calls["restored"]
+
+
+def test_retry_step_raises_after_budget():
+    def always_fails():
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RuntimeError):
+        retry_step(always_fails, max_retries=1)
+
+
+def test_heartbeat_atomic(tmp_path):
+    p = str(tmp_path / "hb.json")
+    write_heartbeat(p, 42, {"loss": 1.5})
+    d = json.load(open(p))
+    assert d["step"] == 42 and d["loss"] == 1.5
+
+
+def test_best_mesh_shape_respects_arch():
+    cfg = get_config("mixtral-8x7b")  # 32 heads, 8 experts
+    for n in (256, 128, 64, 8, 6, 3):
+        d, m = best_mesh_shape(n, cfg)
+        assert d * m == n
+        assert cfg.n_heads % m == 0
+        assert cfg.moe.num_experts % m == 0 or m % cfg.moe.num_experts == 0
+    # degenerate: prime count falls back to pure DP
+    assert best_mesh_shape(7, cfg)[1] == 1

@@ -1,0 +1,119 @@
+"""Gate + routing-plan invariants (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gate import GateConfig, expert_capacity, gate
+from repro.core.routing import (combine_tokens, make_routing_plan,
+                                packed_combine_scale, permute_tokens)
+
+
+def make_gate(T=64, H=32, E=8, k=2, cf=2.0, seed=0, score_fn="softmax"):
+    cfg = GateConfig(num_experts=E, top_k=k, capacity_factor=cf,
+                     score_fn=score_fn)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (T, H), jnp.float32)
+    wg = jax.random.normal(ks[1], (H, E), jnp.float32) * 0.1
+    return cfg, x, wg
+
+
+def test_gate_shapes_and_normalization():
+    cfg, x, wg = make_gate()
+    out = gate(cfg, x, wg)
+    assert out.combine_weights.shape == (64, 2)
+    assert out.expert_indices.shape == (64, 2)
+    np.testing.assert_allclose(
+        np.asarray(out.combine_weights.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(out.expert_indices) >= 0).all()
+    assert (np.asarray(out.expert_indices) < cfg.num_experts).all()
+
+
+def test_gate_topk_is_argmax_consistent():
+    cfg, x, wg = make_gate(k=1)
+    out = gate(cfg, x, wg)
+    ref = np.argmax(np.asarray(out.affinities), -1)
+    np.testing.assert_array_equal(np.asarray(out.expert_indices[:, 0]), ref)
+
+
+def test_gate_aux_losses_finite_and_positive():
+    cfg, x, wg = make_gate()
+    out = gate(cfg, x, wg)
+    assert float(out.aux_loss) > 0
+    assert float(out.z_loss) > 0
+    assert np.isfinite(float(out.aux_loss))
+
+
+def test_capacity_alignment():
+    cfg = GateConfig(num_experts=8, top_k=2, capacity_factor=1.0)
+    cap = expert_capacity(cfg, 4096)
+    assert cap % 128 == 0
+    assert cap >= 4096 * 2 / 8
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    T=st.integers(8, 200),
+    E=st.integers(2, 16),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+    cf=st.floats(0.5, 4.0),
+)
+def test_routing_plan_invariants(T, E, k, seed, cf):
+    """Paper T_phi invariants: slot validity, capacity bound, bijectivity."""
+    k = min(k, E)
+    cfg, x, wg = make_gate(T=T, H=16, E=E, k=k, cf=cf, seed=seed)
+    out = gate(cfg, x, wg)
+    plan = make_routing_plan(cfg, out)
+    gs = np.asarray(plan.group_sizes)
+    go = np.asarray(plan.group_offsets)
+    pos = np.asarray(plan.packed_pos)
+
+    # capacity respected
+    assert (gs <= plan.capacity).all()
+    # tile-aligned offsets
+    assert (go % 128 == 0).all()
+    # kept rows land inside their expert's [offset, offset+size) range;
+    # every kept row is unique (write-conflict-free packing)
+    kept = pos[pos < plan.num_rows]
+    assert len(np.unique(kept)) == len(kept)
+    e_flat = np.asarray(out.expert_indices).reshape(-1)
+    p_flat = pos.reshape(-1)
+    for r, e in zip(p_flat, e_flat):
+        if r < plan.num_rows:
+            assert go[e] <= r < go[e] + gs[e]
+    # total kept == sum of group sizes
+    assert (p_flat < plan.num_rows).sum() == gs.sum()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_permute_combine_roundtrip(seed):
+    """combine(permute(x)) with identity experts == sum_k w_k * x."""
+    cfg, x, wg = make_gate(T=96, H=16, E=4, k=2, cf=8.0, seed=seed)
+    out = gate(cfg, x, wg)
+    plan = make_routing_plan(cfg, out)
+    xp = permute_tokens(x, plan, cfg.top_k)
+    y = combine_tokens(xp, plan, out.combine_weights)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_packed_scale_matches_weights():
+    cfg, x, wg = make_gate(T=64, H=16, E=4, k=2, cf=8.0)
+    out = gate(cfg, x, wg)
+    plan = make_routing_plan(cfg, out)
+    scale = np.asarray(packed_combine_scale(plan, out.combine_weights, 2))
+    pos = np.asarray(plan.packed_pos)
+    w = np.asarray(out.combine_weights)
+    for t in range(64):
+        for j in range(2):
+            if pos[t, j] < plan.num_rows:
+                assert abs(scale[pos[t, j]] - w[t, j]) < 1e-6
+
+
+def test_sigmoid_gate():
+    cfg, x, wg = make_gate(score_fn="sigmoid")
+    out = gate(cfg, x, wg)
+    assert np.isfinite(np.asarray(out.combine_weights)).all()

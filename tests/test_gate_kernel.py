@@ -1,0 +1,52 @@
+"""Fused gate kernel vs pure-jnp oracle: shape/dtype sweep + VJP."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gate.ops import fused_gate
+from repro.kernels.gate.ref import fused_gate_ref
+
+
+@pytest.mark.parametrize("T,H,E,k", [
+    (128, 64, 8, 2), (256, 128, 16, 4), (130, 32, 4, 1), (512, 64, 64, 6),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("score_fn", ["softmax", "sigmoid"])
+def test_gate_kernel_sweep(T, H, E, k, dtype, score_fn):
+    ks = jax.random.split(jax.random.PRNGKey(T + E), 2)
+    x = (jax.random.normal(ks[0], (T, H)) * 0.5).astype(dtype)
+    wg = (jax.random.normal(ks[1], (H, E)) * 0.1).astype(dtype)
+    p1, w1, i1 = fused_gate(x, wg, top_k=k, score_fn=score_fn,
+                            interpret=True, use_kernel=True)
+    p2, w2, i2 = fused_gate_ref(x, wg, top_k=k, score_fn=score_fn)
+    rtol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=rtol,
+                               atol=rtol)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=rtol,
+                               atol=rtol)
+    # indices can differ on exact ties only; weights must agree
+    probs = np.asarray(p2, np.float32)
+    got = np.take_along_axis(probs, np.asarray(i1), axis=-1)
+    want = np.take_along_axis(probs, np.asarray(i2), axis=-1)
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=rtol)
+
+
+def test_gate_kernel_vjp_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(ks[0], (128, 64), jnp.float32)
+    wg = jax.random.normal(ks[1], (64, 8), jnp.float32) * 0.1
+
+    def f_k(x, wg):
+        p, w, _ = fused_gate(x, wg, top_k=2, interpret=True)
+        return jnp.sum(p * p) + jnp.sum(jnp.cos(w))
+
+    def f_r(x, wg):
+        p, w, _ = fused_gate_ref(x, wg, top_k=2)
+        return jnp.sum(p * p) + jnp.sum(jnp.cos(w))
+
+    gk = jax.grad(f_k, argnums=(0, 1))(x, wg)
+    gr = jax.grad(f_r, argnums=(0, 1))(x, wg)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-6)

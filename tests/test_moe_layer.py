@@ -1,0 +1,99 @@
+"""MoE layer: fused single-kernel path vs dense oracle, gather decode path,
+shared experts, capacity dropping semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gate import GateConfig
+from repro.core.moe import (MoEConfig, init_moe_params, moe_ffn_gather,
+                            moe_ffn_ref, moe_layer, run_gate)
+
+
+def make(E=8, k=2, H=64, F=128, cf=8.0, shared=0, seed=0, impl="fused"):
+    gc = GateConfig(num_experts=E, top_k=k, capacity_factor=cf,
+                    aux_loss=0.01, router_z_loss=1e-3)
+    cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="silu",
+                    gated=True, d_ff_shared=shared, impl=impl,
+                    interpret=True)
+    params = init_moe_params(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (192, H),
+                          jnp.float32)
+    return cfg, params, x
+
+
+def test_fused_equals_dense_oracle_no_drops():
+    cfg, params, x = make(cf=8.0)
+    y_fused, aux = moe_layer(params, x, cfg)
+    og = run_gate(params, x, cfg)
+    y_ref = moe_ffn_ref(params, x, cfg, og)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)
+    assert np.isfinite(float(aux["aux_loss"]))
+
+
+def test_gather_equals_dense_oracle():
+    cfg, params, x = make()
+    og = run_gate(params, x, cfg)
+    y_g = moe_ffn_gather(params, x, cfg, og)
+    y_r = moe_ffn_ref(params, x, cfg, og)
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_shared_experts_added():
+    cfg, params, x = make(shared=64)
+    y, _ = moe_layer(params, x, cfg)
+    cfg0, params0, _ = make(shared=0)
+    # shared expert contributes: outputs must differ from routed-only
+    p0 = {k: v for k, v in params.items() if not k.startswith("shared_")}
+    y0, _ = moe_layer(p0, x, cfg0)
+    assert np.abs(np.asarray(y) - np.asarray(y0)).max() > 1e-4
+
+
+def test_capacity_dropping_reduces_output():
+    """At tiny capacity factor some tokens drop -> outputs differ from the
+    no-drop oracle but remain finite (GShard drop semantics). Note bM
+    alignment floors capacity at 128, so T must be large enough that some
+    expert sees > 128 tokens."""
+    gc = GateConfig(num_experts=4, top_k=2, capacity_factor=0.25)
+    cfg = MoEConfig(gate=gc, d_model=32, d_ff=64, activation="silu",
+                    gated=True, interpret=True)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1024, 32), jnp.float32)
+    y, _ = moe_layer(params, x, cfg)
+    og = run_gate(params, x, cfg)
+    y_ref = moe_ffn_ref(params, x, cfg, og)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.abs(np.asarray(y) - np.asarray(y_ref)).max() > 1e-3
+
+
+def test_moe_layer_grads_flow():
+    cfg, params, x = make()
+
+    def loss(params):
+        y, aux = moe_layer(params, x, cfg)
+        return jnp.mean(y * y) + aux["aux_loss"] + aux["z_loss"]
+
+    g = jax.grad(loss)(params)
+    gn = {k: float(jnp.abs(v).max()) for k, v in g.items()}
+    assert gn["w1"] > 0 and gn["w2"] > 0 and gn["gate"] > 0
+    assert all(np.isfinite(v) for v in gn.values())
+
+
+def test_expert_compute_einsum_matches_kernel_distsim():
+    """The dry-run's einsum expert compute == kernel on the same buffers."""
+    from repro.core.dispatch import _experts_einsum
+    from repro.kernels.fused_moe.ops import fused_moe_ffn
+    cfg, params, _ = make(E=4)
+    Ls, R, H, F = 4, 256, 64, 128
+    x = jax.random.normal(jax.random.PRNGKey(3), (Ls, R, H), jnp.float32)
+    y1 = _experts_einsum(params["w1"][:4], params["w2"][:4],
+                         params["w3"][:4], x, cfg)
+    te = jnp.repeat(jnp.arange(4, dtype=jnp.int32), R // 128)
+    y2 = fused_moe_ffn(x.reshape(Ls * R, H), params["w1"][:4],
+                       params["w2"][:4], params["w3"][:4], te,
+                       jnp.ones_like(te), jnp.ones((Ls * R,)),
+                       activation="silu", interpret=True)
+    np.testing.assert_allclose(np.asarray(y1).reshape(Ls * R, H),
+                               np.asarray(y2), rtol=2e-4, atol=2e-5)
