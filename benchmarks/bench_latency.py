@@ -4,7 +4,26 @@ CPU-measured (relative) comparison of the FlashMoE fused path against the
 unfused dense-loop baseline, at the paper's layer config scaled to CPU
 (d=256, d_ff=256, top-2, cf=1.0). TPU-projected absolute numbers come from
 the roofline artifacts.
+
+Run as a script this also benchmarks the DISTRIBUTED dispatch paths
+(bulk AllToAll vs the paper's pipelined overlap schedule) on a 4-device
+host-platform mesh and writes the whole record to BENCH_latency.json —
+the perf-trajectory baseline future PRs compare against.
 """
+import json
+import os
+import sys
+
+if __name__ == "__main__":
+    # multi-device EP bench needs host placeholder devices; must be set
+    # before jax first initializes (library imports are unaffected).
+    # Append to any pre-existing XLA_FLAGS so exported debug/dump flags
+    # don't silently disable the distributed section of the baseline.
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=4").strip()
+
 import jax
 import jax.numpy as jnp
 
@@ -37,5 +56,68 @@ def run(tokens_list=(512, 1024, 2048, 4096), E=16, H=256, F=256):
     return results
 
 
+def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256):
+    """Bulk vs pipelined EP dispatch on a (1, P) host mesh.
+
+    CPU wall times are RELATIVE (XLA:CPU serializes the collectives the
+    pipelined schedule overlaps on TPU); the point of the baseline is the
+    trajectory of the pipelined path itself across PRs.
+    """
+    from repro.compat import make_mesh, with_mesh
+    from repro.core.dispatch import SlotInfo, distributed_moe
+
+    P_ = min(4, jax.device_count())
+    if P_ < 2 or E % P_:
+        emit("fig10/ep_skipped", 0.0, f"devices={jax.device_count()}")
+        return []
+    mesh = make_mesh((1, P_), ("data", "model"))
+    gc = GateConfig(num_experts=E, top_k=2, capacity_factor=2.0,
+                    aux_loss=0.0, router_z_loss=0.0)
+    info = SlotInfo.make(E, P_)
+    results = []
+    for impl, chunks in (("bulk", 1), ("pipelined", 2), ("pipelined", 4)):
+        cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
+                        gated=False, interpret=True, dist_impl=impl,
+                        num_chunks=chunks, expert_compute="einsum")
+        params = dict(init_moe_params(jax.random.PRNGKey(0), cfg))
+        for w in ("w1", "w2", "w3"):
+            if w in params:
+                params[w] = info.expand_expert_weights(params[w])
+        fn = jax.jit(lambda p, x: distributed_moe(p, x, cfg, mesh)[0])
+        for T in tokens_list:
+            x = jax.random.normal(jax.random.PRNGKey(1),
+                                  (P_, T // P_, H), jnp.float32)
+            with with_mesh(mesh):
+                us = time_fn(fn, params, x)
+            name = f"fig10/ep_{impl}_c{chunks}_T{T}"
+            emit(name, us, f"tokens={T};experts={E};world={P_}")
+            results.append((f"{impl}_c{chunks}", T, us))
+    return results
+
+
+def main(out_path: str = "BENCH_latency.json"):
+    local = run()
+    dist = run_distributed()
+    rec = {
+        "meta": {
+            "bench": "bench_latency",
+            "jax": jax.__version__,
+            "platform": jax.devices()[0].platform,
+            "devices": jax.device_count(),
+            "note": ("CPU interpret-mode wall times; RELATIVE comparisons "
+                     "only — absolute TPU numbers come from the roofline "
+                     "artifacts. Units: us/call (median of 10)."),
+        },
+        "local": [{"impl": i, "tokens": t, "us": round(us, 1)}
+                  for i, t, us in local],
+        "distributed": [{"impl": i, "tokens": t, "us": round(us, 1)}
+                        for i, t, us in dist],
+    }
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
 if __name__ == "__main__":
-    run()
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_latency.json")

@@ -1,0 +1,4 @@
+"""Vendored fallbacks for optional third-party packages the offline
+container cannot install. Each module here is a minimal, seeded subset
+of the real package's API, registered into ``sys.modules`` only when the
+real package is absent (see tests/conftest.py)."""

@@ -1,0 +1,93 @@
+"""Offline fallback for the tiny `hypothesis` subset our property tests
+use: ``@given(**kwargs)`` with ``strategies.integers / floats /
+sampled_from / booleans`` and ``@settings(max_examples=, deadline=)``.
+
+Semantics: ``@given`` reruns the test body ``max_examples`` times with
+values drawn from a DETERMINISTIC per-test RNG (seeded from the test's
+qualified name), so failures reproduce run-to-run without a shrinker or
+example database. This is NOT hypothesis — no shrinking, no coverage
+feedback, no assume() — just enough to keep the property tests
+executable when the real package cannot be installed (no network).
+tests/conftest.py installs this module into ``sys.modules`` ONLY when
+``import hypothesis`` fails, so environments with the real package are
+untouched.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random as _random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A draw rule: rng -> value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+
+class strategies:  # noqa: N801 — mimics the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kw):
+    """Applied OUTSIDE @given in the tests; stores max_examples on the
+    wrapper that @given produced (read back at call time)."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**named_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            seed0 = zlib.crc32(fn.__qualname__.encode("utf-8"))
+            for i in range(n):
+                rng = _random.Random((seed0 << 20) + i)
+                drawn = {k: s._draw(rng)
+                         for k, s in named_strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (#{i + 1}/{n}): "
+                        f"{fn.__qualname__}({drawn})") from e
+
+        # pytest introspects the signature to resolve fixtures; hide the
+        # strategy-drawn parameters (and functools.wraps' __wrapped__,
+        # which inspect.signature would follow back to the original).
+        del wrapper.__wrapped__
+        orig = inspect.signature(fn)
+        wrapper.__signature__ = orig.replace(parameters=[
+            p for name, p in orig.parameters.items()
+            if name not in named_strategies])
+        return wrapper
+    return deco
+
+
+class HealthCheck:  # pragma: no cover — accepted, ignored
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None

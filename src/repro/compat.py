@@ -1,0 +1,173 @@
+"""JAX API compatibility layer — every mesh/shard_map/collective/cost
+call site in this repo goes through here, so a JAX upgrade breaks ONE
+file (and its tests) instead of nine.
+
+Supported JAX range: 0.4.35 <= jax <= 0.4.37 (the "old" branches, which
+are what the container ships and what CI executes; 0.4.35 is the floor
+because ``jax.make_mesh`` first appeared there) with forward-compat
+"new" branches for the post-0.6 API surface:
+
+  =====================  ==========================  ====================
+  entry point            old API (<= 0.4.x)          new API (>= 0.6/0.7)
+  =====================  ==========================  ====================
+  ``make_mesh``          ``jax.make_mesh(s, n)``     + ``axis_types=``
+  ``mesh_from_devices``  ``Mesh(arr, names)``        + ``axis_types=``
+  ``shard_map``          ``jax.experimental.
+                         shard_map.shard_map(...,
+                         check_rep=...)``            ``jax.shard_map(...,
+                                                     check_vma=...)``
+  ``with_mesh``          no-op context (mesh is      ``jax.set_mesh(mesh)``
+                         threaded explicitly)
+  ``cost_analysis``      list-of-dicts -> dict       dict passthrough
+  =====================  ==========================  ====================
+
+Branch selection happens at CALL time (``hasattr`` probes against the
+live ``jax`` module), not import time, so tests can exercise the new-API
+branches on an old install by monkeypatching stand-ins onto ``jax`` /
+``jax.sharding`` (see tests/test_compat.py).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+
+# --------------------------------------------------------------- probes --
+def has_axis_type() -> bool:
+    """New explicit-sharding API: ``jax.sharding.AxisType``."""
+    return hasattr(jax.sharding, "AxisType")
+
+
+def has_set_mesh() -> bool:
+    """New global-mesh API: ``jax.set_mesh``."""
+    return hasattr(jax, "set_mesh")
+
+
+def has_top_level_shard_map() -> bool:
+    """New ``jax.shard_map`` (with ``check_vma=``) vs the experimental
+    ``jax.experimental.shard_map.shard_map`` (with ``check_rep=``)."""
+    return hasattr(jax, "shard_map")
+
+
+# ---------------------------------------------------------------- meshes --
+def default_axis_types(n_axes: int):
+    """``(AxisType.Auto,) * n`` where the type exists, else None.
+
+    Every mesh in this repo is Auto on every axis (GSPMD propagation +
+    explicit shard_map islands), which is also the implicit behaviour of
+    the old API — so the two branches are semantically identical.
+    """
+    if has_axis_type():
+        return (jax.sharding.AxisType.Auto,) * n_axes
+    return None
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None, axis_types=None) -> Mesh:
+    """Version-portable ``jax.make_mesh``.
+
+    On new JAX, forwards ``axis_types`` (defaulting to all-Auto); on old
+    JAX the kwarg does not exist and is dropped (old meshes are
+    implicitly Auto).
+    """
+    kwargs: Dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if has_axis_type():
+        kwargs["axis_types"] = (axis_types if axis_types is not None
+                                else default_axis_types(len(axis_names)))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def mesh_from_devices(device_array, axis_names: Sequence[str]) -> Mesh:
+    """``Mesh`` from an explicit device ndarray (elastic reshapes use
+    this to pin surviving devices to mesh coordinates)."""
+    if has_axis_type():
+        return Mesh(device_array, tuple(axis_names),
+                    axis_types=default_axis_types(len(axis_names)))
+    return Mesh(device_array, tuple(axis_names))
+
+
+# ------------------------------------------------------------- shard_map --
+def shard_map(fn: Callable, mesh: Mesh, in_specs, out_specs,
+              check_vma: bool = False) -> Callable:
+    """Version-portable shard_map.
+
+    New JAX: ``jax.shard_map(..., check_vma=...)``. Old JAX: the
+    experimental entry point, where the same knob is ``check_rep``
+    (varying-manual-axes checking was called replication checking).
+    """
+    if has_top_level_shard_map():
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+@contextlib.contextmanager
+def with_mesh(mesh: Optional[Mesh]):
+    """Context replacing ``jax.set_mesh`` (new JAX's ambient mesh).
+
+    Old JAX has no ambient-mesh concept: every shard_map in this repo
+    receives ``mesh`` explicitly and every jit receives NamedShardings
+    (which embed the mesh), so the old branch is a no-op context. Passing
+    ``None`` is a no-op on both branches.
+    """
+    if mesh is not None and has_set_mesh():
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        yield mesh
+
+
+# ------------------------------------------------------ float0 sanitizer --
+def detach_int(idx):
+    """Strip the concrete float0 tangent jax 0.4.x attaches to INTEGER
+    outputs of a ``custom_vjp`` function.
+
+    ``jax.checkpoint`` (remat) instantiates those tangents as concrete
+    float0 buffers, and any arithmetic on the index downstream (e.g. the
+    ``expert_idx * replicas`` slot algebra) then feeds float0 into a
+    standard JVP rule, which raises. ``stop_gradient`` is a no-op on
+    integer arrays, so instead we round-trip through
+    ``convert_element_type`` — its JVP rule emits a symbolic Zero for any
+    non-inexact target dtype, severing the float0. No-op numerically.
+    """
+    import jax.numpy as jnp
+    if not jnp.issubdtype(idx.dtype, jnp.integer):
+        return idx
+    unsigned = jnp.dtype(idx.dtype).name.replace("int", "uint") \
+        if not jnp.dtype(idx.dtype).name.startswith("u") else "int32"
+    via = jax.lax.convert_element_type(idx, jnp.dtype(unsigned))
+    return jax.lax.convert_element_type(via, idx.dtype)
+
+
+# --------------------------------------------------------- cost analysis --
+def cost_analysis(compiled) -> Dict[str, Any]:
+    """Normalize ``Compiled.cost_analysis()`` to a flat dict.
+
+    Old jaxlib returns a list with one properties-dict per program
+    module; new JAX returns the dict directly; both may return None for
+    backends without cost models. Multi-module lists are merged by
+    summing numeric values (keys like "flops" / "bytes accessed").
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    merged: Dict[str, Any] = {}
+    for entry in ca:
+        if not isinstance(entry, dict):
+            continue
+        for k, v in entry.items():
+            if isinstance(v, (int, float)) and isinstance(
+                    merged.get(k, 0.0), (int, float)):
+                merged[k] = merged.get(k, 0.0) + v
+            else:
+                merged.setdefault(k, v)
+    return merged

@@ -1,6 +1,10 @@
 """Expert-parallel dispatch/combine — the distributed half of FlashMoE.
 
-Two strategies, both running inside ``jax.shard_map`` over the EP axis:
+All mesh/shard_map access goes through ``repro.compat`` (supported JAX
+range 0.4.35–0.4.37 plus forward-compat branches; see compat.py), so this
+module is version-portable by construction.
+
+Two strategies, both running inside ``shard_map`` over the EP axis:
 
   * ``bulk`` — the baseline the paper measures against: one bulk-synchronous
     AllToAll for dispatch, one for combine (GShard / Megatron style). All
@@ -296,6 +300,8 @@ def distributed_moe(params: dict, x: jax.Array, cfg: MoEConfig,
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro import compat
+
     info = SlotInfo.make(cfg.gate.num_experts, mesh.shape[ep_axis])
     dp = tuple(a for a in dp_axes if a in mesh.shape)
     tok_spec = P(dp, ep_axis, None)
@@ -310,8 +316,7 @@ def distributed_moe(params: dict, x: jax.Array, cfg: MoEConfig,
                 {k: P(None, None) for k in shared},
                 tok_spec)
     out_specs = (tok_spec, {"aux_loss": P(), "z_loss": P()})
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda wg, a, b, c, sh, xx: body(wg, a, b, c, sh, xx),
-        mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False)
+        mesh, in_specs, out_specs, check_vma=False)
     return fn(params["gate"], params["w1"], params["w2"], w3, shared, x)

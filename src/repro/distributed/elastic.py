@@ -19,6 +19,7 @@ from typing import List, Optional, Tuple
 import jax
 from jax.sharding import Mesh
 
+from repro import compat
 from repro.configs.base import ArchConfig
 
 
@@ -50,5 +51,4 @@ def make_elastic_mesh(devices: Optional[List] = None,
     d, m = best_mesh_shape(len(devices), cfg)
     import numpy as np
     arr = np.array(devices).reshape(d, m)
-    return Mesh(arr, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.mesh_from_devices(arr, ("data", "model"))

@@ -72,5 +72,10 @@ def fused_gate(
     if not use_kernel:
         return fused_gate_ref(x, w_gate, top_k=top_k,
                               renormalize=renormalize, score_fn=score_fn)
-    return _fused_gate_cv(x, w_gate, top_k, renormalize, score_fn, tile_m,
-                          interpret)
+    probs, top_w, top_i = _fused_gate_cv(x, w_gate, top_k, renormalize,
+                                         score_fn, tile_m, interpret)
+    # custom_vjp attaches a concrete float0 tangent to the integer top_i;
+    # under remat that poisons downstream index arithmetic (see
+    # repro.compat.detach_int).
+    from repro.compat import detach_int
+    return probs, top_w, detach_int(top_i)

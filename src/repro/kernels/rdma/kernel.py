@@ -26,6 +26,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax <= 0.4.x names the params class TPUCompilerParams; >= 0.6 renames
+# it CompilerParams. Same fields (we only use collective_id).
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _rdma_dispatch_body(slabs_ref, landing_ref, send_sem, recv_sem, *,
                         axis: str, world: int):
@@ -34,31 +39,28 @@ def _rdma_dispatch_body(slabs_ref, landing_ref, send_sem, recv_sem, *,
     indexed by SOURCE — the Theorem-3.1 write-conflict-free layout."""
     my_id = jax.lax.axis_index(axis)
 
-    def start_one(p, _):
-        rdma = pltpu.make_async_remote_copy(
+    def make_rdma(p):
+        # device_id is the SCALAR logical id: portable across pallas
+        # versions (the 0.4.x interpret discharge rule all-gathers it and
+        # cannot broadcast a tuple; TPU lowering accepts both forms).
+        return pltpu.make_async_remote_copy(
             src_ref=slabs_ref.at[p],
             dst_ref=landing_ref.at[my_id],   # remote cell owned by ME
             send_sem=send_sem.at[p],
             recv_sem=recv_sem.at[p],
-            device_id=(p,),
+            device_id=p,
             device_id_type=pltpu.DeviceIdType.LOGICAL,
         )
-        rdma.start()
+
+    def start_one(p, _):
+        make_rdma(p).start()
         return _
 
     jax.lax.fori_loop(0, world, start_one, None)
 
     def wait_one(p, _):
         # wait for MY send to complete and for peer p's packet to land
-        rdma = pltpu.make_async_remote_copy(
-            src_ref=slabs_ref.at[p],
-            dst_ref=landing_ref.at[my_id],
-            send_sem=send_sem.at[p],
-            recv_sem=recv_sem.at[p],
-            device_id=(p,),
-            device_id_type=pltpu.DeviceIdType.LOGICAL,
-        )
-        rdma.wait()
+        make_rdma(p).wait()
         return _
 
     jax.lax.fori_loop(0, world, wait_one, None)
@@ -85,7 +87,7 @@ def rdma_dispatch(slabs: jax.Array, *, axis: str, world: int,
             pltpu.SemaphoreType.DMA((P,)),
             pltpu.SemaphoreType.DMA((P,)),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             collective_id=7,  # barrier semaphore id for this collective
         ),
         interpret=interpret,

@@ -28,7 +28,8 @@ import jax
 from repro.configs import ALL_ARCHS
 from repro.configs.base import SHAPES, cell_applicable, get_config
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import (hlo_cost, model_flops, roofline_terms)
+from repro.launch.roofline import (hlo_cost, model_flops, roofline_terms,
+                                   xla_cost_analysis)
 from repro.launch.steps import build_cell, lower_cell
 
 
@@ -58,7 +59,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
         compiled = lowered.compile()
         t_compile = time.time() - t0
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = xla_cost_analysis(compiled)
         txt = compiled.as_text()
         cost = hlo_cost(txt)
         n_dev = mesh.devices.size

@@ -7,22 +7,20 @@ collectives over "pod" are only the gradient reduction, never the MoE
 AllToAll (EP stays inside a pod by construction).
 
 ``make_production_mesh`` is a FUNCTION (not module-level state) so that
-importing this module never touches jax device initialization.
+importing this module never touches jax device initialization. Mesh
+construction goes through ``repro.compat`` for version portability.
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 4):
     """Small mesh for CPU multi-device tests (8 host devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))

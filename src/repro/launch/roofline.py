@@ -78,6 +78,18 @@ class HloCost:
             self.collective_counts[k] += int(mult * v)
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """XLA's own per-program cost properties, version-normalized.
+
+    Delegates to ``repro.compat.cost_analysis`` (old jaxlib returns a
+    list of property dicts, new JAX a dict). Used as the calibration
+    reference for ``hlo_cost`` on loop-free programs — for scan-heavy
+    programs XLA reports ONE iteration and ``hlo_cost`` is authoritative.
+    """
+    from repro.compat import cost_analysis
+    return cost_analysis(compiled)
+
+
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 
 

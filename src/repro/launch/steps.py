@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig, SHAPES, ShapeCell, get_config
 from repro.core.dispatch import SlotInfo
 from repro.models.model import ParallelContext, init_params, loss_fn
@@ -270,7 +271,5 @@ def lower_cell(spec: CellSpec, mesh: Optional[Mesh]):
         kwargs["out_shardings"] = spec.out_shardings
     jitted = jax.jit(spec.step_fn, donate_argnums=spec.donate_argnums,
                      **kwargs)
-    if mesh is not None:
-        with jax.set_mesh(mesh):
-            return jitted.lower(*spec.args)
-    return jitted.lower(*spec.args)
+    with compat.with_mesh(mesh):
+        return jitted.lower(*spec.args)

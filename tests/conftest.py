@@ -6,6 +6,17 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Property tests import `hypothesis`; the offline container cannot
+# install it, so fall back to the vendored seeded-random subset. Only
+# installed when the real package is absent.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro._vendor import hypothesis_fallback
+
+    sys.modules["hypothesis"] = hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = hypothesis_fallback.strategies
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,208 @@
+"""repro.compat: the one file a JAX upgrade must fail loudly in.
+
+Covers BOTH API branches of every shim entry point. The old-API branch
+runs against the installed JAX (0.4.x in CI); the new-API branch is
+exercised by monkeypatching stand-ins for ``jax.sharding.AxisType``,
+``jax.set_mesh``, ``jax.shard_map`` etc. onto the live modules — compat
+probes with hasattr at CALL time precisely so this is possible.
+"""
+import contextlib
+from functools import partial
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+
+pytestmark = pytest.mark.smoke
+
+
+class _AxisTypeStub:
+    Auto = "auto-stub"
+    Explicit = "explicit-stub"
+
+
+# ------------------------------------------------------------ make_mesh --
+def test_make_mesh_old_branch():
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    assert mesh.shape == {"data": 1, "model": 1}
+    assert mesh.axis_names == ("data", "model")
+
+
+def test_make_mesh_new_branch(monkeypatch):
+    seen = {}
+
+    def fake_make_mesh(shapes, names, **kwargs):
+        seen.update(shapes=shapes, names=names, **kwargs)
+        return "mesh-stub"
+
+    monkeypatch.setattr(jax.sharding, "AxisType", _AxisTypeStub,
+                        raising=False)
+    monkeypatch.setattr(jax, "make_mesh", fake_make_mesh)
+    assert compat.has_axis_type()
+    out = compat.make_mesh((2, 4), ("data", "model"))
+    assert out == "mesh-stub"
+    assert seen["shapes"] == (2, 4)
+    assert seen["axis_types"] == (_AxisTypeStub.Auto,) * 2
+
+
+def test_default_axis_types_both_branches(monkeypatch):
+    if not compat.has_axis_type():
+        assert compat.default_axis_types(3) is None
+    monkeypatch.setattr(jax.sharding, "AxisType", _AxisTypeStub,
+                        raising=False)
+    assert compat.default_axis_types(3) == (_AxisTypeStub.Auto,) * 3
+
+
+# ----------------------------------------------------- mesh_from_devices --
+def test_mesh_from_devices_old_branch():
+    arr = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = compat.mesh_from_devices(arr, ("data", "model"))
+    assert mesh.shape == {"data": 1, "model": 1}
+
+
+def test_mesh_from_devices_new_branch(monkeypatch):
+    seen = {}
+
+    class FakeMesh:
+        def __init__(self, arr, names, **kwargs):
+            seen.update(arr=arr, names=names, **kwargs)
+
+    monkeypatch.setattr(jax.sharding, "AxisType", _AxisTypeStub,
+                        raising=False)
+    monkeypatch.setattr(compat, "Mesh", FakeMesh)
+    compat.mesh_from_devices("arr-stub", ("data", "model"))
+    assert seen["names"] == ("data", "model")
+    assert seen["axis_types"] == (_AxisTypeStub.Auto,) * 2
+
+
+# ------------------------------------------------------------ shard_map --
+def test_shard_map_old_branch_executes():
+    mesh = compat.make_mesh((1,), ("model",))
+    fn = compat.shard_map(lambda x: x * 2, mesh, P(), P(),
+                          check_vma=False)
+    out = jax.jit(fn)(jnp.arange(4.0))
+    np.testing.assert_allclose(np.asarray(out), [0.0, 2.0, 4.0, 6.0])
+
+
+def test_shard_map_new_branch(monkeypatch):
+    seen = {}
+
+    def fake_shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                       check_vma=None):
+        seen.update(f=f, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, check_vma=check_vma)
+        return "sm-stub"
+
+    monkeypatch.setattr(jax, "shard_map", fake_shard_map, raising=False)
+    assert compat.has_top_level_shard_map()
+    out = compat.shard_map("f-stub", "mesh-stub", "in", "out",
+                           check_vma=True)
+    assert out == "sm-stub"
+    assert seen == {"f": "f-stub", "mesh": "mesh-stub", "in_specs": "in",
+                    "out_specs": "out", "check_vma": True}
+
+
+# ------------------------------------------------------------- with_mesh --
+def test_with_mesh_old_branch_is_noop_context():
+    mesh = compat.make_mesh((1,), ("model",))
+    with compat.with_mesh(mesh) as m:
+        assert m is mesh
+    with compat.with_mesh(None) as m:
+        assert m is None
+
+
+def test_with_mesh_new_branch(monkeypatch):
+    events = []
+
+    @contextlib.contextmanager
+    def fake_set_mesh(mesh):
+        events.append(("enter", mesh))
+        yield mesh
+        events.append(("exit", mesh))
+
+    monkeypatch.setattr(jax, "set_mesh", fake_set_mesh, raising=False)
+    assert compat.has_set_mesh()
+    with compat.with_mesh("mesh-stub") as m:
+        assert m == "mesh-stub"
+        assert events == [("enter", "mesh-stub")]
+    assert events == [("enter", "mesh-stub"), ("exit", "mesh-stub")]
+    # None must bypass set_mesh on both branches
+    events.clear()
+    with compat.with_mesh(None):
+        pass
+    assert events == []
+
+
+# --------------------------------------------------------- cost_analysis --
+class _FakeCompiled:
+    def __init__(self, ca):
+        self._ca = ca
+
+    def cost_analysis(self):
+        return self._ca
+
+
+def test_cost_analysis_old_branch_real_compiled():
+    c = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    ca = compat.cost_analysis(c)
+    assert isinstance(ca, dict)
+    assert ca["flops"] == pytest.approx(2 * 16 ** 3, rel=1e-6)
+
+
+def test_cost_analysis_list_merge_and_passthrough():
+    assert compat.cost_analysis(_FakeCompiled(None)) == {}
+    assert compat.cost_analysis(_FakeCompiled([])) == {}
+    # new API: dict passthrough (copied, not aliased)
+    d = {"flops": 7.0}
+    out = compat.cost_analysis(_FakeCompiled(d))
+    assert out == {"flops": 7.0} and out is not d
+    # old API: list of per-module dicts, numeric keys summed
+    out = compat.cost_analysis(_FakeCompiled(
+        [{"flops": 1.0, "bytes accessed": 4.0, "name": "a"},
+         {"flops": 2.0, "bytes accessed": 8.0, "name": "b"}]))
+    assert out["flops"] == 3.0
+    assert out["bytes accessed"] == 12.0
+    assert out["name"] == "a"
+
+
+# ------------------------------------------------------------ detach_int --
+def test_detach_int_strips_float0_under_remat():
+    """Regression: custom_vjp integer outputs carry concrete float0
+    tangents; remat + index arithmetic then crashes in mul's JVP rule
+    (the bug that broke expert-replica slot routing)."""
+
+    @jax.custom_vjp
+    def gate_like(x):
+        return jnp.sum(x), jnp.argmax(x).astype(jnp.int32)
+
+    def fwd(x):
+        return gate_like(x), x.shape
+
+    def bwd(shape, ct):
+        return (jnp.ones(shape, jnp.float32) * ct[0],)
+
+    gate_like.defvjp(fwd, bwd)
+
+    def body(x):
+        s, idx = gate_like(x)
+        slot = compat.detach_int(idx) * 2 + 1   # replica slot algebra
+        return s + jnp.zeros((32,)).at[slot].get()
+
+    g = jax.grad(jax.checkpoint(body))(jnp.arange(8.0))
+    np.testing.assert_allclose(np.asarray(g), np.ones(8))
+
+
+def test_detach_int_noop_values_and_floats():
+    idx = jnp.array([3, 1, 2], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(compat.detach_int(idx)),
+                                  np.asarray(idx))
+    assert compat.detach_int(idx).dtype == jnp.int32
+    x = jnp.array([1.5])
+    assert compat.detach_int(x) is x

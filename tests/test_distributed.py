@@ -30,8 +30,8 @@ def test_ep_dispatch_matches_local():
     from repro.core.gate import GateConfig
     from repro.core.moe import MoEConfig, init_moe_params, moe_layer
     from repro.core.dispatch import distributed_moe, SlotInfo
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh, with_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     for E, k in ((8, 2), (2, 1)):
         gc = GateConfig(num_experts=E, top_k=k, capacity_factor=8.0)
         cfg = MoEConfig(gate=gc, d_model=64, d_ff=128, activation="silu",
@@ -50,7 +50,7 @@ def test_ep_dispatch_matches_local():
                               activation="silu", gated=True,
                               interpret=True, dist_impl=impl,
                               num_chunks=chunks)
-            with jax.set_mesh(mesh):
+            with with_mesh(mesh):
                 y_d, _ = jax.jit(
                     lambda p, x: distributed_moe(p, x, cfg_d, mesh)
                 )(pd, x3)
@@ -68,8 +68,8 @@ def test_ep_backward_matches_local():
     from repro.core.gate import GateConfig
     from repro.core.moe import MoEConfig, init_moe_params, moe_layer
     from repro.core.dispatch import distributed_moe
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh, with_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     gc = GateConfig(num_experts=8, top_k=2, capacity_factor=8.0,
                     aux_loss=0.0, router_z_loss=0.0)
     cfg_l = MoEConfig(gate=gc, d_model=32, d_ff=64, activation="silu",
@@ -82,7 +82,7 @@ def test_ep_backward_matches_local():
     x3 = x.reshape(4, 64, 32)
     g_l = jax.jit(jax.grad(lambda p: jnp.sum(
         jnp.sin(moe_layer(p, x, cfg_l)[0]))))(params)
-    with jax.set_mesh(mesh):
+    with with_mesh(mesh):
         g_d = jax.jit(jax.grad(lambda p: jnp.sum(
             jnp.sin(distributed_moe(p, x3, cfg_d, mesh)[0]))))(params)
     for kname in ("w1", "w2", "w3", "gate"):
@@ -112,8 +112,8 @@ def test_sharded_train_step_compiles_and_descends():
     from repro.launch.steps import make_pctx
     from repro.models.model import init_params
     from repro.optim import adamw
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh, with_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_config("mixtral-8x7b").reduced()
     pctx = make_pctx(cfg, mesh, train=True, expert_compute="einsum")
     params_sds = jax.eval_shape(
@@ -124,7 +124,7 @@ def test_sharded_train_step_compiles_and_descends():
     step = build_train_step(cfg, pctx, adamw.AdamWConfig(lr=2e-3))
     batch_sds = {"tokens": jax.ShapeDtypeStruct((4, 64), jnp.int32),
                  "labels": jax.ShapeDtypeStruct((4, 64), jnp.int32)}
-    with jax.set_mesh(mesh):
+    with with_mesh(mesh):
         compiled = jax.jit(step).lower(params_sds, opt_sds,
                                        batch_sds).compile()
     ma = compiled.memory_analysis()
@@ -167,8 +167,8 @@ def test_expert_replica_grads_stay_tied():
     from repro.launch.steps import build_train_step, make_pctx
     from repro.models.model import init_params
     from repro.optim import adamw
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh, with_mesh
+    mesh = make_mesh((1, 8), ("data", "model"))
     cfg = get_config("mixtral-8x7b").reduced()   # 8 experts on 8 ranks...
     import dataclasses
     cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
@@ -182,7 +182,7 @@ def test_expert_replica_grads_stay_tied():
                                           0, cfg.vocab),
              "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 64),
                                           0, cfg.vocab)}
-    with jax.set_mesh(mesh):
+    with with_mesh(mesh):
         params, opt, m = step(params, opt, batch)
     w1 = np.asarray(params["layers"]["moe"]["w1"], np.float32)
     # slot-major (L, slots=8, H, F): replicas (2e, 2e+1) must stay equal
@@ -202,8 +202,8 @@ def test_elastic_checkpoint_restore_smaller_mesh():
     from repro.checkpoint import checkpoint as ckpt
     from repro.launch.steps import make_pctx
     from repro.models.model import init_params
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh, with_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_config("qwen2-7b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
     from repro.distributed import sharding as shd
@@ -218,8 +218,8 @@ def test_elastic_checkpoint_restore_smaller_mesh():
     from repro.checkpoint import checkpoint as ckpt
     from repro.models.model import init_params, loss_fn, ParallelContext
     from repro.distributed import sharding as shd
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh, with_mesh
+    mesh = make_mesh((2, 2), ("data", "model"))
     cfg = get_config("qwen2-7b").reduced()
     target = jax.eval_shape(
         lambda k: init_params(cfg, k, dtype=jnp.float32),
@@ -230,7 +230,7 @@ def test_elastic_checkpoint_restore_smaller_mesh():
     pctx = ParallelContext(mesh=mesh, remat=False, kv_chunk=32)
     batch = {{"tokens": jnp.zeros((4, 64), jnp.int32),
               "labels": jnp.zeros((4, 64), jnp.int32)}}
-    with jax.set_mesh(mesh):
+    with with_mesh(mesh):
         loss, _ = jax.jit(lambda p, b: loss_fn(cfg, p, b, pctx))(params,
                                                                  batch)
     assert np.isfinite(float(loss))
@@ -244,8 +244,8 @@ def test_sharded_decode_attention_lse_combine():
     from functools import partial
     from repro.models.attention import (decode_attention,
                                         sharded_decode_attention)
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, with_mesh, shard_map
+    mesh = make_mesh((8,), ("data",))
     B, S, nkv, nq, hd = 2, 128, 2, 8, 16
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (B, nq, hd), jnp.float32)
@@ -253,12 +253,12 @@ def test_sharded_decode_attention_lse_combine():
     v = jax.random.normal(ks[2], (B, S, nkv, hd), jnp.float32)
     ref = decode_attention(q, k, v, kv_len=100)
     from jax.sharding import PartitionSpec as P
-    fn = jax.shard_map(
+    fn = shard_map(
         partial(sharded_decode_attention, kv_len=100, axis="data"),
-        mesh=mesh,
-        in_specs=(P(None), P(None, "data"), P(None, "data")),
-        out_specs=P(None), check_vma=False)
-    with jax.set_mesh(mesh):
+        mesh,
+        (P(None), P(None, "data"), P(None, "data")),
+        P(None), check_vma=False)
+    with with_mesh(mesh):
         got = jax.jit(fn)(q, k, v)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)

@@ -7,6 +7,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core.layout import (ROUND_COMBINE, ROUND_DISPATCH, STAGE_LOCAL,
                                STAGE_REMOTE, SymmetricLayout, size_L_bytes)
 
+pytestmark = pytest.mark.smoke
+
 
 def test_shape_and_alignment():
     lay = SymmetricLayout(world=4, local_experts=2, capacity=100, hidden=64)

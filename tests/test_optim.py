@@ -9,6 +9,8 @@ from repro.optim import adamw
 from repro.optim.compression import dequantize_int8, quantize_int8
 from repro.optim.schedule import SCHEDULES, warmup_cosine, wsd
 
+pytestmark = pytest.mark.smoke
+
 
 def test_adamw_matches_reference_math():
     cfg = adamw.AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8,

@@ -20,14 +20,13 @@ def test_oracle_is_all_to_all_semantics():
     from functools import partial
     from jax.sharding import PartitionSpec as P
     from repro.kernels.rdma.ref import rdma_dispatch_ref
-    mesh = jax.make_mesh((4,), ("ep",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map, with_mesh
+    mesh = make_mesh((4,), ("ep",))
     P_, C, H = 4, 8, 16
     x = jnp.arange(4 * P_ * C * H, dtype=jnp.float32).reshape(4 * P_, C, H)
-    fn = jax.shard_map(partial(rdma_dispatch_ref, axis="ep"), mesh=mesh,
-                       in_specs=P("ep"), out_specs=P("ep"),
-                       check_vma=False)
-    with jax.set_mesh(mesh):
+    fn = shard_map(partial(rdma_dispatch_ref, axis="ep"), mesh,
+                   P("ep"), P("ep"), check_vma=False)
+    with with_mesh(mesh):
         y = jax.jit(fn)(x)
     xs = np.asarray(x).reshape(4, P_, C, H)   # [device, peer, C, H]
     ys = np.asarray(y).reshape(4, P_, C, H)
@@ -47,15 +46,15 @@ def test_kernel_lowers_for_tpu_interpret():
     well-formed). Execution needs ICI/TPU-interpret; skip if the host
     runtime can't run it."""
     from repro.kernels.rdma.kernel import rdma_dispatch
+    from repro.compat import make_mesh, shard_map
     from functools import partial
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("ep",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("ep",))
     x = jnp.ones((1, 8, 16), jnp.float32)
-    fn = jax.shard_map(
+    fn = shard_map(
         partial(rdma_dispatch, axis="ep", world=1, interpret=True),
-        mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
+        mesh, P(), P(), check_vma=False)
     try:
         y = jax.jit(fn)(x)  # world=1: loopback push to self
         np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
