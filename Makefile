@@ -1,0 +1,26 @@
+# FlashMoE repro — common entry points. Pure-Python JAX project: no
+# build step, PYTHONPATH=src is the only setup (see README.md).
+
+.PHONY: test smoke check-docs bench dryrun
+
+# tier-1 verify: the whole suite (multi-device cases spawn subprocesses)
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+# fast iteration subset (~30s)
+smoke:
+	PYTHONPATH=src python -m pytest -m smoke -q
+
+# fail when README/docs code blocks reference commands, modules, flags
+# or make targets that don't exist
+check-docs:
+	python tools/check_docs.py README.md docs/ARCHITECTURE.md
+
+# refresh the latency baseline (local fused paths + bulk/pipelined/rdma EP)
+bench:
+	PYTHONPATH=src python -m benchmarks.bench_latency BENCH_latency.json
+
+# lower+compile one production cell on the host-placeholder mesh
+dryrun:
+	PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+		--shape train_4k --out experiments/dryrun

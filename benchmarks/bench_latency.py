@@ -6,7 +6,8 @@ unfused dense-loop baseline, at the paper's layer config scaled to CPU
 the roofline artifacts.
 
 Run as a script this also benchmarks the DISTRIBUTED dispatch paths
-(bulk AllToAll vs the paper's pipelined overlap schedule) on a 4-device
+(bulk AllToAll vs the paper's pipelined overlap schedule vs the
+device-initiated rdma kernels under interpret) on a 4-device
 host-platform mesh and writes the whole record to BENCH_latency.json —
 the perf-trajectory baseline future PRs compare against.
 """
@@ -57,7 +58,7 @@ def run(tokens_list=(512, 1024, 2048, 4096), E=16, H=256, F=256):
 
 
 def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256):
-    """Bulk vs pipelined EP dispatch on a (1, P) host mesh.
+    """Bulk vs pipelined vs rdma EP dispatch on host meshes.
 
     CPU wall times are RELATIVE (XLA:CPU serializes the collectives the
     pipelined schedule overlaps on TPU); the point of the baseline is the
@@ -71,23 +72,29 @@ def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256):
         emit("fig10/ep_skipped", 0.0, f"devices={jax.device_count()}")
         return []
     mesh = make_mesh((1, P_), ("data", "model"))
+    # the rdma kernels execute under interpret only on a pure-EP mesh
+    # (single named axis); tokens/device match the 2-axis runs.
+    mesh_ep = make_mesh((P_,), ("model",))
     gc = GateConfig(num_experts=E, top_k=2, capacity_factor=2.0,
                     aux_loss=0.0, router_z_loss=0.0)
     info = SlotInfo.make(E, P_)
     results = []
-    for impl, chunks in (("bulk", 1), ("pipelined", 2), ("pipelined", 4)):
+    for impl, chunks in (("bulk", 1), ("pipelined", 2), ("pipelined", 4),
+                         ("rdma", 1)):
         cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
                         gated=False, interpret=True, dist_impl=impl,
                         num_chunks=chunks, expert_compute="einsum")
+        m = mesh_ep if impl == "rdma" else mesh
         params = dict(init_moe_params(jax.random.PRNGKey(0), cfg))
         for w in ("w1", "w2", "w3"):
             if w in params:
                 params[w] = info.expand_expert_weights(params[w])
-        fn = jax.jit(lambda p, x: distributed_moe(p, x, cfg, mesh)[0])
+        fn = jax.jit(lambda p, x, cfg=cfg, m=m: distributed_moe(
+            p, x, cfg, m)[0])
         for T in tokens_list:
-            x = jax.random.normal(jax.random.PRNGKey(1),
-                                  (P_, T // P_, H), jnp.float32)
-            with with_mesh(mesh):
+            shape = (1, T, H) if impl == "rdma" else (P_, T // P_, H)
+            x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+            with with_mesh(m):
                 us = time_fn(fn, params, x)
             name = f"fig10/ep_{impl}_c{chunks}_T{T}"
             emit(name, us, f"tokens={T};experts={E};world={P_}")

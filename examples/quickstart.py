@@ -21,8 +21,16 @@ cfg = MoEConfig(
     gate=GateConfig(num_experts=16, top_k=2, capacity_factor=1.25),
     d_model=256, d_ff=256, activation="gelu", gated=False,
     impl="fused",          # the single-kernel FlashMoE path
+    dist_impl="rdma",      # EP strategy if this layer went multi-device
     interpret=True,        # pallas interpret mode (no TPU here)
 )
+
+# which EP dispatch/combine strategy would actually run here (the rdma
+# kernels need TPU or interpret mode on a pure-EP mesh; elsewhere the
+# request downgrades to "pipelined" with a logged reason)
+from repro.core.dispatch import resolve_dist_impl
+print(f"local impl: {cfg.impl}; dist_impl: requested {cfg.dist_impl!r}, "
+      f"chosen {resolve_dist_impl(cfg)!r}")
 
 key = jax.random.PRNGKey(0)
 params = init_moe_params(key, cfg)

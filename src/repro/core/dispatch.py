@@ -4,7 +4,7 @@ All mesh/shard_map access goes through ``repro.compat`` (supported JAX
 range 0.4.35–0.4.37 plus forward-compat branches; see compat.py), so this
 module is version-portable by construction.
 
-Two strategies, both running inside ``shard_map`` over the EP axis:
+Three strategies, all running inside ``shard_map`` over the EP axis:
 
   * ``bulk`` — the baseline the paper measures against: one bulk-synchronous
     AllToAll for dispatch, one for combine (GShard / Megatron style). All
@@ -19,6 +19,16 @@ Two strategies, both running inside ``shard_map`` over the EP axis:
     rounds land in distinct, writer-indexed buffers, so no chunk overwrites
     another — Theorem 3.1 in dataflow form.
 
+  * ``rdma`` — the paper's §3.2 transport made literal: BOTH directions of
+    the data plane (dispatch AND combine) are device-initiated one-sided
+    pallas kernels (kernels/rdma/) pushing slabs straight into the peer's
+    writer-indexed landing buffer via ``pltpu.make_async_remote_copy`` —
+    no collective barrier, semaphore-signalled completion. Requires the
+    remote-DMA kernels to lower: real TPU, or interpret mode on a mesh
+    whose only named axis is the EP axis. Anywhere else
+    :func:`resolve_dist_impl` falls back to ``pipelined`` and logs why,
+    so every entry point accepts ``dist_impl="rdma"`` unconditionally.
+
 Expert placement ("slots"): the EP world always equals the mesh's model-axis
 size P. When E >= P, each device hosts E/P experts. When E < P, experts are
 replicated R = P/E times (production practice for hot experts; DeepSeek-v3
@@ -30,14 +40,71 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.gate import GateConfig, GateOutput, TILE_M
-from repro.core.moe import MoEConfig, run_gate, shared_expert_ffn
+from repro.core.moe import DIST_IMPLS, MoEConfig, run_gate, shared_expert_ffn
 from repro.kernels.fused_moe.ops import fused_moe_ffn
+from repro.kernels.rdma.kernel import rdma_combine, rdma_dispatch
+
+_logger = logging.getLogger(__name__)
+_warned_fallbacks = set()
+
+
+def rdma_fallback_reason(interpret: bool, mesh=None,
+                         ep_axis: str = "model") -> Optional[str]:
+    """None when the rdma kernels can lower AND execute here, else why not.
+
+    Interpret mode: the 0.4.x remote-DMA discharge rule supports a single
+    named mesh axis (shard_map binds every mesh axis, so the mesh must be
+    pure-EP). Compiled mode: only the TPU backend lowers
+    ``make_async_remote_copy``, and the kernels' scalar LOGICAL device ids
+    address a mesh whose non-EP axes are trivial.
+    """
+    if mesh is not None and ep_axis not in mesh.shape:
+        return f"mesh has no {ep_axis!r} axis"
+    if interpret:
+        if mesh is not None and len(mesh.shape) != 1:
+            return ("interpret-mode remote DMA supports a single named "
+                    f"mesh axis; mesh axes are {tuple(mesh.shape)}")
+        return None
+    backend = jax.default_backend()
+    if backend != "tpu":
+        return (f"backend {backend!r} cannot lower make_async_remote_copy "
+                "without interpret mode")
+    if mesh is not None and any(
+            n != ep_axis and s != 1 for n, s in mesh.shape.items()):
+        return ("scalar LOGICAL device ids require non-EP mesh axes of "
+                f"size 1; mesh axes are {tuple(mesh.shape.items())}")
+    return None
+
+
+def resolve_dist_impl(cfg: MoEConfig, mesh=None,
+                      ep_axis: str = "model") -> str:
+    """Effective EP strategy for this config/mesh/backend.
+
+    Validates ``cfg.dist_impl`` against :data:`repro.core.moe.DIST_IMPLS`
+    and downgrades ``"rdma"`` to ``"pipelined"`` — logging the reason once
+    per distinct cause — when the remote-DMA kernels cannot run.
+    """
+    if cfg.dist_impl not in DIST_IMPLS:
+        raise ValueError(
+            f"unknown dist_impl {cfg.dist_impl!r}; expected one of "
+            f"{DIST_IMPLS}")
+    if cfg.dist_impl != "rdma":
+        return cfg.dist_impl
+    reason = rdma_fallback_reason(cfg.interpret, mesh, ep_axis)
+    if reason is None:
+        return "rdma"
+    if reason not in _warned_fallbacks:
+        _warned_fallbacks.add(reason)
+        _logger.warning(
+            "dist_impl='rdma' falling back to 'pipelined': %s", reason)
+    return "pipelined"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,7 +253,7 @@ def _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg: MoEConfig,
 
 
 def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
-                 info: SlotInfo, axis: str,
+                 info: SlotInfo, axis: str, impl: str,
                  rng: Optional[jax.Array]):
     """Runs INSIDE shard_map: x is (B_loc, S_loc, H) — the resident
     sequence-sharded activation layout (§Perf iteration 2: tokens arrive
@@ -208,7 +275,7 @@ def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
 
     C = slot_capacity(cfg.gate, T_loc, info.slots)
     chunks = effective_chunks(
-        C, cfg.num_chunks if cfg.dist_impl == "pipelined" else 1)
+        C, cfg.num_chunks if impl == "pipelined" else 1)
     packed_pos, counts = fixed_plan(slot_ids, info.slots, C)
     buf = _scatter_to_buffer(x_loc, packed_pos, info.slots * C,
                              cfg.gate.top_k)
@@ -217,17 +284,32 @@ def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
     counts_rcv = jax.lax.all_to_all(
         counts.reshape(P, info.local_slots), axis, 0, 0, tiled=False)
 
-    if cfg.dist_impl == "bulk":
+    if impl == "bulk":
         recv = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
         recv = recv.reshape(P, info.local_slots, C, H)
         y = _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg, info, C)
         y = y.reshape(info.slots, C, H)
         y_back = jax.lax.all_to_all(y, axis, 0, 0, tiled=True)
-    elif cfg.dist_impl == "pipelined":
+    elif impl == "pipelined":
         y_back = _pipelined_rounds(buf, counts_rcv, w1, w2, w3, cfg, info,
                                    axis, chunks)
+    elif impl == "rdma":
+        # Both directions device-initiated (paper §3.2): slab p of the
+        # staged buffer — the Ls*C rows bound for peer p's slots — is
+        # pushed one-sided into p's landing buffer; after expert compute
+        # the outputs are pushed back to their sources by the mirror
+        # kernel. Same buffer layouts as the bulk AllToAll path, so the
+        # downstream gather-combine is untouched.
+        slabs = buf.reshape(P, info.local_slots * C, H)
+        landing = rdma_dispatch(slabs, axis=axis, world=P,
+                                interpret=cfg.interpret)
+        recv = landing.reshape(P, info.local_slots, C, H)
+        y = _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg, info, C)
+        y_back = rdma_combine(y.reshape(P, info.local_slots * C, H),
+                              axis=axis, world=P, interpret=cfg.interpret)
+        y_back = y_back.reshape(info.slots, C, H)
     else:
-        raise ValueError(cfg.dist_impl)
+        raise ValueError(impl)
 
     y_loc = _gather_combine(y_back.reshape(info.slots * C, H), packed_pos,
                             gate_out.combine_weights).astype(x.dtype)
@@ -307,8 +389,9 @@ def distributed_moe(params: dict, x: jax.Array, cfg: MoEConfig,
     tok_spec = P(dp, ep_axis, None)
     w_spec_e = P(ep_axis, None, None)
 
+    impl = resolve_dist_impl(cfg, mesh, ep_axis)
     body = functools.partial(_ep_moe_body, cfg=cfg, info=info, axis=ep_axis,
-                             rng=rng)
+                             impl=impl, rng=rng)
     w3 = params.get("w3")
     shared = {k: v for k, v in params.items() if k.startswith("shared_")}
     in_specs = (P(None, None), w_spec_e, w_spec_e,

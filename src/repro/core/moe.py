@@ -7,8 +7,11 @@ Three execution paths, all numerically equivalent (tested):
                  kernel + packed routing plan + ONE grouped-GEMM pallas_call
                  (GEMM0 -> act -> GEMM1 -> combine-scale) + gather-combine.
   * ``dist``   — expert-parallel path (see ``core/dispatch.py``): bulk
-                 AllToAll (baseline, GShard-style) or payload-efficient
-                 chunk-pipelined dispatch (the paper's contribution).
+                 AllToAll (baseline, GShard-style), payload-efficient
+                 chunk-pipelined dispatch (the paper's contribution via
+                 XLA async collectives), or device-initiated one-sided
+                 RDMA for both directions (``dist_impl="rdma"``, the
+                 paper's §3.2 put+signal as pallas kernels).
 
 Shared experts (DeepSeek-v2) run as a dense FFN added to the routed output.
 """
@@ -32,6 +35,13 @@ from repro.kernels.fused_moe.ops import fused_moe_ffn
 from repro.kernels.gate.ops import fused_gate
 
 
+# EP dispatch/combine strategies (core/dispatch.py). "rdma" needs the
+# pallas remote-DMA kernels to lower (TPU, or interpret mode on a
+# single-axis mesh) and falls back to "pipelined" with a logged reason
+# otherwise — see core/dispatch.resolve_dist_impl.
+DIST_IMPLS = ("bulk", "pipelined", "rdma")
+
+
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
     gate: GateConfig
@@ -41,7 +51,7 @@ class MoEConfig:
     gated: bool = True               # SwiGLU-style experts (w3 present)
     d_ff_shared: int = 0             # shared-expert FFN width (0 = none)
     impl: str = "fused"              # ref | fused | gather
-    dist_impl: str = "pipelined"     # bulk | pipelined   (EP path)
+    dist_impl: str = "pipelined"     # bulk | pipelined | rdma  (EP path)
     num_chunks: int = 4              # pipeline chunks for the flash path
     use_pallas_gate: bool = True
     interpret: bool = True           # pallas interpret mode (CPU container)

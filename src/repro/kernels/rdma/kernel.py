@@ -1,21 +1,38 @@
-"""Pallas TPU kernel: device-initiated one-sided dispatch over ICI —
-the faithful analogue of the paper's NVSHMEM put+signal (§3.2).
+"""Pallas TPU kernels: device-initiated one-sided dispatch AND combine
+over ICI — the faithful analogue of the paper's NVSHMEM put+signal (§3.2),
+now closing both directions of the MoE data plane (Figure 4).
 
-Each device pushes its per-peer dispatch slab directly into the peer's
-symmetric landing buffer with `pltpu.make_async_remote_copy`: a one-sided
-RDMA whose completion is signalled through DMA semaphores — exactly the
-paper's packet+flag protocol, with the Subscriber's flag-polling replaced
-by semaphore waits the hardware DMA engine satisfies.
+Each device pushes per-peer slabs directly into the peer's symmetric
+landing buffer with `pltpu.make_async_remote_copy`: a one-sided RDMA whose
+completion is signalled through DMA semaphores — exactly the paper's
+packet+flag protocol, with the Subscriber's flag-polling replaced by
+semaphore waits the hardware DMA engine satisfies.
 
-Conflict freedom (Theorem 3.1) is realized structurally: the landing
-buffer is indexed by the SOURCE device (`dst_ref.at[my_id]`), so no two
-writers can address the same cell (Definition C.2.1: p* = source).
+Conflict freedom (Theorem 3.1) is realized structurally in BOTH rounds:
+the landing buffer is indexed by the WRITER (`dst_ref.at[my_id]`), so no
+two one-sided writes can address the same cell (Definition C.2.1:
+p* = source). In the dispatch round the writer is the token owner pushing
+toward expert slots; in the combine round the writer is the slot owner
+pushing computed outputs back to the token's source — the same discipline,
+mirrored (core/layout.py ROUND_DISPATCH / ROUND_COMBINE).
 
-This kernel is a TPU-target artifact: it requires real ICI (or the TPU
-interpret machinery) to execute; the CPU container validates its address
-algebra via core/layout.py property tests and its semantics via the
-all_to_all oracle in ref.py. The portable production path
-(core/dispatch.py) uses XLA async collectives and is execution-tested.
+Transfers are issued on a rotation schedule: step s sends to peer
+(my_id + s) % P, so every step is a bijection between senders and
+receivers. On hardware this avoids P-way incast onto a single peer; it is
+also the schedule the 0.4.x interpret-mode discharge rule for remote DMA
+can execute faithfully (it resolves exactly one sender per receiver per
+`dma_start`), which is what lets the CPU container run both kernels for
+real under `interpret=True` (single named mesh axis; see
+core/dispatch.rdma_fallback_reason for the gating).
+
+The two directions are exact mutual transposes — the exchange permutation
+is an involution — so each kernel's custom VJP is the *other* kernel
+applied to the cotangent: backprop through the rdma path is itself a pair
+of device-initiated one-sided exchanges.
+
+On non-TPU backends without interpret mode these kernels cannot lower;
+the portable production path (core/dispatch.py `bulk`/`pipelined`) uses
+XLA async collectives and is execution-tested everywhere.
 """
 from __future__ import annotations
 
@@ -31,53 +48,65 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     pltpu.TPUCompilerParams
 
+# Barrier-semaphore ids: the dispatch and combine exchanges can be live
+# concurrently inside one step, so they must not share a collective id.
+DISPATCH_COLLECTIVE_ID = 7
+COMBINE_COLLECTIVE_ID = 8
 
-def _rdma_dispatch_body(slabs_ref, landing_ref, send_sem, recv_sem, *,
-                        axis: str, world: int):
-    """slabs_ref: (P, C, H) local per-peer slabs (LOCAL stage of L).
+
+def _exchange_body(slabs_ref, landing_ref, send_sem, recv_sem, *,
+                   axis: str, world: int):
+    """One-sided symmetric exchange: slab p -> peer p's landing[my_id].
+
+    slabs_ref: (P, C, H) local per-peer slabs (LOCAL stage of L). In the
+    dispatch round, slab p holds tokens routed to peer p's expert slots;
+    in the combine round, slab p holds expert outputs owed to source p.
     landing_ref: (P, C, H) symmetric landing buffer (REMOTE stage of L),
-    indexed by SOURCE — the Theorem-3.1 write-conflict-free layout."""
+    indexed by the WRITER — the Theorem-3.1 write-conflict-free layout.
+
+    Step s targets peer (my_id + s) % world (rotation schedule): each
+    step is a sender/receiver bijection, and the packet arriving at step
+    s (from peer (my_id - s) % world) signals recv_sem[s] because the
+    SPMD program puts both endpoints at the same step index.
+    """
     my_id = jax.lax.axis_index(axis)
 
-    def make_rdma(p):
-        # device_id is the SCALAR logical id: portable across pallas
-        # versions (the 0.4.x interpret discharge rule all-gathers it and
-        # cannot broadcast a tuple; TPU lowering accepts both forms).
+    def make_rdma(s):
+        # device_id is the SCALAR logical id along the (single) EP axis:
+        # portable across pallas versions (the 0.4.x interpret discharge
+        # rule all-gathers it and cannot broadcast a tuple; TPU lowering
+        # accepts both forms).
+        peer = jax.lax.rem(my_id + s, world)
         return pltpu.make_async_remote_copy(
-            src_ref=slabs_ref.at[p],
+            src_ref=slabs_ref.at[peer],
             dst_ref=landing_ref.at[my_id],   # remote cell owned by ME
-            send_sem=send_sem.at[p],
-            recv_sem=recv_sem.at[p],
-            device_id=p,
+            send_sem=send_sem.at[s],
+            recv_sem=recv_sem.at[s],
+            device_id=peer,
             device_id_type=pltpu.DeviceIdType.LOGICAL,
         )
 
-    def start_one(p, _):
-        make_rdma(p).start()
+    def start_one(s, _):
+        make_rdma(s).start()
         return _
 
     jax.lax.fori_loop(0, world, start_one, None)
 
-    def wait_one(p, _):
-        # wait for MY send to complete and for peer p's packet to land
-        make_rdma(p).wait()
+    def wait_one(s, _):
+        # wait for MY step-s send to complete and for the step-s packet
+        # (from peer (my_id - s) % world) to land
+        make_rdma(s).wait()
         return _
 
     jax.lax.fori_loop(0, world, wait_one, None)
 
 
-def rdma_dispatch(slabs: jax.Array, *, axis: str, world: int,
-                  interpret: bool = False) -> jax.Array:
-    """One-sided dispatch: returns the landing buffer (P, C, H) where
-    row p holds the slab peer p pushed to THIS device.
-
-    Must run inside shard_map over ``axis`` (the EP axis). Equivalent to
-    ``jax.lax.all_to_all(slabs, axis, 0, 0)`` (see ref.py) but initiated
-    by the device DMA engines with no collective barrier.
-    """
+def _rdma_exchange(slabs: jax.Array, *, axis: str, world: int,
+                   interpret: bool, collective_id: int,
+                   name: str) -> jax.Array:
     P, C, H = slabs.shape
     assert P == world, (P, world)
-    body = functools.partial(_rdma_dispatch_body, axis=axis, world=world)
+    body = functools.partial(_exchange_body, axis=axis, world=world)
     return pl.pallas_call(
         body,
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
@@ -88,8 +117,79 @@ def rdma_dispatch(slabs: jax.Array, *, axis: str, world: int,
             pltpu.SemaphoreType.DMA((P,)),
         ],
         compiler_params=_CompilerParams(
-            collective_id=7,  # barrier semaphore id for this collective
+            collective_id=collective_id,
         ),
         interpret=interpret,
-        name="flashmoe_rdma_dispatch",
+        name=name,
     )(slabs)
+
+
+# The exchange permutation landing[d][p] = slabs[p][d] is symmetric
+# (transposing (d, p) maps it to itself), so the VJP of each direction is
+# the OTHER direction applied to the cotangent: d(dispatch) pushes
+# gradients back along combine's wires and vice versa. Residual-free.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _dispatch_p(slabs, axis, world, interpret):
+    return _rdma_exchange(slabs, axis=axis, world=world,
+                          interpret=interpret,
+                          collective_id=DISPATCH_COLLECTIVE_ID,
+                          name="flashmoe_rdma_dispatch")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _combine_p(slabs, axis, world, interpret):
+    return _rdma_exchange(slabs, axis=axis, world=world,
+                          interpret=interpret,
+                          collective_id=COMBINE_COLLECTIVE_ID,
+                          name="flashmoe_rdma_combine")
+
+
+def _dispatch_fwd(slabs, axis, world, interpret):
+    return _dispatch_p(slabs, axis, world, interpret), None
+
+
+def _dispatch_bwd(axis, world, interpret, _res, g):
+    return (_combine_p(g, axis, world, interpret),)
+
+
+def _combine_fwd(slabs, axis, world, interpret):
+    return _combine_p(slabs, axis, world, interpret), None
+
+
+def _combine_bwd(axis, world, interpret, _res, g):
+    return (_dispatch_p(g, axis, world, interpret),)
+
+
+_dispatch_p.defvjp(_dispatch_fwd, _dispatch_bwd)
+_combine_p.defvjp(_combine_fwd, _combine_bwd)
+
+
+def rdma_dispatch(slabs: jax.Array, *, axis: str, world: int,
+                  interpret: bool = False) -> jax.Array:
+    """One-sided dispatch: returns the landing buffer (P, C, H) where
+    row p holds the slab peer p pushed to THIS device — tokens bound for
+    the expert slots this device owns, indexed by their source.
+
+    Must run inside shard_map over ``axis`` (the EP axis, which must be
+    the mesh's only named axis). Equivalent to
+    ``jax.lax.all_to_all(slabs, axis, 0, 0)`` (see ref.py) but initiated
+    by the device DMA engines with no collective barrier.
+    """
+    return _dispatch_p(slabs, axis, world, interpret)
+
+
+def rdma_combine(slabs: jax.Array, *, axis: str, world: int,
+                 interpret: bool = False) -> jax.Array:
+    """One-sided combine: the mirror image of :func:`rdma_dispatch`.
+
+    ``slabs`` is the computed expert output in the dispatch-landing
+    layout — row p holds the outputs owed to source device p. Each device
+    pushes row p back into SOURCE p's combine landing buffer at the cell
+    this device owns (``dst_ref.at[my_id]``: the writer here is the slot
+    owner, so Theorem 3.1's p* = source discipline holds in reverse).
+    Returns (P, C, H) where row p holds the outputs slot-owner p computed
+    for tokens THIS device staged toward p — exactly the layout
+    ``_gather_combine`` unpacks by ``packed_pos``.
+    """
+    return _combine_p(slabs, axis, world, interpret)

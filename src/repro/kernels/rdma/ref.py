@@ -1,8 +1,10 @@
-"""Semantic oracle for the RDMA dispatch kernel.
+"""Semantic oracles for the RDMA dispatch/combine kernels.
 
 The one-sided push of slab p to device p's landing row my_id is, in
 collective terms, exactly an AllToAll over the leading dim: device d's
-landing[p] == device p's slabs[d].
+landing[p] == device p's slabs[d]. The combine direction performs the
+same exchange on the computed outputs — and because the exchange
+permutation is an involution, ``combine(dispatch(x)) == x``.
 """
 from __future__ import annotations
 
@@ -11,4 +13,15 @@ import jax
 
 def rdma_dispatch_ref(slabs: jax.Array, *, axis: str) -> jax.Array:
     """Runs inside shard_map; slabs: (P, C, H) per device."""
+    return jax.lax.all_to_all(slabs, axis, 0, 0, tiled=True)
+
+
+def rdma_combine_ref(slabs: jax.Array, *, axis: str) -> jax.Array:
+    """Reverse round: push computed outputs back to their source.
+
+    Same AllToAll semantics as dispatch (the exchange is symmetric), kept
+    as a distinct oracle because the two rounds address distinct cells of
+    the symmetric layout L (core/layout.py ROUND_COMBINE) and carry
+    distinct collective ids in the kernel.
+    """
     return jax.lax.all_to_all(slabs, axis, 0, 0, tiled=True)

@@ -129,8 +129,11 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
-    ap.add_argument("--dist-impl", choices=["bulk", "pipelined"],
-                    default="pipelined")
+    ap.add_argument("--dist-impl", choices=["bulk", "pipelined", "rdma"],
+                    default="pipelined",
+                    help="EP strategy; 'rdma' falls back to 'pipelined' "
+                         "(logged) where the remote-DMA kernels can't run "
+                         "— e.g. this multi-axis host mesh")
     ap.add_argument("--num-chunks", type=int, default=4)
     ap.add_argument("--moe-local-impl", default="fused")
     ap.add_argument("--out", default="experiments/dryrun")

@@ -14,6 +14,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.configs.base import ArchConfig, SHAPES, ShapeCell, get_config
 from repro.core.dispatch import SlotInfo
+from repro.core.moe import DIST_IMPLS
 from repro.models.model import ParallelContext, init_params, loss_fn
 from repro.models.serve import decode_step, init_cache, prefill
 from repro.optim import adamw
@@ -40,6 +41,8 @@ def make_pctx(cfg: ArchConfig, mesh: Optional[Mesh], *, train: bool,
               num_chunks: int = 4, kv_chunk: int = 1024,
               expert_compute: str = "kernel",
               policy: str = "auto") -> ParallelContext:
+    if dist_impl not in DIST_IMPLS:
+        raise ValueError(f"dist_impl {dist_impl!r} not in {DIST_IMPLS}")
     if mesh is None:
         return ParallelContext(remat=train, interpret=interpret,
                                kv_chunk=kv_chunk, dist_impl=dist_impl,

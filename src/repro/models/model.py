@@ -44,7 +44,10 @@ class ParallelContext:
     dp_axes: Tuple[str, ...] = ("data",)
     model_axis: str = "model"
     use_ep: bool = False                 # shard_map EP MoE (train/prefill)
-    dist_impl: str = "pipelined"         # bulk | pipelined
+    # bulk | pipelined | rdma — "rdma" auto-downgrades to "pipelined"
+    # (logged) where the remote-DMA kernels can't run; see
+    # core/dispatch.resolve_dist_impl.
+    dist_impl: str = "pipelined"
     num_chunks: int = 4
     remat: bool = True
     interpret: bool = True

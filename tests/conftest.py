@@ -20,3 +20,22 @@ except ImportError:
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+import subprocess  # noqa: E402
+import textwrap  # noqa: E402
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 420) -> str:
+    """Run python code in a subprocess with N host placeholder devices
+    (the main pytest process must keep 1 device; see module docstring).
+    Shared by test_distributed.py and test_rdma_kernel.py."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout

@@ -1,21 +1,25 @@
-"""RDMA dispatch kernel: semantics oracle + TPU-interpret execution when
-the runtime supports it (the kernel itself is a TPU-target artifact; the
-CPU container validates the address algebra and the oracle)."""
+"""RDMA dispatch/combine kernels: semantics oracles + TPU-interpret
+execution. Since the rotation-schedule rewrite both kernels EXECUTE under
+interpret on the CPU container (single named mesh axis), so the
+multi-device tests below run the real pallas kernels, not just the
+oracles. Multi-device cases run in a subprocess so the main pytest
+process keeps 1 device."""
+import functools
+
 import numpy as np
 import pytest
 
 import jax
 import jax.numpy as jnp
 
+from conftest import run_sub
+
+run_sub = functools.partial(run_sub, devices=4)
+
 
 def test_oracle_is_all_to_all_semantics():
     """landing[d][p] == slabs[p][d]: the symmetric-layout exchange."""
-    import subprocess, sys, os, textwrap
-    root = os.path.join(os.path.dirname(__file__), "..")
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env["PYTHONPATH"] = os.path.join(root, "src")
-    code = textwrap.dedent("""
+    out = run_sub("""
     import jax, jax.numpy as jnp, numpy as np
     from functools import partial
     from jax.sharding import PartitionSpec as P
@@ -35,25 +39,104 @@ def test_oracle_is_all_to_all_semantics():
             np.testing.assert_array_equal(ys[d, p], xs[p, d])
     print("ORACLE OK")
     """)
-    r = subprocess.run([sys.executable, "-c", code], env=env,
-                       capture_output=True, text=True, timeout=300)
-    assert r.returncode == 0, r.stdout + r.stderr
-    assert "ORACLE OK" in r.stdout
+    assert "ORACLE OK" in out
 
 
-def test_kernel_lowers_for_tpu_interpret():
-    """The kernel body traces (address math + semaphore protocol are
-    well-formed). Execution needs ICI/TPU-interpret; skip if the host
-    runtime can't run it."""
-    from repro.kernels.rdma.kernel import rdma_dispatch
+def test_combine_oracle_inverts_dispatch():
+    """combine(dispatch(x)) == x: the exchange is an involution, so the
+    reverse round returns every computed slab to its source slot."""
+    out = run_sub("""
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels.rdma.ref import rdma_combine_ref, rdma_dispatch_ref
+    from repro.compat import make_mesh, shard_map, with_mesh
+    mesh = make_mesh((4,), ("ep",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 8, 16), jnp.float32)
+    fn = shard_map(
+        lambda z: rdma_combine_ref(rdma_dispatch_ref(z, axis="ep"),
+                                   axis="ep"),
+        mesh, P("ep"), P("ep"), check_vma=False)
+    with with_mesh(mesh):
+        y = jax.jit(fn)(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    print("INVOLUTION OK")
+    """)
+    assert "INVOLUTION OK" in out
+
+
+def test_kernels_execute_under_interpret_world4():
+    """The REAL pallas kernels (rotation schedule) at world=4 under TPU
+    interpret: dispatch matches the all_to_all oracle, combine inverts
+    dispatch, and the custom VJP of dispatch is the combine exchange."""
+    out = run_sub("""
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels.rdma.kernel import rdma_combine, rdma_dispatch
+    from repro.kernels.rdma.ref import rdma_dispatch_ref
+    from repro.compat import make_mesh, shard_map, with_mesh
+    mesh = make_mesh((4,), ("ep",))
+    P_, C, H = 4, 8, 16
+    x = jnp.arange(4 * P_ * C * H, dtype=jnp.float32).reshape(4 * P_, C, H)
+
+    disp = shard_map(partial(rdma_dispatch, axis="ep", world=4,
+                             interpret=True),
+                     mesh, P("ep"), P("ep"), check_vma=False)
+    with with_mesh(mesh):
+        y = jax.jit(disp)(x)
+    xs = np.asarray(x).reshape(4, P_, C, H)
+    ys = np.asarray(y).reshape(4, P_, C, H)
+    for d in range(4):
+        for p in range(4):
+            np.testing.assert_array_equal(ys[d, p], xs[p, d])
+    print("DISPATCH KERNEL OK")
+
+    both = shard_map(
+        lambda z: rdma_combine(rdma_dispatch(z, axis="ep", world=4,
+                                             interpret=True),
+                               axis="ep", world=4, interpret=True),
+        mesh, P("ep"), P("ep"), check_vma=False)
+    with with_mesh(mesh):
+        rt = jax.jit(both)(x)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(x))
+    print("COMBINE INVERTS DISPATCH OK")
+
+    # VJP: the exchange permutation is symmetric, so the gradient of
+    # sum(dispatch(x) * g) wrt x is the same exchange applied to g.
+    g = jax.random.normal(jax.random.PRNGKey(2), x.shape, jnp.float32)
+    grad_fn = shard_map(
+        jax.grad(lambda z, gg: jnp.sum(
+            rdma_dispatch(z, axis="ep", world=4, interpret=True) * gg)),
+        mesh, (P("ep"), P("ep")), P("ep"), check_vma=False)
+    ref_fn = shard_map(partial(rdma_dispatch_ref, axis="ep"), mesh,
+                       P("ep"), P("ep"), check_vma=False)
+    with with_mesh(mesh):
+        gx = jax.jit(grad_fn)(x, g)
+        gref = jax.jit(ref_fn)(g)
+    np.testing.assert_array_equal(np.asarray(gx), np.asarray(gref))
+    print("VJP OK")
+    """)
+    assert "DISPATCH KERNEL OK" in out
+    assert "COMBINE INVERTS DISPATCH OK" in out
+    assert "VJP OK" in out
+
+
+@pytest.mark.parametrize("which", ["dispatch", "combine"])
+def test_kernel_lowers_for_tpu_interpret(which):
+    """Both kernel bodies trace (address math + semaphore protocol are
+    well-formed) and execute the world=1 loopback in-process. Skip only
+    if the host runtime can't run remote DMA at all."""
+    from repro.kernels.rdma.kernel import rdma_combine, rdma_dispatch
     from repro.compat import make_mesh, shard_map
     from functools import partial
     from jax.sharding import PartitionSpec as P
 
+    kernel = rdma_dispatch if which == "dispatch" else rdma_combine
     mesh = make_mesh((1,), ("ep",))
     x = jnp.ones((1, 8, 16), jnp.float32)
     fn = shard_map(
-        partial(rdma_dispatch, axis="ep", world=1, interpret=True),
+        partial(kernel, axis="ep", world=1, interpret=True),
         mesh, P(), P(), check_vma=False)
     try:
         y = jax.jit(fn)(x)  # world=1: loopback push to self

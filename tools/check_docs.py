@@ -1,0 +1,188 @@
+#!/usr/bin/env python3
+"""Doc-drift checker: shell commands inside markdown fenced code blocks
+must reference files, python modules, CLI flags and make targets that
+actually exist in this repo.
+
+Checked per command line (bash/sh/shell fenced blocks only):
+
+  * ``python -m MOD`` — MOD must resolve to a module file under ``src/``
+    or the repo root (external modules like pytest/pip are exempt);
+  * ``python path.py`` — the script must exist;
+  * ``--long-flag`` arguments — the flag string must appear literally in
+    the resolved module/script source (argparse declarations), so docs
+    can't advertise flags that were renamed or removed;
+  * ``make TARGET`` — the target must be defined in the Makefile;
+  * repo-relative paths ending in a known extension must exist;
+  * the leading program must be a known tool, an existing path, or an
+    env-var assignment.
+
+Usage::
+
+    python tools/check_docs.py README.md docs/ARCHITECTURE.md
+
+Exits 1 listing every stale reference (file:line: message).
+"""
+from __future__ import annotations
+
+import re
+import shlex
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SHELL_LANGS = {"bash", "sh", "shell"}
+# tools whose flags/args we cannot (or need not) introspect
+KNOWN_TOOLS = {"python", "python3", "pip", "pip3", "git", "make", "cat",
+               "ls", "head", "tail", "diff", "grep", "cd", "echo",
+               "export", "mkdir", "jq"}
+# `python -m MOD` where MOD is an installed third-party tool
+EXTERNAL_MODULES = {"pytest", "pip", "venv", "http.server"}
+CHECKED_EXTS = (".py", ".md", ".txt", ".json", ".ini", ".cfg", ".toml")
+MODULE_ROOTS = (REPO / "src", REPO)
+
+
+def iter_shell_lines(path: Path):
+    """Yield (lineno, command_line) from bash/sh fenced blocks, with
+    backslash continuations joined."""
+    in_block = False
+    lang = ""
+    pending: list[str] = []
+    pending_no = 0
+    for no, raw in enumerate(path.read_text().splitlines(), 1):
+        fence = re.match(r"^\s*```\s*(\w*)", raw)
+        if fence:
+            if pending:  # continuation dangling at block close
+                yield pending_no, " ".join(pending)
+                pending = []
+            in_block = not in_block
+            lang = fence.group(1).lower() if in_block else ""
+            continue
+        if not (in_block and lang in SHELL_LANGS):
+            continue
+        line = raw.strip()
+        if pending:
+            pending.append(line.rstrip("\\").strip())
+            if line.endswith("\\"):
+                continue
+            yield pending_no, " ".join(pending)
+            pending = []
+            continue
+        if not line or line.startswith("#"):
+            continue
+        line = line.lstrip("$ ").strip()
+        if line.endswith("\\"):
+            pending = [line.rstrip("\\").strip()]
+            pending_no = no
+            continue
+        if line:
+            yield no, line
+
+
+def resolve_module(mod: str) -> Path | None:
+    rel = mod.replace(".", "/")
+    for root in MODULE_ROOTS:
+        for cand in (root / f"{rel}.py", root / rel / "__init__.py"):
+            if cand.is_file():
+                return cand
+    return None
+
+
+def check_simple_command(cmd: str, makefile_text: str) -> list[str]:
+    """Errors for one pipeline-free command string."""
+    try:
+        toks = shlex.split(cmd)
+    except ValueError as e:
+        return [f"unparseable shell: {e}"]
+    # drop leading VAR=value assignments
+    while toks and re.match(r"^[A-Za-z_][A-Za-z0-9_]*=", toks[0]):
+        toks = toks[1:]
+    if not toks:
+        return []
+    errors: list[str] = []
+    prog, args = toks[0], toks[1:]
+
+    target_src: str | None = None   # source text flags are checked against
+    if prog in ("python", "python3"):
+        if "-m" in args:
+            if args.index("-m") + 1 >= len(args):
+                return ["`python -m` with no module name"]
+            mod = args[args.index("-m") + 1]
+            if mod not in EXTERNAL_MODULES:
+                mod_file = resolve_module(mod)
+                if mod_file is None:
+                    errors.append(f"module not found: {mod}")
+                else:
+                    target_src = mod_file.read_text()
+            args = args[args.index("-m") + 2:]
+        else:
+            scripts = [a for a in args if a.endswith(".py")]
+            if scripts:
+                script = REPO / scripts[0]
+                if not script.is_file():
+                    errors.append(f"script not found: {scripts[0]}")
+                else:
+                    target_src = script.read_text()
+    elif prog == "make":
+        for a in args:
+            if a.startswith("-"):
+                continue
+            if not re.search(rf"^{re.escape(a)}\s*:", makefile_text, re.M):
+                errors.append(f"make target not found: {a}")
+    elif "/" in prog or prog.endswith(CHECKED_EXTS):
+        if not prog.startswith(("/tmp", "/dev", "$", "~")) \
+                and not (REPO / prog).exists():
+            errors.append(f"path not found: {prog}")
+    elif prog not in KNOWN_TOOLS:
+        errors.append(f"unknown command: {prog}")
+
+    for a in args:
+        if a.startswith("--") and target_src is not None:
+            flag = a.split("=")[0]
+            if flag not in target_src:
+                errors.append(f"flag not found in target source: {flag}")
+        elif not a.startswith(("-", "/tmp", "/dev", "$", "~")) \
+                and a.endswith(CHECKED_EXTS) and not (REPO / a).exists():
+            errors.append(f"path not found: {a}")
+    return errors
+
+
+def check_file(path: Path) -> list[str]:
+    makefile = REPO / "Makefile"
+    makefile_text = makefile.read_text() if makefile.is_file() else ""
+    try:
+        shown = path.relative_to(REPO)
+    except ValueError:
+        shown = path
+    problems = []
+    for no, line in iter_shell_lines(path):
+        for simple in re.split(r"\s*(?:&&|\|\||;|\|)\s*", line):
+            if not simple:
+                continue
+            for err in check_simple_command(simple, makefile_text):
+                problems.append(f"{shown}:{no}: {err}  [{simple}]")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] or [REPO / "README.md"]
+    problems = []
+    n_cmds = 0
+    for f in files:
+        f = f if f.is_absolute() else REPO / f
+        if not f.is_file():
+            problems.append(f"{f}: file not found")
+            continue
+        n_cmds += sum(1 for _ in iter_shell_lines(f))
+        problems.extend(check_file(f))
+    if problems:
+        print("\n".join(problems), file=sys.stderr)
+        print(f"check_docs: {len(problems)} stale reference(s)",
+              file=sys.stderr)
+        return 1
+    print(f"check_docs: OK ({n_cmds} command lines across "
+          f"{len(files)} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
