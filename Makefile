@@ -1,7 +1,7 @@
 # FlashMoE repro — common entry points. Pure-Python JAX project: no
 # build step, PYTHONPATH=src is the only setup (see README.md).
 
-.PHONY: test smoke check-docs bench dryrun
+.PHONY: test smoke check-docs bench bench-smoke dryrun
 
 # tier-1 verify: the whole suite (multi-device cases spawn subprocesses)
 test:
@@ -16,9 +16,13 @@ smoke:
 check-docs:
 	python tools/check_docs.py README.md docs/ARCHITECTURE.md
 
-# refresh the latency baseline (local fused paths + bulk/pipelined/rdma EP)
+# refresh the latency baseline (local paths + bulk/pipelined/rdma/fused EP)
 bench:
 	PYTHONPATH=src python -m benchmarks.bench_latency BENCH_latency.json
+
+# tiny-shape CI sanity run: every impl row must emit valid JSON
+bench-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_latency --smoke /tmp/bench_smoke.json
 
 # lower+compile one production cell on the host-placeholder mesh
 dryrun:

@@ -7,10 +7,15 @@ the roofline artifacts.
 
 Run as a script this also benchmarks the DISTRIBUTED dispatch paths
 (bulk AllToAll vs the paper's pipelined overlap schedule vs the
-device-initiated rdma kernels under interpret) on a 4-device
-host-platform mesh and writes the whole record to BENCH_latency.json —
-the perf-trajectory baseline future PRs compare against.
+device-initiated rdma kernels vs the fused single persistent kernel,
+all under interpret) on a 4-device host-platform mesh and writes the
+whole record to BENCH_latency.json — the perf-trajectory baseline
+future PRs compare against.
+
+``--smoke`` runs a tiny-shape variant of every row (CI sanity: the JSON
+must stay valid and per-impl complete; wall times are meaningless).
 """
+import argparse
 import json
 import os
 import sys
@@ -33,7 +38,8 @@ from repro.core.gate import GateConfig
 from repro.core.moe import MoEConfig, init_moe_params, moe_layer
 
 
-def run(tokens_list=(512, 1024, 2048, 4096), E=16, H=256, F=256):
+def run(tokens_list=(512, 1024, 2048, 4096), E=16, H=256, F=256,
+        warmup=3, iters=10):
     gc = GateConfig(num_experts=E, top_k=2, capacity_factor=1.0,
                     aux_loss=0.0, router_z_loss=0.0)
     results = []
@@ -45,7 +51,7 @@ def run(tokens_list=(512, 1024, 2048, 4096), E=16, H=256, F=256):
         for T in tokens_list:
             x = jax.random.normal(jax.random.PRNGKey(1), (T, H),
                                   jnp.float32)
-            us = time_fn(fn, params, x)
+            us = time_fn(fn, params, x, warmup=warmup, iters=iters)
             name = f"fig10/latency_{impl}_T{T}"
             emit(name, us, f"tokens={T};experts={E}")
             results.append((impl, T, us))
@@ -57,12 +63,14 @@ def run(tokens_list=(512, 1024, 2048, 4096), E=16, H=256, F=256):
     return results
 
 
-def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256):
-    """Bulk vs pipelined vs rdma EP dispatch on host meshes.
+def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256,
+                    warmup=3, iters=10):
+    """Bulk vs pipelined vs rdma vs fused EP dispatch on host meshes.
 
     CPU wall times are RELATIVE (XLA:CPU serializes the collectives the
-    pipelined schedule overlaps on TPU); the point of the baseline is the
-    trajectory of the pipelined path itself across PRs.
+    pipelined schedule overlaps on TPU, and the one-sided kernels run
+    under interpret); the point of the baseline is the per-impl
+    trajectory across PRs.
     """
     from repro.compat import make_mesh, with_mesh
     from repro.core.dispatch import SlotInfo, distributed_moe
@@ -72,19 +80,25 @@ def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256):
         emit("fig10/ep_skipped", 0.0, f"devices={jax.device_count()}")
         return []
     mesh = make_mesh((1, P_), ("data", "model"))
-    # the rdma kernels execute under interpret only on a pure-EP mesh
-    # (single named axis); tokens/device match the 2-axis runs.
+    # the rdma/fused kernels execute under interpret only on a pure-EP
+    # mesh (single named axis); tokens/device match the 2-axis runs.
     mesh_ep = make_mesh((P_,), ("model",))
     gc = GateConfig(num_experts=E, top_k=2, capacity_factor=2.0,
                     aux_loss=0.0, router_z_loss=0.0)
     info = SlotInfo.make(E, P_)
     results = []
     for impl, chunks in (("bulk", 1), ("pipelined", 2), ("pipelined", 4),
-                         ("rdma", 1)):
+                         ("rdma", 1), ("fused", 1)):
+        # "fused" runs its expert compute INSIDE the kernel, so it cannot
+        # use the einsum stand-in the XLA-side impls are timed with; its
+        # row therefore includes interpret-mode kernel-compute overhead
+        # (compare fused across PRs, not against the einsum rows).
         cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
                         gated=False, interpret=True, dist_impl=impl,
-                        num_chunks=chunks, expert_compute="einsum")
-        m = mesh_ep if impl == "rdma" else mesh
+                        num_chunks=chunks,
+                        expert_compute=("kernel" if impl == "fused"
+                                        else "einsum"))
+        m = mesh_ep if impl in ("rdma", "fused") else mesh
         params = dict(init_moe_params(jax.random.PRNGKey(0), cfg))
         for w in ("w1", "w2", "w3"):
             if w in params:
@@ -92,22 +106,30 @@ def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256):
         fn = jax.jit(lambda p, x, cfg=cfg, m=m: distributed_moe(
             p, x, cfg, m)[0])
         for T in tokens_list:
-            shape = (1, T, H) if impl == "rdma" else (P_, T // P_, H)
+            shape = ((1, T, H) if impl in ("rdma", "fused")
+                     else (P_, T // P_, H))
             x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
             with with_mesh(m):
-                us = time_fn(fn, params, x)
+                us = time_fn(fn, params, x, warmup=warmup, iters=iters)
             name = f"fig10/ep_{impl}_c{chunks}_T{T}"
             emit(name, us, f"tokens={T};experts={E};world={P_}")
             results.append((f"{impl}_c{chunks}", T, us))
     return results
 
 
-def main(out_path: str = "BENCH_latency.json"):
-    local = run()
-    dist = run_distributed()
+def main(out_path: str = "BENCH_latency.json", smoke: bool = False):
+    if smoke:
+        local = run(tokens_list=(256,), E=4, H=128, F=128,
+                    warmup=1, iters=3)
+        dist = run_distributed(tokens_list=(256,), E=4, H=128, F=128,
+                               warmup=1, iters=3)
+    else:
+        local = run()
+        dist = run_distributed()
     rec = {
         "meta": {
             "bench": "bench_latency",
+            "mode": "smoke" if smoke else "full",
             "jax": jax.__version__,
             "platform": jax.devices()[0].platform,
             "devices": jax.device_count(),
@@ -127,4 +149,10 @@ def main(out_path: str = "BENCH_latency.json"):
 
 
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_latency.json")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("out_path", nargs="?", default="BENCH_latency.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, few iters: JSON-validity CI run "
+                         "(make bench-smoke)")
+    a = ap.parse_args()
+    main(a.out_path, smoke=a.smoke)

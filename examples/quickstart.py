@@ -21,13 +21,16 @@ cfg = MoEConfig(
     gate=GateConfig(num_experts=16, top_k=2, capacity_factor=1.25),
     d_model=256, d_ff=256, activation="gelu", gated=False,
     impl="fused",          # the single-kernel FlashMoE path
-    dist_impl="rdma",      # EP strategy if this layer went multi-device
+    dist_impl="fused",     # EP strategy if this layer went multi-device:
+                           # the single persistent dispatch->compute->
+                           # combine kernel (kernels/fused_ep)
     interpret=True,        # pallas interpret mode (no TPU here)
 )
 
-# which EP dispatch/combine strategy would actually run here (the rdma
-# kernels need TPU or interpret mode on a pure-EP mesh; elsewhere the
-# request downgrades to "pipelined" with a logged reason)
+# which EP dispatch/combine strategy would actually run here (the fused
+# and rdma one-sided kernels need TPU or interpret mode on a pure-EP
+# mesh; elsewhere the request walks the fused -> rdma -> pipelined
+# chain with a logged reason)
 from repro.core.dispatch import resolve_dist_impl
 print(f"local impl: {cfg.impl}; dist_impl: requested {cfg.dist_impl!r}, "
       f"chosen {resolve_dist_impl(cfg)!r}")

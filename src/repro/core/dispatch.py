@@ -4,7 +4,7 @@ All mesh/shard_map access goes through ``repro.compat`` (supported JAX
 range 0.4.35–0.4.37 plus forward-compat branches; see compat.py), so this
 module is version-portable by construction.
 
-Three strategies, all running inside ``shard_map`` over the EP axis:
+Four strategies, all running inside ``shard_map`` over the EP axis:
 
   * ``bulk`` — the baseline the paper measures against: one bulk-synchronous
     AllToAll for dispatch, one for combine (GShard / Megatron style). All
@@ -24,10 +24,21 @@ Three strategies, all running inside ``shard_map`` over the EP axis:
     pallas kernels (kernels/rdma/) pushing slabs straight into the peer's
     writer-indexed landing buffer via ``pltpu.make_async_remote_copy`` —
     no collective barrier, semaphore-signalled completion. Requires the
-    remote-DMA kernels to lower: real TPU, or interpret mode on a mesh
-    whose only named axis is the EP axis. Anywhere else
-    :func:`resolve_dist_impl` falls back to ``pipelined`` and logs why,
-    so every entry point accepts ``dist_impl="rdma"`` unconditionally.
+    remote-DMA kernels to lower: real TPU (multi-axis meshes addressed by
+    mesh coordinates), or interpret mode on a mesh whose only named axis
+    is the EP axis.
+
+  * ``fused`` — the paper's title claim: dispatch, expert compute and
+    combine run as ONE persistent pallas kernel (kernels/fused_ep/) with
+    no XLA boundary between phases — round s+1's payload is on the wire
+    while round s's expert tiles compute and round s-1's outputs push
+    back. Needs everything ``rdma`` needs plus in-kernel expert compute
+    (``expert_compute="kernel"``).
+
+Where a strategy cannot run, :func:`resolve_dist_impl` walks the chain
+``fused -> rdma -> pipelined`` and logs each downgrade reason once per
+(requested impl, reason), so every entry point accepts any
+``dist_impl`` unconditionally.
 
 Expert placement ("slots"): the EP world always equals the mesh's model-axis
 size P. When E >= P, each device hosts E/P experts. When E < P, experts are
@@ -48,11 +59,20 @@ import jax.numpy as jnp
 
 from repro.core.gate import GateConfig, GateOutput, TILE_M
 from repro.core.moe import DIST_IMPLS, MoEConfig, run_gate, shared_expert_ffn
-from repro.kernels.fused_moe.ops import fused_moe_ffn
+from repro.kernels.fused_ep.kernel import fused_ep_moe
+from repro.kernels.fused_moe.ops import grouped_expert_ffn
 from repro.kernels.rdma.kernel import rdma_combine, rdma_dispatch
 
 _logger = logging.getLogger(__name__)
+# warn-once memory, keyed (requested_impl, reason): a warning for one
+# cause must not suppress logging of a different impl's (or a different
+# cause's) downgrade. Cleared by reset_fallback_warnings().
 _warned_fallbacks = set()
+
+# downgrade chain walked by resolve_dist_impl when a strategy's gate
+# rejects: the single persistent kernel degrades to the three-kernel
+# rdma path, which degrades to the portable pipelined path.
+_FALLBACK_NEXT = {"fused": "rdma", "rdma": "pipelined"}
 
 
 def rdma_fallback_reason(interpret: bool, mesh=None,
@@ -62,8 +82,9 @@ def rdma_fallback_reason(interpret: bool, mesh=None,
     Interpret mode: the 0.4.x remote-DMA discharge rule supports a single
     named mesh axis (shard_map binds every mesh axis, so the mesh must be
     pure-EP). Compiled mode: only the TPU backend lowers
-    ``make_async_remote_copy``, and the kernels' scalar LOGICAL device ids
-    address a mesh whose non-EP axes are trivial.
+    ``make_async_remote_copy``; multi-axis meshes are fine there — peers
+    are addressed by mesh COORDINATES (kernels/rdma.device_id_for_peer:
+    peer index on the EP axis, own index on every other axis).
     """
     if mesh is not None and ep_axis not in mesh.shape:
         return f"mesh has no {ep_axis!r} axis"
@@ -76,11 +97,30 @@ def rdma_fallback_reason(interpret: bool, mesh=None,
     if backend != "tpu":
         return (f"backend {backend!r} cannot lower make_async_remote_copy "
                 "without interpret mode")
-    if mesh is not None and any(
-            n != ep_axis and s != 1 for n, s in mesh.shape.items()):
-        return ("scalar LOGICAL device ids require non-EP mesh axes of "
-                f"size 1; mesh axes are {tuple(mesh.shape.items())}")
     return None
+
+
+def fused_fallback_reason(interpret: bool, mesh=None,
+                          ep_axis: str = "model",
+                          expert_compute: str = "kernel") -> Optional[str]:
+    """None when the single persistent kernel can run here, else why not.
+
+    The fused kernel needs everything the rdma kernels need (its
+    transport IS a pair of one-sided exchanges) plus the expert compute
+    inside the kernel — ``expert_compute="einsum"`` (the dry-run/roofline
+    mode) keeps compute in XLA-visible einsums, which only the unfused
+    strategies can honor.
+    """
+    if expert_compute != "kernel":
+        return (f"expert_compute={expert_compute!r} keeps expert compute "
+                "outside the kernel (dry-run/roofline mode)")
+    return rdma_fallback_reason(interpret, mesh, ep_axis)
+
+
+def reset_fallback_warnings() -> None:
+    """Test hook: forget which (requested_impl, reason) downgrades have
+    been logged so tests can assert on fresh warnings."""
+    _warned_fallbacks.clear()
 
 
 def resolve_dist_impl(cfg: MoEConfig, mesh=None,
@@ -88,23 +128,32 @@ def resolve_dist_impl(cfg: MoEConfig, mesh=None,
     """Effective EP strategy for this config/mesh/backend.
 
     Validates ``cfg.dist_impl`` against :data:`repro.core.moe.DIST_IMPLS`
-    and downgrades ``"rdma"`` to ``"pipelined"`` — logging the reason once
-    per distinct cause — when the remote-DMA kernels cannot run.
+    and walks the downgrade chain ``fused -> rdma -> pipelined``, logging
+    each distinct (requested impl, reason) once, until a strategy's gate
+    accepts.
     """
     if cfg.dist_impl not in DIST_IMPLS:
         raise ValueError(
             f"unknown dist_impl {cfg.dist_impl!r}; expected one of "
             f"{DIST_IMPLS}")
-    if cfg.dist_impl != "rdma":
-        return cfg.dist_impl
-    reason = rdma_fallback_reason(cfg.interpret, mesh, ep_axis)
-    if reason is None:
-        return "rdma"
-    if reason not in _warned_fallbacks:
-        _warned_fallbacks.add(reason)
-        _logger.warning(
-            "dist_impl='rdma' falling back to 'pipelined': %s", reason)
-    return "pipelined"
+    impl, reasons = cfg.dist_impl, []
+    while impl in _FALLBACK_NEXT:
+        if impl == "fused":
+            reason = fused_fallback_reason(cfg.interpret, mesh, ep_axis,
+                                           cfg.expert_compute)
+        else:
+            reason = rdma_fallback_reason(cfg.interpret, mesh, ep_axis)
+        if reason is None:
+            break
+        reasons.append((impl, reason))   # the gate that rejected
+        impl = _FALLBACK_NEXT[impl]
+    for gate, reason in reasons:
+        key = (cfg.dist_impl, reason)
+        if key not in _warned_fallbacks:
+            _warned_fallbacks.add(key)
+            _logger.warning("dist_impl=%r falling back to %r (%s gate): %s",
+                            cfg.dist_impl, impl, gate, reason)
+    return impl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,8 +270,7 @@ def _experts_einsum(w1, w2, w3, x, cfg: MoEConfig):
     return jnp.einsum("lrf,lfh->lrh", h.astype(x.dtype), w2)
 
 
-def _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg: MoEConfig,
-                          info: SlotInfo, capacity: int):
+def _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg: MoEConfig):
     """Expert tiles on the received buffer — ONE fused grouped-GEMM kernel.
 
     recv: (P, local_slots, C, H) — tokens from every source for my slots.
@@ -233,28 +281,14 @@ def _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg: MoEConfig,
         x = jnp.transpose(recv, (1, 0, 2, 3)).reshape(Ls, P * C, H)
         y = _experts_einsum(w1, w2, w3, x, cfg)
         return jnp.transpose(y.reshape(Ls, P, C, H), (1, 0, 2, 3))
-    x = jnp.transpose(recv, (1, 0, 2, 3)).reshape(Ls * P * C, H)
-    rows_per_slot = P * C
-    tiles_per_slot = rows_per_slot // TILE_M
-    tile_expert = jnp.repeat(
-        jnp.arange(Ls, dtype=jnp.int32), tiles_per_slot)
-    # valid tiles: tile t of slot s covers rows of source p = (t*TILE_M)//C
-    tile_row = (jnp.arange(tiles_per_slot, dtype=jnp.int32) * TILE_M)[None, :]
-    src = tile_row // C                                      # (1, tps)
-    row_in_src = tile_row - src * C
-    cnt = jnp.transpose(counts_rcv, (1, 0))                  # (Ls, P)
-    cnt_t = jnp.take_along_axis(cnt, src.repeat(Ls, 0), axis=1)
-    tile_valid = (row_in_src < cnt_t).astype(jnp.int32).reshape(-1)
-    scale = jnp.ones((x.shape[0],), jnp.float32)
-    y = fused_moe_ffn(
-        x, w1, w2, w3, tile_expert, tile_valid, scale,
-        activation=cfg.activation, interpret=cfg.interpret, use_kernel=True)
-    return jnp.transpose(y.reshape(Ls, P, C, H), (1, 0, 2, 3))
+    return grouped_expert_ffn(w1, w2, w3, recv, counts_rcv,
+                              activation=cfg.activation,
+                              interpret=cfg.interpret)
 
 
 def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
                  info: SlotInfo, axis: str, impl: str,
-                 rng: Optional[jax.Array]):
+                 rng: Optional[jax.Array], mesh_axes=None):
     """Runs INSIDE shard_map: x is (B_loc, S_loc, H) — the resident
     sequence-sharded activation layout (§Perf iteration 2: tokens arrive
     already split over the EP axis; no boundary all-gather/slice).
@@ -287,7 +321,7 @@ def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
     if impl == "bulk":
         recv = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
         recv = recv.reshape(P, info.local_slots, C, H)
-        y = _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg, info, C)
+        y = _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg)
         y = y.reshape(info.slots, C, H)
         y_back = jax.lax.all_to_all(y, axis, 0, 0, tiled=True)
     elif impl == "pipelined":
@@ -302,11 +336,26 @@ def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
         # downstream gather-combine is untouched.
         slabs = buf.reshape(P, info.local_slots * C, H)
         landing = rdma_dispatch(slabs, axis=axis, world=P,
-                                interpret=cfg.interpret)
+                                interpret=cfg.interpret,
+                                mesh_axes=mesh_axes)
         recv = landing.reshape(P, info.local_slots, C, H)
-        y = _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg, info, C)
+        y = _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg)
         y_back = rdma_combine(y.reshape(P, info.local_slots * C, H),
-                              axis=axis, world=P, interpret=cfg.interpret)
+                              axis=axis, world=P, interpret=cfg.interpret,
+                              mesh_axes=mesh_axes)
+        y_back = y_back.reshape(info.slots, C, H)
+    elif impl == "fused":
+        # The single persistent kernel (kernels/fused_ep): dispatch,
+        # expert compute and combine share ONE pallas_call; only the tiny
+        # counts metadata (exchanged above) precedes it. Same staged-slab
+        # and combine-landing layouts as bulk/rdma, so the downstream
+        # gather-combine is untouched — and the output is bitwise-equal
+        # to the bulk path.
+        slabs = buf.reshape(P, info.local_slots * C, H)
+        y_back = fused_ep_moe(
+            slabs, w1, w2, w3, counts_rcv, axis=axis, world=P,
+            activation=cfg.activation, interpret=cfg.interpret,
+            mesh_axes=mesh_axes)
         y_back = y_back.reshape(info.slots, C, H)
     else:
         raise ValueError(impl)
@@ -353,8 +402,8 @@ def _pipelined_rounds(buf, counts_rcv, w1, w2, w3, cfg: MoEConfig,
     def body(i, carry):
         out, recv = carry
         nxt = a2a(chunk(i + 1)).reshape(P, Ls, Cc, H)  # overlap: dispatch i+1
-        y = _local_expert_compute(w1, w2, w3, recv, cnt_chunk(i), cfg,
-                                  info, Cc)            # compute i
+        y = _local_expert_compute(w1, w2, w3, recv, cnt_chunk(i),
+                                  cfg)                 # compute i
         y_back = a2a(y.reshape(S, Cc, H))              # overlap: combine i
         out = jax.lax.dynamic_update_slice_in_dim(out, y_back, i * Cc, axis=1)
         return out, nxt
@@ -362,8 +411,7 @@ def _pipelined_rounds(buf, counts_rcv, w1, w2, w3, cfg: MoEConfig,
     if n > 1:
         out, recv = jax.lax.fori_loop(0, n - 1, body, (out, recv),
                                       unroll=True)
-    y = _local_expert_compute(w1, w2, w3, recv, cnt_chunk(n - 1), cfg,
-                              info, Cc)
+    y = _local_expert_compute(w1, w2, w3, recv, cnt_chunk(n - 1), cfg)
     y_back = a2a(y.reshape(S, Cc, H))
     out = jax.lax.dynamic_update_slice_in_dim(out, y_back, (n - 1) * Cc,
                                               axis=1)
@@ -391,7 +439,8 @@ def distributed_moe(params: dict, x: jax.Array, cfg: MoEConfig,
 
     impl = resolve_dist_impl(cfg, mesh, ep_axis)
     body = functools.partial(_ep_moe_body, cfg=cfg, info=info, axis=ep_axis,
-                             impl=impl, rng=rng)
+                             impl=impl, rng=rng,
+                             mesh_axes=tuple(mesh.shape))
     w3 = params.get("w3")
     shared = {k: v for k, v in params.items() if k.startswith("shared_")}
     in_specs = (P(None, None), w_spec_e, w_spec_e,

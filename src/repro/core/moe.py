@@ -9,9 +9,12 @@ Three execution paths, all numerically equivalent (tested):
   * ``dist``   — expert-parallel path (see ``core/dispatch.py``): bulk
                  AllToAll (baseline, GShard-style), payload-efficient
                  chunk-pipelined dispatch (the paper's contribution via
-                 XLA async collectives), or device-initiated one-sided
-                 RDMA for both directions (``dist_impl="rdma"``, the
-                 paper's §3.2 put+signal as pallas kernels).
+                 XLA async collectives), device-initiated one-sided RDMA
+                 for both directions (``dist_impl="rdma"``, the paper's
+                 §3.2 put+signal as pallas kernels), or the whole
+                 operator as ONE persistent kernel — dispatch, expert
+                 compute and combine fused into a single pallas_call
+                 (``dist_impl="fused"``, the paper's title claim).
 
 Shared experts (DeepSeek-v2) run as a dense FFN added to the routed output.
 """
@@ -37,9 +40,11 @@ from repro.kernels.gate.ops import fused_gate
 
 # EP dispatch/combine strategies (core/dispatch.py). "rdma" needs the
 # pallas remote-DMA kernels to lower (TPU, or interpret mode on a
-# single-axis mesh) and falls back to "pipelined" with a logged reason
-# otherwise — see core/dispatch.resolve_dist_impl.
-DIST_IMPLS = ("bulk", "pipelined", "rdma")
+# single-axis mesh); "fused" (the single persistent kernel) additionally
+# needs in-kernel expert compute (expert_compute="kernel"). Each falls
+# back down the chain fused -> rdma -> pipelined with a logged reason —
+# see core/dispatch.resolve_dist_impl.
+DIST_IMPLS = ("bulk", "pipelined", "rdma", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,7 +56,8 @@ class MoEConfig:
     gated: bool = True               # SwiGLU-style experts (w3 present)
     d_ff_shared: int = 0             # shared-expert FFN width (0 = none)
     impl: str = "fused"              # ref | fused | gather
-    dist_impl: str = "pipelined"     # bulk | pipelined | rdma  (EP path)
+    # EP path: bulk | pipelined | rdma | fused (single persistent kernel)
+    dist_impl: str = "pipelined"
     num_chunks: int = 4              # pipeline chunks for the flash path
     use_pallas_gate: bool = True
     interpret: bool = True           # pallas interpret mode (CPU container)

@@ -1,0 +1,298 @@
+"""The FlashMoE single persistent kernel: dispatch -> expert compute ->
+combine fused into ONE ``pallas_call`` (`dist_impl="fused"`).
+
+This is the paper's title contribution made literal on TPU. PR 2 closed
+the RDMA loop as three XLA-visible stages (rdma_dispatch kernel ->
+fused_moe_ffn kernel -> rdma_combine kernel); here the three stages run
+inside a single persistent kernel body, so there is no kernel-launch or
+XLA boundary between transport and compute and a round's payload is
+consumed the moment its landing-slab semaphore fires (§3.1's tile
+scheduler, with the Scheduler/Processor split collapsed onto the one
+sequential TPU core the way Algorithm 2 collapses it onto an SM).
+
+Per device, the body walks the PR-2 rotation schedule (step ``s`` sends
+to peer ``(me+s) % P``; every step is a sender/receiver bijection — no
+P-way incast, and the schedule the 0.4.x interpret discharge rule can
+execute faithfully):
+
+  round s   (a) one-sided push of staged slab s+LOOKAHEAD to its peer's
+                dispatch landing buffer (``pltpu.make_async_remote_copy``,
+                writer-indexed cell — Theorem 3.1's p* = source);
+            (b) wait the round-s landing-slab DMA semaphore, then run
+                that slab's expert tiles immediately: per 128-row tile,
+                HBM->VMEM copy, GEMM0 -> act (-> gate) -> GEMM1 in the
+                exact f-tile accumulation order of the fused_moe kernel
+                (bitwise-equal outputs), with null tiles skipped via the
+                exchanged per-source counts (§3.2.1 work conservation);
+            (c) one-sided push of the computed slab straight back into
+                the SOURCE's writer-indexed combine buffer.
+
+So dispatch of round s+1, compute of round s and combine of round s-1
+are all in flight inside one kernel — the paper's Figure 4 with the
+launch boundaries deleted. The staging buffers realize core/layout.py's
+symmetric layout L: dispatch landing = (ROUND_DISPATCH, STAGE_REMOTE),
+combine staging = (ROUND_COMBINE, STAGE_LOCAL), combine landing =
+(ROUND_COMBINE, STAGE_REMOTE); all writer-indexed, so no two one-sided
+writes can address the same cell.
+
+Gradients: the exchange permutation is the PR-2 involution, so the
+backward transport is the same pair of one-sided exchanges applied to
+the cotangent; between them sit the fused_moe backward kernels. The
+custom VJP below re-traces exactly that decomposition (rdma_dispatch ->
+grouped_expert_ffn -> rdma_combine), whose forward is bitwise-equal to
+this kernel — rematerialized, residual-free transport.
+
+Gating (core/dispatch.fused_fallback_reason): real TPU, or interpret
+mode on a pure-EP mesh (single named axis — the 0.4.x remote-DMA
+discharge limit). Multi-axis TPU meshes are addressed by mesh
+COORDINATES (kernels/rdma.device_id_for_peer). Known follow-ups for
+real-TPU perf, deliberately out of scope here: double-buffered x-tile
+loads and tile-granular (rather than slab-granular) combine pushes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.gate import TILE_M
+from repro.kernels.fused_moe.kernel import _act, effective_tile_f
+from repro.kernels.fused_moe.ops import grouped_expert_ffn
+from repro.kernels.rdma.kernel import (_CompilerParams, device_id_for_peer,
+                                       rdma_combine, rdma_dispatch)
+
+FUSED_COLLECTIVE_ID = 9
+
+# dispatch rounds kept in flight ahead of compute (Fig. 4 depth): round
+# s+LOOKAHEAD's payload is on the wire while round s's tiles compute.
+LOOKAHEAD = 2
+
+
+def _tile_ffn(x, w1_ref, w2_ref, w3_ref, l, *, activation: str,
+              tile_f: int, num_f: int):
+    """One 128-row expert tile, bitwise-mirroring _kernel_body of
+    kernels/fused_moe: same f-tile split, same f32 accumulation order,
+    same cast points — this is what makes fused == bulk bitwise."""
+    acc = jnp.zeros((x.shape[0], x.shape[1]), jnp.float32)
+    for f in range(num_f):
+        w1f = w1_ref[l, :, f * tile_f:(f + 1) * tile_f]
+        h = jnp.dot(x, w1f, preferred_element_type=jnp.float32)
+        h = _act(activation, h)
+        if w3_ref is not None:
+            g = jnp.dot(x, w3_ref[l, :, f * tile_f:(f + 1) * tile_f],
+                        preferred_element_type=jnp.float32)
+            h = h * g
+        w2f = w2_ref[l, f * tile_f:(f + 1) * tile_f, :]
+        acc = acc + jnp.dot(h.astype(w2f.dtype), w2f,
+                            preferred_element_type=jnp.float32)
+    return acc
+
+
+def _fused_ep_body(slabs_ref, w1_ref, w2_ref, w3_ref, counts_ref,
+                   out_ref, land_ref,
+                   ystage_ref, x_vmem, y_vmem,
+                   disp_send, disp_recv, comb_send, comb_recv, copy_sem,
+                   *, axis: str, world: int, local_slots: int,
+                   capacity: int, activation: str, tile_f: int,
+                   num_f: int, mesh_axes):
+    my_id = jax.lax.axis_index(axis)
+    tiles = capacity // TILE_M
+
+    def make_disp(s):
+        # staged slab for peer (me+s)%P -> peer's landing row ME
+        peer = jax.lax.rem(my_id + s, world)
+        device_id, id_type = device_id_for_peer(peer, axis, mesh_axes)
+        return pltpu.make_async_remote_copy(
+            src_ref=slabs_ref.at[peer],
+            dst_ref=land_ref.at[my_id],
+            send_sem=disp_send.at[s],
+            recv_sem=disp_recv.at[s],
+            device_id=device_id,
+            device_id_type=id_type,
+        )
+
+    def make_comb(s):
+        # computed round-s slab -> its SOURCE's combine row ME; step s is
+        # the inverse rotation (me-s), also a bijection per step.
+        src = jax.lax.rem(my_id - s + world, world)
+        device_id, id_type = device_id_for_peer(src, axis, mesh_axes)
+        return pltpu.make_async_remote_copy(
+            src_ref=ystage_ref.at[src],
+            dst_ref=out_ref.at[my_id],
+            send_sem=comb_send.at[s],
+            recv_sem=comb_recv.at[s],
+            device_id=device_id,
+            device_id_type=id_type,
+        )
+
+    for s in range(min(LOOKAHEAD, world)):
+        make_disp(s).start()
+
+    for s in range(world):
+        # landing-slab semaphore for round s: payload from (me-s)%P is in
+        # land_ref[src] the moment this returns — compute starts NOW.
+        make_disp(s).wait()
+        if s + LOOKAHEAD < world:
+            make_disp(s + LOOKAHEAD).start()   # keep dispatch in flight
+        src = jax.lax.rem(my_id - s + world, world)
+        for l in range(local_slots):
+            for t in range(tiles):
+                row0 = l * capacity + t * TILE_M
+                ld = pltpu.make_async_copy(
+                    land_ref.at[src, pl.ds(row0, TILE_M)], x_vmem, copy_sem)
+                ld.start()
+                ld.wait()
+                valid = (t * TILE_M) < counts_ref[src, l]
+                y_vmem[...] = jax.lax.cond(
+                    valid,
+                    lambda: _tile_ffn(
+                        x_vmem[...], w1_ref, w2_ref, w3_ref, l,
+                        activation=activation, tile_f=tile_f,
+                        num_f=num_f).astype(y_vmem.dtype),
+                    lambda: jnp.zeros(y_vmem.shape, y_vmem.dtype))
+                st = pltpu.make_async_copy(
+                    y_vmem, ystage_ref.at[src, pl.ds(row0, TILE_M)],
+                    copy_sem)
+                st.start()
+                st.wait()
+        make_comb(s).start()   # combine round s overlaps compute of s+1
+
+    for s in range(world):
+        make_comb(s).wait()
+
+
+def _fused_ep_call(slabs, w1, w2, w3, counts, *, axis: str, world: int,
+                   activation: str, interpret: bool, mesh_axes):
+    P, LsC, H = slabs.shape
+    Ls, _, F = w1.shape
+    assert P == world, (P, world)
+    assert LsC % Ls == 0, (LsC, Ls)
+    C = LsC // Ls
+    assert C % TILE_M == 0, (C, TILE_M)
+    tile_f = effective_tile_f(H, F, slabs.dtype.itemsize, TILE_M)
+    num_f = F // tile_f
+
+    body = functools.partial(
+        _fused_ep_body, axis=axis, world=world, local_slots=Ls,
+        capacity=C, activation=activation, tile_f=tile_f, num_f=num_f,
+        mesh_axes=mesh_axes)
+
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),    # staged slabs
+                pl.BlockSpec(memory_space=pltpu.VMEM),   # w1 (resident)
+                pl.BlockSpec(memory_space=pltpu.VMEM)]   # w2 (resident)
+    inputs = [slabs, w1, w2]
+    if w3 is not None:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.VMEM))
+        inputs.append(w3)
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))  # counts
+    inputs.append(counts)
+
+    def wrapped(*refs):
+        if w3 is not None:
+            s_r, w1_r, w2_r, w3_r, c_r = refs[:5]
+            rest = refs[5:]
+        else:
+            s_r, w1_r, w2_r, c_r = refs[:4]
+            w3_r = None
+            rest = refs[4:]
+        body(s_r, w1_r, w2_r, w3_r, c_r, *rest)
+
+    y_back, _land = pl.pallas_call(
+        wrapped,
+        in_specs=in_specs,
+        # both landing buffers are real buffers (remote-DMA targets):
+        # out[0] is the combine landing (the result), out[1] the dispatch
+        # landing — STAGE_REMOTE cells of the symmetric layout L.
+        out_specs=(pl.BlockSpec(memory_space=pltpu.ANY),
+                   pl.BlockSpec(memory_space=pltpu.ANY)),
+        out_shape=(jax.ShapeDtypeStruct((P, LsC, H), slabs.dtype),
+                   jax.ShapeDtypeStruct((P, LsC, H), slabs.dtype)),
+        scratch_shapes=[
+            pltpu.ANY((P, LsC, H), slabs.dtype),   # combine local staging
+            pltpu.VMEM((TILE_M, H), slabs.dtype),  # x tile
+            pltpu.VMEM((TILE_M, H), slabs.dtype),  # y tile
+            pltpu.SemaphoreType.DMA((world,)),     # dispatch send
+            pltpu.SemaphoreType.DMA((world,)),     # dispatch recv
+            pltpu.SemaphoreType.DMA((world,)),     # combine send
+            pltpu.SemaphoreType.DMA((world,)),     # combine recv
+            pltpu.SemaphoreType.DMA(()),           # local tile copies
+        ],
+        compiler_params=_CompilerParams(collective_id=FUSED_COLLECTIVE_ID),
+        interpret=interpret,
+        name="flashmoe_fused_ep",
+    )(*inputs)
+    return y_back
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _fused_ep(slabs, w1, w2, w3, counts, axis, world, activation,
+              interpret, mesh_axes):
+    return _fused_ep_call(slabs, w1, w2, w3, counts, axis=axis,
+                          world=world, activation=activation,
+                          interpret=interpret, mesh_axes=mesh_axes)
+
+
+def _fused_ep_fwd(slabs, w1, w2, w3, counts, axis, world, activation,
+                  interpret, mesh_axes):
+    y = _fused_ep(slabs, w1, w2, w3, counts, axis, world, activation,
+                  interpret, mesh_axes)
+    return y, (slabs, w1, w2, w3, counts)
+
+
+def _fused_ep_bwd(axis, world, activation, interpret, mesh_axes, res, g):
+    """Backward = the involution on cotangents around the fused_moe
+    backward kernels: re-trace the decomposed (and forward-bitwise-equal)
+    rdma_dispatch -> grouped_expert_ffn -> rdma_combine composition and
+    pull ``g`` back through it. rdma_* carry their own custom VJPs (each
+    is the other applied to the cotangent), so the backward transport is
+    itself a pair of device-initiated one-sided exchanges."""
+    slabs, w1, w2, w3, counts = res
+    Ls = w1.shape[0]
+
+    def decomposed(s, a, b, c):
+        landing = rdma_dispatch(s, axis=axis, world=world,
+                                interpret=interpret, mesh_axes=mesh_axes)
+        P_, LsC, H = landing.shape
+        recv = landing.reshape(P_, Ls, LsC // Ls, H)
+        y = grouped_expert_ffn(a, b, c, recv, counts,
+                               activation=activation, interpret=interpret)
+        return rdma_combine(y.reshape(P_, LsC, H), axis=axis, world=world,
+                            interpret=interpret, mesh_axes=mesh_axes)
+
+    _, vjp = jax.vjp(decomposed, slabs, w1, w2, w3)
+    ds, dw1, dw2, dw3 = vjp(g)
+    return ds, dw1, dw2, dw3, None
+
+
+_fused_ep.defvjp(_fused_ep_fwd, _fused_ep_bwd)
+
+
+def fused_ep_moe(slabs: jax.Array, w1: jax.Array, w2: jax.Array,
+                 w3: Optional[jax.Array], counts_rcv: jax.Array, *,
+                 axis: str, world: int, activation: str = "gelu",
+                 interpret: bool = False, mesh_axes=None) -> jax.Array:
+    """Dispatch -> expert FFN -> combine in one persistent pallas kernel.
+
+    Must run inside shard_map over ``axis`` (the EP axis).
+
+    Args:
+      slabs: (P, local_slots*C, H) staged dispatch buffer — slab p holds
+        the rows bound for peer p's expert slots (the layout the bulk /
+        rdma paths feed their exchanges).
+      w1/w2/w3: LOCAL slot-major expert weights (Ls, H, F), (Ls, F, H),
+        optional gate (Ls, H, F); resident in VMEM for the whole kernel.
+      counts_rcv: (P, local_slots) int32 — per-source token counts for MY
+        slots, exchanged ahead of the kernel (the metadata plane; the
+        payload plane never leaves the kernel).
+    Returns:
+      (P, local_slots*C, H): row p holds the outputs slot-owner p pushed
+      back for the rows THIS device staged toward p — the layout
+      ``_gather_combine`` unpacks, bitwise-equal to the bulk path.
+    """
+    return _fused_ep(slabs, w1, w2, w3, counts_rcv, axis, world,
+                     activation, interpret,
+                     None if mesh_axes is None else tuple(mesh_axes))

@@ -1,0 +1,32 @@
+"""Semantics oracle for the fused single-kernel EP path.
+
+The fused kernel is, by construction, the composition of three pieces
+that each have their own execution-tested realization: the dispatch
+exchange (an AllToAll over the leading dim), the grouped expert FFN over
+the landing buffer (kernels/fused_moe), and the combine exchange (the
+same involution). This oracle IS that composition — the fused kernel
+must match it bitwise, and the fused custom VJP re-traces the same
+composition with the one-sided kernels substituted for the AllToAlls.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.fused_moe.ops import grouped_expert_ffn
+from repro.kernels.rdma.ref import rdma_combine_ref, rdma_dispatch_ref
+
+
+def fused_ep_moe_ref(slabs: jax.Array, w1: jax.Array, w2: jax.Array,
+                     w3: Optional[jax.Array], counts_rcv: jax.Array, *,
+                     axis: str, activation: str = "gelu",
+                     interpret: bool = True) -> jax.Array:
+    """Runs inside shard_map; same signature/layouts as fused_ep_moe."""
+    P, LsC, H = slabs.shape
+    Ls = w1.shape[0]
+    landing = rdma_dispatch_ref(slabs, axis=axis)
+    recv = landing.reshape(P, Ls, LsC // Ls, H)
+    y = grouped_expert_ffn(w1, w2, w3, recv, counts_rcv,
+                           activation=activation, interpret=interpret)
+    return rdma_combine_ref(y.reshape(P, LsC, H), axis=axis)

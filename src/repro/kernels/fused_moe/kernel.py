@@ -35,6 +35,49 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+# VMEM working-set budget (bytes) used to pick tile_f. Conservative for
+# TPU v5e (re-derived in benchmarks/bench_memory.py).
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def pick_tile_f(hidden: int, ffn: int, itemsize: int = 2,
+                tile_m: int = 128, budget: int = _VMEM_BUDGET) -> int:
+    """Largest f-tile (multiple of 128, divisor of F) fitting the budget.
+
+    Working set per grid step:
+      x (bM, H) + acc (bM, H, f32) + w1/w3 (H, bF) + w2 (bF, H) + h (bM, bF).
+    """
+    fixed = tile_m * hidden * itemsize + tile_m * hidden * 4
+    best = 128
+    for cand in range(128, min(ffn, 2048) + 1, 128):
+        per_f = 2 * hidden * cand * itemsize + tile_m * cand * 4
+        if fixed + per_f <= budget:
+            best = cand
+    for cand in range(best, 0, -128):
+        if ffn % cand == 0:
+            return cand
+    return min(128, ffn)
+
+
+def divisor_tile_f(ffn: int, tile_f: int) -> int:
+    """Largest divisor of F that is <= tile_f and a multiple of 128
+    (falling back to F itself): the adjustment ``fused_moe_kernel``
+    applies before building its grid, factored out so the fused EP
+    kernel's f-loop splits F identically (bitwise-equal accumulation
+    order)."""
+    if ffn % tile_f == 0:
+        return tile_f
+    return next(
+        (c for c in range(min(tile_f, ffn), 0, -128) if ffn % c == 0), ffn
+    )
+
+
+def effective_tile_f(hidden: int, ffn: int, itemsize: int = 2,
+                     tile_m: int = 128) -> int:
+    """The f-tile ``fused_moe_ffn(tile_f=None)`` ends up using."""
+    return divisor_tile_f(ffn, pick_tile_f(hidden, ffn, itemsize, tile_m))
+
+
 def _act(name: str, x: jax.Array) -> jax.Array:
     if name == "gelu":
         return jax.nn.gelu(x)
@@ -111,11 +154,7 @@ def fused_moe_kernel(
     rows, H = x.shape
     E, _, F = w1.shape
     assert rows % tile_m == 0, (rows, tile_m)
-    if F % tile_f != 0:
-        # choose the largest divisor of F that is <= tile_f and % 128 == 0
-        tile_f = next(
-            (c for c in range(min(tile_f, F), 0, -128) if F % c == 0), F
-        )
+    tile_f = divisor_tile_f(F, tile_f)
     num_m = rows // tile_m
     num_f = F // tile_f
 

@@ -14,32 +14,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.gate import TILE_M
 from repro.kernels.fused_moe.backward import fused_moe_bwd_kernels
-from repro.kernels.fused_moe.kernel import fused_moe_kernel
+from repro.kernels.fused_moe.kernel import fused_moe_kernel, pick_tile_f
 from repro.kernels.fused_moe.ref import fused_moe_ffn_ref
-
-# VMEM working-set budget (bytes) used to pick tile_f. Conservative for
-# TPU v5e (re-derived in benchmarks/bench_memory.py).
-_VMEM_BUDGET = 8 * 1024 * 1024
-
-
-def pick_tile_f(hidden: int, ffn: int, itemsize: int = 2,
-                tile_m: int = 128, budget: int = _VMEM_BUDGET) -> int:
-    """Largest f-tile (multiple of 128, divisor of F) fitting the budget.
-
-    Working set per grid step:
-      x (bM, H) + acc (bM, H, f32) + w1/w3 (H, bF) + w2 (bF, H) + h (bM, bF).
-    """
-    fixed = tile_m * hidden * itemsize + tile_m * hidden * 4
-    best = 128
-    for cand in range(128, min(ffn, 2048) + 1, 128):
-        per_f = 2 * hidden * cand * itemsize + tile_m * cand * 4
-        if fixed + per_f <= budget:
-            best = cand
-    for cand in range(best, 0, -128):
-        if ffn % cand == 0:
-            return cand
-    return min(128, ffn)
 
 
 @functools.partial(
@@ -114,3 +92,39 @@ def fused_moe_ffn(
     return _fused_moe_cv(x, w1, w2, w3, tile_expert, tile_valid,
                          scale.astype(jnp.float32), activation, tile_m,
                          tile_f, interpret)
+
+
+def grouped_expert_ffn(w1, w2, w3, recv, counts_rcv, *, activation: str,
+                       interpret: bool = True) -> jax.Array:
+    """Fused grouped-GEMM over an EP dispatch-landing buffer.
+
+    Layout adapter shared by the EP strategies (core/dispatch) and the
+    fused-EP kernel's decomposed backward (kernels/fused_ep): ONE
+    ``fused_moe_ffn`` call over the slot-major landing buffer, with
+    ``tile_valid`` derived from the exchanged per-source counts so
+    capacity-padding tiles are skipped (§3.2.1 work conservation).
+
+    Args:
+      recv: (P, local_slots, C, H) — tokens from every source for the
+        slots this device owns; C is a multiple of TILE_M.
+      counts_rcv: (P, local_slots) int32 actual token counts.
+    Returns (P, local_slots, C, H) expert outputs, zeros on null tiles.
+    """
+    P, Ls, C, H = recv.shape
+    x = jnp.transpose(recv, (1, 0, 2, 3)).reshape(Ls * P * C, H)
+    rows_per_slot = P * C
+    tiles_per_slot = rows_per_slot // TILE_M
+    tile_expert = jnp.repeat(
+        jnp.arange(Ls, dtype=jnp.int32), tiles_per_slot)
+    # valid tiles: tile t of slot s covers rows of source p = (t*TILE_M)//C
+    tile_row = (jnp.arange(tiles_per_slot, dtype=jnp.int32) * TILE_M)[None, :]
+    src = tile_row // C                                      # (1, tps)
+    row_in_src = tile_row - src * C
+    cnt = jnp.transpose(counts_rcv, (1, 0))                  # (Ls, P)
+    cnt_t = jnp.take_along_axis(cnt, src.repeat(Ls, 0), axis=1)
+    tile_valid = (row_in_src < cnt_t).astype(jnp.int32).reshape(-1)
+    scale = jnp.ones((x.shape[0],), jnp.float32)
+    y = fused_moe_ffn(
+        x, w1, w2, w3, tile_expert, tile_valid, scale,
+        activation=activation, interpret=interpret, use_kernel=True)
+    return jnp.transpose(y.reshape(Ls, P, C, H), (1, 0, 2, 3))

@@ -25,6 +25,14 @@ can execute faithfully (it resolves exactly one sender per receiver per
 real under `interpret=True` (single named mesh axis; see
 core/dispatch.rdma_fallback_reason for the gating).
 
+Peers are addressed by :func:`device_id_for_peer`: the scalar logical
+index along the EP axis on a pure-EP mesh (the form the 0.4.x interpret
+discharge rule can execute), or the tuple of MESH COORDINATES on a
+multi-axis mesh — peer index on the EP axis, this device's own index on
+every other axis — which is what lets these kernels run on real
+multi-axis TPU meshes (e.g. (data, model)) instead of requiring the
+non-EP axes to be trivial.
+
 The two directions are exact mutual transposes — the exchange permutation
 is an involution — so each kernel's custom VJP is the *other* kernel
 applied to the cotangent: backprop through the rdma path is itself a pair
@@ -50,12 +58,33 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
 
 # Barrier-semaphore ids: the dispatch and combine exchanges can be live
 # concurrently inside one step, so they must not share a collective id.
+# (9 is the fused single-kernel path, kernels/fused_ep/kernel.py.)
 DISPATCH_COLLECTIVE_ID = 7
 COMBINE_COLLECTIVE_ID = 8
 
 
+def device_id_for_peer(peer, ep_axis: str, mesh_axes):
+    """(device_id, device_id_type) addressing ``peer`` along the EP axis.
+
+    On a pure-EP mesh (``mesh_axes`` is None or the EP axis alone) the id
+    is the SCALAR logical index along that axis — the form the 0.4.x
+    interpret discharge rule can all-gather, which is what lets the CPU
+    container execute these kernels. On a multi-axis mesh the id is the
+    tuple of MESH COORDINATES: the peer's index on the EP axis with this
+    device's own ``jax.lax.axis_index`` on every other axis, so the
+    exchange stays within the caller's EP subgroup (same data-parallel
+    row). Mesh coordinates only lower on real TPU — interpret mode on a
+    multi-axis mesh is gated off by core/dispatch.rdma_fallback_reason.
+    """
+    if mesh_axes is None or tuple(mesh_axes) == (ep_axis,):
+        return peer, pltpu.DeviceIdType.LOGICAL
+    coords = tuple(
+        peer if a == ep_axis else jax.lax.axis_index(a) for a in mesh_axes)
+    return coords, pltpu.DeviceIdType.MESH
+
+
 def _exchange_body(slabs_ref, landing_ref, send_sem, recv_sem, *,
-                   axis: str, world: int):
+                   axis: str, world: int, mesh_axes=None):
     """One-sided symmetric exchange: slab p -> peer p's landing[my_id].
 
     slabs_ref: (P, C, H) local per-peer slabs (LOCAL stage of L). In the
@@ -72,18 +101,18 @@ def _exchange_body(slabs_ref, landing_ref, send_sem, recv_sem, *,
     my_id = jax.lax.axis_index(axis)
 
     def make_rdma(s):
-        # device_id is the SCALAR logical id along the (single) EP axis:
-        # portable across pallas versions (the 0.4.x interpret discharge
-        # rule all-gathers it and cannot broadcast a tuple; TPU lowering
-        # accepts both forms).
+        # device id derived by device_id_for_peer: scalar logical index
+        # on a pure-EP mesh (interpret-executable), mesh coordinates on a
+        # multi-axis TPU mesh (peer on the EP axis, own index elsewhere).
         peer = jax.lax.rem(my_id + s, world)
+        device_id, id_type = device_id_for_peer(peer, axis, mesh_axes)
         return pltpu.make_async_remote_copy(
             src_ref=slabs_ref.at[peer],
             dst_ref=landing_ref.at[my_id],   # remote cell owned by ME
             send_sem=send_sem.at[s],
             recv_sem=recv_sem.at[s],
-            device_id=peer,
-            device_id_type=pltpu.DeviceIdType.LOGICAL,
+            device_id=device_id,
+            device_id_type=id_type,
         )
 
     def start_one(s, _):
@@ -103,10 +132,11 @@ def _exchange_body(slabs_ref, landing_ref, send_sem, recv_sem, *,
 
 def _rdma_exchange(slabs: jax.Array, *, axis: str, world: int,
                    interpret: bool, collective_id: int,
-                   name: str) -> jax.Array:
+                   name: str, mesh_axes=None) -> jax.Array:
     P, C, H = slabs.shape
     assert P == world, (P, world)
-    body = functools.partial(_exchange_body, axis=axis, world=world)
+    body = functools.partial(_exchange_body, axis=axis, world=world,
+                             mesh_axes=mesh_axes)
     return pl.pallas_call(
         body,
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
@@ -129,36 +159,38 @@ def _rdma_exchange(slabs: jax.Array, *, axis: str, world: int,
 # the OTHER direction applied to the cotangent: d(dispatch) pushes
 # gradients back along combine's wires and vice versa. Residual-free.
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
-def _dispatch_p(slabs, axis, world, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _dispatch_p(slabs, axis, world, interpret, mesh_axes):
     return _rdma_exchange(slabs, axis=axis, world=world,
                           interpret=interpret,
                           collective_id=DISPATCH_COLLECTIVE_ID,
-                          name="flashmoe_rdma_dispatch")
+                          name="flashmoe_rdma_dispatch",
+                          mesh_axes=mesh_axes)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
-def _combine_p(slabs, axis, world, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _combine_p(slabs, axis, world, interpret, mesh_axes):
     return _rdma_exchange(slabs, axis=axis, world=world,
                           interpret=interpret,
                           collective_id=COMBINE_COLLECTIVE_ID,
-                          name="flashmoe_rdma_combine")
+                          name="flashmoe_rdma_combine",
+                          mesh_axes=mesh_axes)
 
 
-def _dispatch_fwd(slabs, axis, world, interpret):
-    return _dispatch_p(slabs, axis, world, interpret), None
+def _dispatch_fwd(slabs, axis, world, interpret, mesh_axes):
+    return _dispatch_p(slabs, axis, world, interpret, mesh_axes), None
 
 
-def _dispatch_bwd(axis, world, interpret, _res, g):
-    return (_combine_p(g, axis, world, interpret),)
+def _dispatch_bwd(axis, world, interpret, mesh_axes, _res, g):
+    return (_combine_p(g, axis, world, interpret, mesh_axes),)
 
 
-def _combine_fwd(slabs, axis, world, interpret):
-    return _combine_p(slabs, axis, world, interpret), None
+def _combine_fwd(slabs, axis, world, interpret, mesh_axes):
+    return _combine_p(slabs, axis, world, interpret, mesh_axes), None
 
 
-def _combine_bwd(axis, world, interpret, _res, g):
-    return (_dispatch_p(g, axis, world, interpret),)
+def _combine_bwd(axis, world, interpret, mesh_axes, _res, g):
+    return (_dispatch_p(g, axis, world, interpret, mesh_axes),)
 
 
 _dispatch_p.defvjp(_dispatch_fwd, _dispatch_bwd)
@@ -166,21 +198,25 @@ _combine_p.defvjp(_combine_fwd, _combine_bwd)
 
 
 def rdma_dispatch(slabs: jax.Array, *, axis: str, world: int,
-                  interpret: bool = False) -> jax.Array:
+                  interpret: bool = False, mesh_axes=None) -> jax.Array:
     """One-sided dispatch: returns the landing buffer (P, C, H) where
     row p holds the slab peer p pushed to THIS device — tokens bound for
     the expert slots this device owns, indexed by their source.
 
-    Must run inside shard_map over ``axis`` (the EP axis, which must be
-    the mesh's only named axis). Equivalent to
-    ``jax.lax.all_to_all(slabs, axis, 0, 0)`` (see ref.py) but initiated
-    by the device DMA engines with no collective barrier.
+    Must run inside shard_map over ``axis`` (the EP axis). Pass
+    ``mesh_axes`` (every mesh axis name, mesh order) on a multi-axis
+    mesh so peers are addressed by mesh COORDINATES — required for real
+    TPU meshes with non-trivial non-EP axes; interpret mode still needs
+    a pure-EP mesh (see core/dispatch.rdma_fallback_reason). Equivalent
+    to ``jax.lax.all_to_all(slabs, axis, 0, 0)`` (see ref.py) but
+    initiated by the device DMA engines with no collective barrier.
     """
-    return _dispatch_p(slabs, axis, world, interpret)
+    return _dispatch_p(slabs, axis, world, interpret,
+                       None if mesh_axes is None else tuple(mesh_axes))
 
 
 def rdma_combine(slabs: jax.Array, *, axis: str, world: int,
-                 interpret: bool = False) -> jax.Array:
+                 interpret: bool = False, mesh_axes=None) -> jax.Array:
     """One-sided combine: the mirror image of :func:`rdma_dispatch`.
 
     ``slabs`` is the computed expert output in the dispatch-landing
@@ -192,4 +228,5 @@ def rdma_combine(slabs: jax.Array, *, axis: str, world: int,
     for tokens THIS device staged toward p — exactly the layout
     ``_gather_combine`` unpacks by ``packed_pos``.
     """
-    return _combine_p(slabs, axis, world, interpret)
+    return _combine_p(slabs, axis, world, interpret,
+                      None if mesh_axes is None else tuple(mesh_axes))

@@ -27,6 +27,7 @@ import jax
 
 from repro.configs import ALL_ARCHS
 from repro.configs.base import SHAPES, cell_applicable, get_config
+from repro.core.moe import DIST_IMPLS
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (hlo_cost, model_flops, roofline_terms,
                                    xla_cost_analysis)
@@ -129,11 +130,12 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
-    ap.add_argument("--dist-impl", choices=["bulk", "pipelined", "rdma"],
+    ap.add_argument("--dist-impl", choices=list(DIST_IMPLS),
                     default="pipelined",
-                    help="EP strategy; 'rdma' falls back to 'pipelined' "
-                         "(logged) where the remote-DMA kernels can't run "
-                         "— e.g. this multi-axis host mesh")
+                    help="EP strategy; 'fused' (single persistent kernel) "
+                         "and 'rdma' fall back along fused -> rdma -> "
+                         "pipelined (logged) where the one-sided kernels "
+                         "can't run — e.g. this multi-axis host mesh")
     ap.add_argument("--num-chunks", type=int, default=4)
     ap.add_argument("--moe-local-impl", default="fused")
     ap.add_argument("--out", default="experiments/dryrun")

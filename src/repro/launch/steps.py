@@ -41,6 +41,9 @@ def make_pctx(cfg: ArchConfig, mesh: Optional[Mesh], *, train: bool,
               num_chunks: int = 4, kv_chunk: int = 1024,
               expert_compute: str = "kernel",
               policy: str = "auto") -> ParallelContext:
+    # any DIST_IMPLS member is accepted here; "fused"/"rdma" downgrade
+    # with a logged reason where their kernels can't run (resolution
+    # happens per-layer in core/dispatch.resolve_dist_impl).
     if dist_impl not in DIST_IMPLS:
         raise ValueError(f"dist_impl {dist_impl!r} not in {DIST_IMPLS}")
     if mesh is None:

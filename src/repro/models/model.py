@@ -44,8 +44,9 @@ class ParallelContext:
     dp_axes: Tuple[str, ...] = ("data",)
     model_axis: str = "model"
     use_ep: bool = False                 # shard_map EP MoE (train/prefill)
-    # bulk | pipelined | rdma — "rdma" auto-downgrades to "pipelined"
-    # (logged) where the remote-DMA kernels can't run; see
+    # bulk | pipelined | rdma | fused — "fused" (single persistent
+    # kernel) and "rdma" auto-downgrade along fused -> rdma -> pipelined
+    # (logged) where the one-sided kernels can't run; see
     # core/dispatch.resolve_dist_impl.
     dist_impl: str = "pipelined"
     num_chunks: int = 4

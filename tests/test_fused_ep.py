@@ -1,0 +1,318 @@
+"""The fused single persistent kernel (dist_impl="fused"):
+
+  * world-4 interpret execution of the REAL kernel vs the decomposed
+    oracle (exchange -> grouped FFN -> exchange) — bitwise;
+  * end-to-end bitwise fused == bulk forward equivalence through
+    distributed_moe, for E >= P and the E < P replica case;
+  * gradients through the fused custom VJP vs the pipelined path;
+  * every fallback gate of the fused -> rdma -> pipelined chain, and
+    the (requested_impl, reason)-keyed warn-once behaviour.
+
+Multi-device cases run in a subprocess so the main pytest process keeps
+1 device; the gate/fallback tests are pure logic and marked smoke.
+"""
+import functools
+import json
+import logging
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import run_sub
+
+run_sub4 = functools.partial(run_sub, devices=4)
+
+
+def test_fused_kernel_matches_oracle_world4():
+    """The persistent kernel == the decomposed oracle, BITWISE, at
+    world=4 under interpret — gated and ungated experts, ragged counts."""
+    out = run_sub4("""
+    import functools
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map, with_mesh
+    from repro.kernels.fused_ep import fused_ep_moe, fused_ep_moe_ref
+    W, LS, C, H, F = 4, 2, 256, 16, 32
+    slabs = jax.random.normal(jax.random.PRNGKey(0), (4 * W, LS * C, H),
+                              jnp.float32)
+    w1 = jax.random.normal(jax.random.PRNGKey(1), (4 * LS, H, F)) * 0.1
+    w2 = jax.random.normal(jax.random.PRNGKey(2), (4 * LS, F, H)) * 0.1
+    w3 = jax.random.normal(jax.random.PRNGKey(3), (4 * LS, H, F)) * 0.1
+    counts = jax.random.randint(jax.random.PRNGKey(4), (4 * W, LS),
+                                0, C + 1)
+    mesh = make_mesh((4,), ("ep",))
+    for gated in (True, False):
+        specs = (P("ep"), P("ep"), P("ep"),
+                 (P("ep") if gated else None), P("ep"))
+        k = shard_map(functools.partial(
+            fused_ep_moe, axis="ep", world=W, activation="gelu",
+            interpret=True), mesh, specs, P("ep"), check_vma=False)
+        r = shard_map(functools.partial(
+            fused_ep_moe_ref, axis="ep", activation="gelu",
+            interpret=True), mesh, specs, P("ep"), check_vma=False)
+        args = (slabs, w1, w2, (w3 if gated else None), counts)
+        with with_mesh(mesh):
+            y = jax.jit(k)(*args)
+            yr = jax.jit(r)(*args)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+        print(f"gated={gated} KERNEL == ORACLE OK")
+    """)
+    assert "gated=True KERNEL == ORACLE OK" in out
+    assert "gated=False KERNEL == ORACLE OK" in out
+
+
+def test_fused_matches_bulk_bitwise():
+    """dist_impl='fused' == 'bulk' BITWISE through distributed_moe on a
+    world-4 pure-EP mesh, for E >= P and the E < P replica case, and
+    both match the local fused layer."""
+    run_sub4("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.gate import GateConfig
+    from repro.core.moe import MoEConfig, init_moe_params, moe_layer
+    from repro.core.dispatch import (distributed_moe, SlotInfo,
+                                     resolve_dist_impl)
+    from repro.compat import make_mesh, with_mesh
+    mesh = make_mesh((4,), ("model",))
+    for E, k in ((8, 2), (2, 1)):
+        gc = GateConfig(num_experts=E, top_k=k, capacity_factor=8.0)
+        cfg = MoEConfig(gate=gc, d_model=64, d_ff=128, activation="silu",
+                        gated=True, interpret=True)
+        params = init_moe_params(jax.random.PRNGKey(E), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (512, 64), jnp.float32)
+        y_ref, _ = jax.jit(lambda p, x: moe_layer(p, x, cfg))(params, x)
+        x3 = x.reshape(1, 512, 64)     # (B, S, H): seq over the EP axis
+        info = SlotInfo.make(E, 4)
+        pd = dict(params)
+        for w in ("w1", "w2", "w3"):
+            pd[w] = info.expand_expert_weights(params[w])
+        outs = {}
+        for impl in ("bulk", "fused"):
+            cfg_d = MoEConfig(gate=gc, d_model=64, d_ff=128,
+                              activation="silu", gated=True,
+                              interpret=True, dist_impl=impl)
+            assert resolve_dist_impl(cfg_d, mesh) == impl, impl
+            with with_mesh(mesh):
+                y_d, _ = jax.jit(lambda p, x, c=cfg_d: distributed_moe(
+                    p, x, c, mesh))(pd, x3)
+            outs[impl] = np.asarray(y_d).reshape(512, 64)
+            err = np.abs(outs[impl] - np.asarray(y_ref)).max()
+            assert err < 1e-4, (E, impl, err)
+        np.testing.assert_array_equal(outs["fused"], outs["bulk"])
+    print("FUSED == BULK BITWISE OK")
+    """)
+
+
+def test_fused_backward_matches_pipelined():
+    """Gradients through the fused custom VJP (involution on cotangents
+    around the fused_moe backward kernels) == the pipelined EP path ==
+    the local fused layer."""
+    run_sub4("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.gate import GateConfig
+    from repro.core.moe import MoEConfig, init_moe_params, moe_layer
+    from repro.core.dispatch import distributed_moe
+    from repro.compat import make_mesh, with_mesh
+    mesh = make_mesh((4,), ("model",))
+    gc = GateConfig(num_experts=8, top_k=2, capacity_factor=8.0,
+                    aux_loss=0.0, router_z_loss=0.0)
+    mk = lambda impl: MoEConfig(gate=gc, d_model=32, d_ff=64,
+                                activation="silu", gated=True,
+                                interpret=True, dist_impl=impl)
+    params = init_moe_params(jax.random.PRNGKey(0), mk("fused"))
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 32), jnp.float32)
+    x3 = x.reshape(1, 256, 32)
+    g_l = jax.jit(jax.grad(lambda p: jnp.sum(
+        jnp.sin(moe_layer(p, x, mk("fused"))[0]))))(params)
+    grads = {}
+    for impl in ("fused", "pipelined"):
+        cfg_d = mk(impl)
+        with with_mesh(mesh):
+            grads[impl] = jax.jit(jax.grad(lambda p: jnp.sum(jnp.sin(
+                distributed_moe(p, x3, cfg_d, mesh)[0]))))(params)
+    for kname in ("w1", "w2", "w3", "gate"):
+        a = np.asarray(grads["fused"][kname])
+        np.testing.assert_allclose(
+            a, np.asarray(grads["pipelined"][kname]), rtol=5e-3, atol=1e-5)
+        np.testing.assert_allclose(
+            a, np.asarray(g_l[kname]), rtol=5e-3, atol=1e-5)
+    print("FUSED BWD OK")
+    """)
+
+
+# --------------------------------------------------------- gates (smoke)
+def _capture_dispatch_log(msgs):
+    h = logging.Handler()
+    h.emit = lambda rec: msgs.append(rec.getMessage())
+    logging.getLogger("repro.core.dispatch").addHandler(h)
+    return h
+
+
+def _cfg(dist_impl, interpret=True, expert_compute="kernel"):
+    from repro.core.gate import GateConfig
+    from repro.core.moe import MoEConfig
+    return MoEConfig(gate=GateConfig(num_experts=4, top_k=2),
+                     d_model=32, d_ff=32, interpret=interpret,
+                     dist_impl=dist_impl, expert_compute=expert_compute)
+
+
+@pytest.mark.smoke
+def test_fused_gate_interpret_needs_pure_ep_mesh():
+    """Gate 1: interpret-mode remote DMA needs a single named axis."""
+    from repro.compat import make_mesh
+    from repro.core.dispatch import (fused_fallback_reason,
+                                     reset_fallback_warnings,
+                                     resolve_dist_impl)
+    reset_fallback_warnings()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    reason = fused_fallback_reason(True, mesh)
+    assert reason is not None and "single named" in reason
+    msgs = []
+    _capture_dispatch_log(msgs)
+    assert resolve_dist_impl(_cfg("fused"), mesh) == "pipelined"
+    assert any("dist_impl='fused' falling back to 'pipelined'" in m
+               for m in msgs), msgs
+
+
+@pytest.mark.smoke
+def test_fused_gate_einsum_compute_stops_at_rdma():
+    """Gate 2: expert_compute='einsum' cannot run inside the kernel, but
+    the rdma transport still can — the chain stops at 'rdma'."""
+    from repro.compat import make_mesh
+    from repro.core.dispatch import (fused_fallback_reason,
+                                     reset_fallback_warnings,
+                                     resolve_dist_impl)
+    reset_fallback_warnings()
+    mesh = make_mesh((1,), ("model",))   # pure-EP: rdma executes
+    reason = fused_fallback_reason(True, mesh, expert_compute="einsum")
+    assert reason is not None and "einsum" in reason
+    msgs = []
+    _capture_dispatch_log(msgs)
+    cfg = _cfg("fused", expert_compute="einsum")
+    assert resolve_dist_impl(cfg, mesh) == "rdma"
+    assert any("falling back to 'rdma'" in m for m in msgs), msgs
+
+
+@pytest.mark.smoke
+def test_fused_gate_compiled_needs_tpu():
+    """Gate 3: compiled mode needs the TPU backend; on this host both
+    hops fail for the same reason, logged once."""
+    from repro.compat import make_mesh
+    from repro.core.dispatch import (reset_fallback_warnings,
+                                     resolve_dist_impl)
+    if jax.default_backend() == "tpu":
+        pytest.skip("host has a real TPU")
+    reset_fallback_warnings()
+    mesh = make_mesh((1,), ("model",))
+    msgs = []
+    _capture_dispatch_log(msgs)
+    assert resolve_dist_impl(_cfg("fused", interpret=False),
+                             mesh) == "pipelined"
+    backend_msgs = [m for m in msgs if "cannot lower" in m]
+    assert len(backend_msgs) == 1, msgs
+
+
+@pytest.mark.smoke
+def test_fused_gate_mesh_without_ep_axis():
+    """Gate 4: a mesh with no EP axis cannot host the exchange."""
+    from repro.compat import make_mesh
+    from repro.core.dispatch import fused_fallback_reason, resolve_dist_impl
+    mesh = make_mesh((1,), ("data",))
+    reason = fused_fallback_reason(True, mesh)
+    assert reason is not None and "no 'model' axis" in reason
+    assert resolve_dist_impl(_cfg("fused"), mesh) == "pipelined"
+
+
+@pytest.mark.smoke
+def test_fallback_warnings_keyed_by_impl_and_reason():
+    """A warning for one (impl, reason) must not suppress a different
+    impl's downgrade or a different cause, and reset_fallback_warnings
+    re-arms everything."""
+    from repro.compat import make_mesh
+    from repro.core.dispatch import (reset_fallback_warnings,
+                                     resolve_dist_impl)
+    reset_fallback_warnings()
+    mesh_multi = make_mesh((1, 1), ("data", "model"))
+    mesh_ep = make_mesh((1,), ("model",))
+    msgs = []
+    _capture_dispatch_log(msgs)
+    # same reason (multi-axis interpret), two requested impls: both log
+    assert resolve_dist_impl(_cfg("rdma"), mesh_multi) == "pipelined"
+    assert resolve_dist_impl(_cfg("fused"), mesh_multi) == "pipelined"
+    assert any(m.startswith("dist_impl='rdma'") for m in msgs), msgs
+    assert any(m.startswith("dist_impl='fused'") for m in msgs), msgs
+    # same impl, different cause: logs again
+    n = len(msgs)
+    cfg_e = _cfg("fused", expert_compute="einsum")
+    assert resolve_dist_impl(cfg_e, mesh_ep) == "rdma"
+    assert len(msgs) == n + 1 and "einsum" in msgs[-1], msgs
+    # repeats are suppressed...
+    n = len(msgs)
+    resolve_dist_impl(_cfg("rdma"), mesh_multi)
+    resolve_dist_impl(cfg_e, mesh_ep)
+    assert len(msgs) == n, msgs
+    # ...until the test hook clears the memory
+    reset_fallback_warnings()
+    resolve_dist_impl(_cfg("rdma"), mesh_multi)
+    assert len(msgs) == n + 1, msgs
+
+
+@pytest.mark.smoke
+def test_device_id_for_peer_selects_mesh_coordinates():
+    """Scalar logical id on a pure-EP mesh; (own, peer) mesh coordinates
+    on a multi-axis mesh — evaluated inside shard_map on a 1x1 mesh."""
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map, with_mesh
+    from repro.kernels.rdma.kernel import device_id_for_peer
+    from jax.experimental.pallas import tpu as pltpu
+
+    dev_id, id_type = device_id_for_peer(3, "model", None)
+    assert dev_id == 3 and id_type == pltpu.DeviceIdType.LOGICAL
+    dev_id, id_type = device_id_for_peer(3, "model", ("model",))
+    assert dev_id == 3 and id_type == pltpu.DeviceIdType.LOGICAL
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    types = []
+
+    def body(x):
+        coords, id_type = device_id_for_peer(
+            x[0], "model", ("data", "model"))
+        types.append(id_type)
+        return jnp.stack(list(coords))
+
+    fn = shard_map(body, mesh, P(None), P(None), check_vma=False)
+    with with_mesh(mesh):
+        coords = jax.jit(fn)(jnp.zeros((2,), jnp.int32))
+    # (own data index, peer model index) = (0, 0) on the 1x1 mesh
+    np.testing.assert_array_equal(np.asarray(coords), [0, 0])
+    assert types[0] == pltpu.DeviceIdType.MESH
+
+
+# ------------------------------------------------------------ bench smoke
+def test_bench_smoke_emits_per_impl_json(tmp_path):
+    """`make bench-smoke`'s underlying command: a tiny-shape bench run
+    must write valid JSON with rows for every local impl and every EP
+    strategy, including the fused persistent kernel."""
+    out = tmp_path / "bench_smoke.json"
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_latency", "--smoke",
+         str(out)],
+        capture_output=True, text=True, timeout=900, env=env, cwd=root)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    rec = json.loads(out.read_text())
+    assert rec["meta"]["mode"] == "smoke"
+    local_impls = {row["impl"] for row in rec["local"]}
+    assert local_impls == {"packed", "fused", "ref"}
+    dist_impls = {row["impl"] for row in rec["distributed"]}
+    assert {"bulk_c1", "pipelined_c2", "rdma_c1", "fused_c1"} <= dist_impls
+    assert all(row["us"] > 0 for row in rec["local"] + rec["distributed"])
