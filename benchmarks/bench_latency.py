@@ -8,9 +8,11 @@ the roofline artifacts.
 Run as a script this also benchmarks the DISTRIBUTED dispatch paths
 (bulk AllToAll vs the paper's pipelined overlap schedule vs the
 device-initiated rdma kernels vs the fused single persistent kernel,
-all under interpret) on a 4-device host-platform mesh and writes the
-whole record to BENCH_latency.json — the perf-trajectory baseline
-future PRs compare against.
+all under interpret) on a 4-device host-platform mesh, plus the
+latency-oriented EP DECODE path (distributed_moe_decode on the 8-row
+decode plan, per dist_impl, against the local gather baseline), and
+writes the whole record to BENCH_latency.json — the perf-trajectory
+baseline future PRs compare against.
 
 ``--smoke`` runs a tiny-shape variant of every row (CI sanity: the JSON
 must stay valid and per-impl complete; wall times are meaningless).
@@ -117,15 +119,71 @@ def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256,
     return results
 
 
+def run_decode(batch_list=(1, 8), E=8, H=256, F=256, warmup=3, iters=10):
+    """Latency-oriented EP decode (decode ExchangePlan: 8-row capacity
+    tile, no 128-row floor) vs the local gather baseline.
+
+    Times ``distributed_moe_decode`` per dist_impl on a pure-EP host
+    mesh (so the rdma one-sided kernels execute under interpret; a
+    requested ``fused`` would downgrade to rdma through the decode
+    einsum gate, so it is not a distinct row here) and ``moe_ffn_gather``
+    as the no-network baseline. Same CPU-relative caveat as above.
+    """
+    from repro.compat import make_mesh, with_mesh
+    from repro.core.dispatch import SlotInfo, distributed_moe_decode
+
+    P_ = min(4, jax.device_count())
+    if P_ < 2 or E % P_:
+        emit("fig10/decode_ep_skipped", 0.0, f"devices={jax.device_count()}")
+        return []
+    mesh_ep = make_mesh((P_,), ("model",))
+    gc = GateConfig(num_experts=E, top_k=2, capacity_factor=2.0,
+                    aux_loss=0.0, router_z_loss=0.0)
+    info = SlotInfo.make(E, P_)
+    results = []
+    cfg_l = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
+                      gated=False, impl="gather", interpret=True,
+                      use_pallas_gate=False)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg_l)
+    fn_l = jax.jit(lambda p, x: moe_layer(p, x, cfg_l)[0])
+    for B in batch_list:
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, H), jnp.float32)
+        us = time_fn(fn_l, params, x, warmup=warmup, iters=iters)
+        emit(f"fig10/decode_gather_T{B}", us, f"tokens={B};experts={E}")
+        results.append(("decode_gather", B, us))
+    pd = dict(params)
+    for w in ("w1", "w2", "w3"):
+        if w in pd:
+            pd[w] = info.expand_expert_weights(pd[w])
+    for impl in ("bulk", "pipelined", "rdma"):
+        cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
+                        gated=False, interpret=True, dist_impl=impl,
+                        num_chunks=2, use_pallas_gate=False)
+        fn = jax.jit(lambda p, x, c=cfg: distributed_moe_decode(
+            p, x, c, mesh_ep)[0])
+        for B in batch_list:
+            x = jax.random.normal(jax.random.PRNGKey(1), (B, H),
+                                  jnp.float32)
+            with with_mesh(mesh_ep):
+                us = time_fn(fn, pd, x, warmup=warmup, iters=iters)
+            emit(f"fig10/decode_{impl}_T{B}", us,
+                 f"tokens={B};experts={E};world={P_}")
+            results.append((f"decode_{impl}", B, us))
+    return results
+
+
 def main(out_path: str = "BENCH_latency.json", smoke: bool = False):
     if smoke:
         local = run(tokens_list=(256,), E=4, H=128, F=128,
                     warmup=1, iters=3)
         dist = run_distributed(tokens_list=(256,), E=4, H=128, F=128,
                                warmup=1, iters=3)
+        dec = run_decode(batch_list=(4,), E=4, H=128, F=128,
+                         warmup=1, iters=3)
     else:
         local = run()
         dist = run_distributed()
+        dec = run_decode()
     rec = {
         "meta": {
             "bench": "bench_latency",
@@ -141,6 +199,8 @@ def main(out_path: str = "BENCH_latency.json", smoke: bool = False):
                   for i, t, us in local],
         "distributed": [{"impl": i, "tokens": t, "us": round(us, 1)}
                         for i, t, us in dist],
+        "decode": [{"impl": i, "tokens": t, "us": round(us, 1)}
+                   for i, t, us in dec],
     }
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1)

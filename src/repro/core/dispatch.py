@@ -1,10 +1,14 @@
-"""Expert-parallel dispatch/combine — the distributed half of FlashMoE.
+"""Expert-parallel transport — the strategy half of the FlashMoE data
+plane. Planning (what travels, in what shape) lives in
+``core/exchange.py``; this module moves the planned buffers.
 
 All mesh/shard_map access goes through ``repro.compat`` (supported JAX
 range 0.4.35–0.4.37 plus forward-compat branches; see compat.py), so this
 module is version-portable by construction.
 
-Four strategies, all running inside ``shard_map`` over the EP axis:
+Four strategies, all standalone bodies ``(plan, buf, weights, cfg) ->
+y_back`` registered in :data:`EXCHANGE_IMPLS` and running inside
+``shard_map`` over the EP axis:
 
   * ``bulk`` — the baseline the paper measures against: one bulk-synchronous
     AllToAll for dispatch, one for combine (GShard / Megatron style). All
@@ -40,12 +44,19 @@ Where a strategy cannot run, :func:`resolve_dist_impl` walks the chain
 (requested impl, reason), so every entry point accepts any
 ``dist_impl`` unconditionally.
 
-Expert placement ("slots"): the EP world always equals the mesh's model-axis
-size P. When E >= P, each device hosts E/P experts. When E < P, experts are
-replicated R = P/E times (production practice for hot experts; DeepSeek-v3
-style) and each source rank deterministically picks replica (rank mod R),
-which balances load. Expert weights are stored slot-major — (slots, H, F) —
-so the local slice is always contiguous and P-divisible.
+Two entry points share the table:
+
+  * :func:`distributed_moe` — train/prefill: resident seq-sharded tokens,
+    the 128-row-tile ``phase="train"`` plan, kernel expert compute.
+  * :func:`distributed_moe_decode` — the latency path: tiny replicated
+    token batches, the ``phase="decode"`` plan (8-row capacity tile — a
+    single token ships ≤ 8 rows per slot, not a 128-row kernel tile),
+    einsum expert compute, and a replicated-hot-expert fast path that
+    skips the network entirely when E < P.
+
+Expert placement ("slots"): see ``core/exchange.SlotInfo`` — slot-major
+(slots, H, F) weights, replicated R = P/E times when E < P, replica
+selected by (rank mod R).
 """
 from __future__ import annotations
 
@@ -57,8 +68,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.gate import GateConfig, GateOutput, TILE_M
-from repro.core.moe import DIST_IMPLS, MoEConfig, run_gate, shared_expert_ffn
+from repro.core.exchange import (DECODE_TILE_M, ExchangePlan, SlotInfo,
+                                 effective_chunks, exchange_counts,
+                                 fixed_plan, gather_combine,
+                                 make_exchange_plan, scatter_to_buffer,
+                                 slot_capacity)
+from repro.core.moe import (DIST_IMPLS, MoEConfig, moe_ffn_gather, run_gate,
+                            shared_expert_ffn)
 from repro.kernels.fused_ep.kernel import fused_ep_moe
 from repro.kernels.fused_moe.ops import grouped_expert_ffn
 from repro.kernels.rdma.kernel import rdma_combine, rdma_dispatch
@@ -108,8 +124,9 @@ def fused_fallback_reason(interpret: bool, mesh=None,
     The fused kernel needs everything the rdma kernels need (its
     transport IS a pair of one-sided exchanges) plus the expert compute
     inside the kernel — ``expert_compute="einsum"`` (the dry-run/roofline
-    mode) keeps compute in XLA-visible einsums, which only the unfused
-    strategies can honor.
+    mode, and the decode plan whose 8-row capacity is below the kernel's
+    128-row tile) keeps compute in XLA-visible einsums, which only the
+    unfused strategies can honor.
     """
     if expert_compute != "kernel":
         return (f"expert_compute={expert_compute!r} keeps expert compute "
@@ -130,7 +147,7 @@ def resolve_dist_impl(cfg: MoEConfig, mesh=None,
     Validates ``cfg.dist_impl`` against :data:`repro.core.moe.DIST_IMPLS`
     and walks the downgrade chain ``fused -> rdma -> pipelined``, logging
     each distinct (requested impl, reason) once, until a strategy's gate
-    accepts.
+    accepts. The returned name indexes :data:`EXCHANGE_IMPLS`.
     """
     if cfg.dist_impl not in DIST_IMPLS:
         raise ValueError(
@@ -156,103 +173,12 @@ def resolve_dist_impl(cfg: MoEConfig, mesh=None,
     return impl
 
 
-@dataclasses.dataclass(frozen=True)
-class SlotInfo:
-    num_experts: int
-    world: int            # EP world size P (model-axis size)
-    slots: int            # max(E, P)
-    replicas: int         # P // E if E < P else 1
-    local_slots: int      # slots // P
-
-    @staticmethod
-    def make(num_experts: int, world: int) -> "SlotInfo":
-        if num_experts >= world:
-            assert num_experts % world == 0, (num_experts, world)
-            return SlotInfo(num_experts, world, num_experts, 1,
-                            num_experts // world)
-        assert world % num_experts == 0, (num_experts, world)
-        return SlotInfo(num_experts, world, world,
-                        world // num_experts, 1)
-
-    def expand_expert_weights(self, w: jax.Array) -> jax.Array:
-        """(E, ...) -> slot-major (slots, ...) with replication if E < P."""
-        if self.replicas == 1:
-            return w
-        return jnp.repeat(w, self.replicas, axis=0)
-
-    def slot_of_expert(self, expert_idx: jax.Array,
-                       src_rank: jax.Array) -> jax.Array:
-        if self.replicas == 1:
-            return expert_idx
-        return expert_idx * self.replicas + (src_rank % self.replicas)
-
-
-def slot_capacity(cfg: GateConfig, tokens: int, slots: int,
-                  tile_m: int = TILE_M, chunks: int = 1) -> int:
-    """Per-slot capacity aligned to the kernel tile (bM=128, §3.2.1).
-
-    §Perf iteration 3: aligning to tile_m only (not tile_m*chunks) keeps
-    capacity-padding compute minimal; the pipeline picks a chunk count
-    that divides the tile count instead (see effective_chunks)."""
-    raw = int(-(-cfg.top_k * tokens * cfg.capacity_factor // slots))
-    return max(tile_m, -(-raw // tile_m) * tile_m)
-
-
-def effective_chunks(capacity: int, want: int, tile_m: int = TILE_M) -> int:
-    """Largest chunk count <= want that splits capacity on tile bounds."""
-    tiles = capacity // tile_m
-    for c in range(min(want, tiles), 0, -1):
-        if tiles % c == 0:
-            return c
-    return 1
-
-
-def fixed_plan(slot_ids: jax.Array, slots: int, capacity: int):
-    """Slot/capacity placement for the fixed (slots, C, H) dispatch buffer.
-
-    Returns (packed_pos (T,k) int32 with drops -> slots*capacity,
-             counts (slots,) int32).
-    """
-    T, k = slot_ids.shape
-    flat_s = slot_ids.reshape(-1)
-    sort_idx = jnp.argsort(flat_s, stable=True).astype(jnp.int32)
-    sorted_s = flat_s[sort_idx]
-    counts = jnp.bincount(flat_s, length=slots).astype(jnp.int32)
-    run_start = jnp.cumsum(counts) - counts
-    rank_in_slot = jnp.arange(T * k, dtype=jnp.int32) - run_start[sorted_s]
-    kept = rank_in_slot < capacity
-    num_rows = slots * capacity
-    row_sorted = jnp.where(kept, sorted_s * capacity + rank_in_slot,
-                           num_rows).astype(jnp.int32)
-    packed_flat = jnp.full((T * k,), num_rows, jnp.int32)
-    packed_flat = packed_flat.at[sort_idx].set(row_sorted)
-    return packed_flat.reshape(T, k), jnp.minimum(counts, capacity)
-
-
-def _scatter_to_buffer(x: jax.Array, packed_pos: jax.Array, num_rows: int,
-                       top_k: int) -> jax.Array:
-    T, H = x.shape
-    flat_tok = jnp.arange(T * top_k, dtype=jnp.int32) // top_k
-    buf = jnp.zeros((num_rows + 1, H), x.dtype)
-    buf = buf.at[packed_pos.reshape(-1)].set(x[flat_tok], mode="drop")
-    return buf[:num_rows]
-
-
-def _gather_combine(y_buf: jax.Array, packed_pos: jax.Array,
-                    weights: jax.Array) -> jax.Array:
-    T, k = weights.shape
-    padded = jnp.concatenate(
-        [y_buf, jnp.zeros((1, y_buf.shape[1]), y_buf.dtype)], axis=0)
-    rows = jnp.minimum(packed_pos, y_buf.shape[0])
-    g = padded[rows.reshape(-1)].reshape(T, k, -1)
-    return jnp.sum(g * weights.astype(g.dtype)[..., None], axis=1)
-
-
 def _experts_einsum(w1, w2, w3, x, cfg: MoEConfig):
     """Cost-equivalent grouped GEMM as batched einsum over local slots.
 
     x: (Ls, R, H). Identical flops/bytes to the fused kernel's I/O
-    (including capacity-padding compute); used by the dry-run/roofline.
+    (including capacity-padding compute); used by the dry-run/roofline
+    and the decode plan (whose 8-row capacity is below the kernel tile).
     """
     h = jnp.einsum("lrh,lhf->lrf", x, w1,
                    preferred_element_type=jnp.float32
@@ -286,93 +212,26 @@ def _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg: MoEConfig):
                               interpret=cfg.interpret)
 
 
-def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
-                 info: SlotInfo, axis: str, impl: str,
-                 rng: Optional[jax.Array], mesh_axes=None):
-    """Runs INSIDE shard_map: x is (B_loc, S_loc, H) — the resident
-    sequence-sharded activation layout (§Perf iteration 2: tokens arrive
-    already split over the EP axis; no boundary all-gather/slice).
+# ------------------------------------------------- strategy bodies ------
+# Each body is ``(plan, buf, weights, cfg) -> y_back``: it receives the
+# ExchangePlan (counts_rcv filled), the (slots, C, H) scatter buffer and
+# the slot-major weight triple, and returns the (slots, C, H) combine
+# landing in the SAME layout — so the downstream gather-combine is
+# strategy-agnostic. Registered in EXCHANGE_IMPLS, indexed by
+# resolve_dist_impl's result.
 
-    Returns (y (B_loc, S_loc, H), aux dict).
-    """
-    P = info.world
-    rank = jax.lax.axis_index(axis)
-    B_loc, S_loc, H = x.shape
-    T_loc = B_loc * S_loc
-    x_loc = x.reshape(T_loc, H)
-
-    params = {"gate": w_gate, "w1": w1, "w2": w2}
-    if w3 is not None:
-        params["w3"] = w3
-    gate_out = run_gate(params, x_loc, cfg, rng)
-    slot_ids = info.slot_of_expert(gate_out.expert_indices, rank)
-
-    C = slot_capacity(cfg.gate, T_loc, info.slots)
-    chunks = effective_chunks(
-        C, cfg.num_chunks if impl == "pipelined" else 1)
-    packed_pos, counts = fixed_plan(slot_ids, info.slots, C)
-    buf = _scatter_to_buffer(x_loc, packed_pos, info.slots * C,
-                             cfg.gate.top_k)
-    buf = buf.reshape(info.slots, C, H)
-
-    counts_rcv = jax.lax.all_to_all(
-        counts.reshape(P, info.local_slots), axis, 0, 0, tiled=False)
-
-    if impl == "bulk":
-        recv = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
-        recv = recv.reshape(P, info.local_slots, C, H)
-        y = _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg)
-        y = y.reshape(info.slots, C, H)
-        y_back = jax.lax.all_to_all(y, axis, 0, 0, tiled=True)
-    elif impl == "pipelined":
-        y_back = _pipelined_rounds(buf, counts_rcv, w1, w2, w3, cfg, info,
-                                   axis, chunks)
-    elif impl == "rdma":
-        # Both directions device-initiated (paper §3.2): slab p of the
-        # staged buffer — the Ls*C rows bound for peer p's slots — is
-        # pushed one-sided into p's landing buffer; after expert compute
-        # the outputs are pushed back to their sources by the mirror
-        # kernel. Same buffer layouts as the bulk AllToAll path, so the
-        # downstream gather-combine is untouched.
-        slabs = buf.reshape(P, info.local_slots * C, H)
-        landing = rdma_dispatch(slabs, axis=axis, world=P,
-                                interpret=cfg.interpret,
-                                mesh_axes=mesh_axes)
-        recv = landing.reshape(P, info.local_slots, C, H)
-        y = _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg)
-        y_back = rdma_combine(y.reshape(P, info.local_slots * C, H),
-                              axis=axis, world=P, interpret=cfg.interpret,
-                              mesh_axes=mesh_axes)
-        y_back = y_back.reshape(info.slots, C, H)
-    elif impl == "fused":
-        # The single persistent kernel (kernels/fused_ep): dispatch,
-        # expert compute and combine share ONE pallas_call; only the tiny
-        # counts metadata (exchanged above) precedes it. Same staged-slab
-        # and combine-landing layouts as bulk/rdma, so the downstream
-        # gather-combine is untouched — and the output is bitwise-equal
-        # to the bulk path.
-        slabs = buf.reshape(P, info.local_slots * C, H)
-        y_back = fused_ep_moe(
-            slabs, w1, w2, w3, counts_rcv, axis=axis, world=P,
-            activation=cfg.activation, interpret=cfg.interpret,
-            mesh_axes=mesh_axes)
-        y_back = y_back.reshape(info.slots, C, H)
-    else:
-        raise ValueError(impl)
-
-    y_loc = _gather_combine(y_back.reshape(info.slots * C, H), packed_pos,
-                            gate_out.combine_weights).astype(x.dtype)
-    if cfg.d_ff_shared > 0:
-        y_loc = y_loc + shared_expert_ffn(shared, x_loc, cfg)
-    aux = {
-        "aux_loss": jax.lax.pmean(gate_out.aux_loss, axis),
-        "z_loss": jax.lax.pmean(gate_out.z_loss, axis),
-    }
-    return y_loc.reshape(B_loc, S_loc, H), aux
+def _exchange_bulk(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
+    w1, w2, w3 = weights
+    info, C = plan.info, plan.capacity
+    H = buf.shape[-1]
+    recv = jax.lax.all_to_all(buf, plan.axis, 0, 0, tiled=True)
+    recv = recv.reshape(plan.recv_shape(H))
+    y = _local_expert_compute(w1, w2, w3, recv, plan.counts_rcv, cfg)
+    y = y.reshape(info.slots, C, H)
+    return jax.lax.all_to_all(y, plan.axis, 0, 0, tiled=True)
 
 
-def _pipelined_rounds(buf, counts_rcv, w1, w2, w3, cfg: MoEConfig,
-                      info: SlotInfo, axis: str, n: int):
+def _exchange_pipelined(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     """FlashMoE overlapped schedule (paper Fig. 4) over capacity chunks.
 
     Iteration i: (a) issue dispatch AllToAll for chunk i+1, (b) compute
@@ -380,8 +239,12 @@ def _pipelined_rounds(buf, counts_rcv, w1, w2, w3, cfg: MoEConfig,
     (c) are dataflow-independent of (b)'s critical path, so XLA's async
     collectives overlap them with the MXU work — device-initiated,
     barrier-free transfers in the paper's sense. Chunks are tile-aligned
-    (C % (bM * n) == 0), so every chunk is whole tiles (in-place padding).
+    (C % (tile_m * n) == 0), so every chunk is whole tiles (in-place
+    padding).
     """
+    w1, w2, w3 = weights
+    info, axis, n = plan.info, plan.axis, plan.chunks
+    counts_rcv = plan.counts_rcv
     S, C, H = buf.shape
     Cc = C // n
     P, Ls = info.world, info.local_slots
@@ -418,6 +281,96 @@ def _pipelined_rounds(buf, counts_rcv, w1, w2, w3, cfg: MoEConfig,
     return out
 
 
+def _exchange_rdma(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
+    # Both directions device-initiated (paper §3.2): slab p of the
+    # staged buffer — the Ls*C rows bound for peer p's slots — is
+    # pushed one-sided into p's landing buffer; after expert compute
+    # the outputs are pushed back to their sources by the mirror
+    # kernel. Same buffer layouts as the bulk AllToAll path, so the
+    # downstream gather-combine is untouched.
+    w1, w2, w3 = weights
+    info, C = plan.info, plan.capacity
+    H = buf.shape[-1]
+    P = info.world
+    slabs = buf.reshape(plan.staged_slab_shape(H))
+    landing = rdma_dispatch(slabs, axis=plan.axis, world=P,
+                            interpret=cfg.interpret,
+                            mesh_axes=plan.mesh_axes)
+    recv = landing.reshape(plan.recv_shape(H))
+    y = _local_expert_compute(w1, w2, w3, recv, plan.counts_rcv, cfg)
+    y_back = rdma_combine(y.reshape(plan.combine_landing_shape(H)),
+                          axis=plan.axis, world=P, interpret=cfg.interpret,
+                          mesh_axes=plan.mesh_axes)
+    return y_back.reshape(info.slots, C, H)
+
+
+def _exchange_fused(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
+    # The single persistent kernel (kernels/fused_ep): dispatch,
+    # expert compute and combine share ONE pallas_call; only the tiny
+    # counts metadata (exchange_counts, run before the body) precedes
+    # it. Same staged-slab and combine-landing layouts as bulk/rdma, so
+    # the downstream gather-combine is untouched — and the output is
+    # bitwise-equal to the bulk path.
+    w1, w2, w3 = weights
+    info, C = plan.info, plan.capacity
+    H = buf.shape[-1]
+    slabs = buf.reshape(plan.staged_slab_shape(H))
+    y_back = fused_ep_moe(
+        slabs, w1, w2, w3, plan.counts_rcv, axis=plan.axis,
+        world=info.world, activation=cfg.activation,
+        interpret=cfg.interpret, mesh_axes=plan.mesh_axes)
+    return y_back.reshape(info.slots, C, H)
+
+
+EXCHANGE_IMPLS = {
+    "bulk": _exchange_bulk,
+    "pipelined": _exchange_pipelined,
+    "rdma": _exchange_rdma,
+    "fused": _exchange_fused,
+}
+
+
+# ------------------------------------------------- train/prefill body ---
+def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
+                 info: SlotInfo, axis: str, impl: str,
+                 rng: Optional[jax.Array], mesh_axes=None):
+    """Runs INSIDE shard_map: x is (B_loc, S_loc, H) — the resident
+    sequence-sharded activation layout (§Perf iteration 2: tokens arrive
+    already split over the EP axis; no boundary all-gather/slice).
+
+    Returns (y (B_loc, S_loc, H), aux dict).
+    """
+    rank = jax.lax.axis_index(axis)
+    B_loc, S_loc, H = x.shape
+    T_loc = B_loc * S_loc
+    x_loc = x.reshape(T_loc, H)
+
+    params = {"gate": w_gate, "w1": w1, "w2": w2}
+    if w3 is not None:
+        params["w3"] = w3
+    gate_out = run_gate(params, x_loc, cfg, rng)
+    slot_ids = info.slot_of_expert(gate_out.expert_indices, rank)
+
+    plan = make_exchange_plan(
+        cfg.gate, slot_ids, info, phase="train",
+        num_chunks=(cfg.num_chunks if impl == "pipelined" else 1),
+        axis=axis, mesh_axes=mesh_axes)
+    buf = scatter_to_buffer(plan, x_loc, cfg.gate.top_k)
+    plan = exchange_counts(plan)
+
+    y_back = EXCHANGE_IMPLS[impl](plan, buf, (w1, w2, w3), cfg)
+
+    y_loc = gather_combine(plan, y_back.reshape(plan.num_rows, H),
+                           gate_out.combine_weights).astype(x.dtype)
+    if cfg.d_ff_shared > 0:
+        y_loc = y_loc + shared_expert_ffn(shared, x_loc, cfg)
+    aux = {
+        "aux_loss": jax.lax.pmean(gate_out.aux_loss, axis),
+        "z_loss": jax.lax.pmean(gate_out.z_loss, axis),
+    }
+    return y_loc.reshape(B_loc, S_loc, H), aux
+
+
 def distributed_moe(params: dict, x: jax.Array, cfg: MoEConfig,
                     mesh: jax.sharding.Mesh, *, ep_axis: str = "model",
                     dp_axes=("data",), rng: Optional[jax.Array] = None):
@@ -448,6 +401,133 @@ def distributed_moe(params: dict, x: jax.Array, cfg: MoEConfig,
                 {k: P(None, None) for k in shared},
                 tok_spec)
     out_specs = (tok_spec, {"aux_loss": P(), "z_loss": P()})
+    fn = compat.shard_map(
+        lambda wg, a, b, c, sh, xx: body(wg, a, b, c, sh, xx),
+        mesh, in_specs, out_specs, check_vma=False)
+    return fn(params["gate"], params["w1"], params["w2"], w3, shared, x)
+
+
+# ------------------------------------------------------ decode bodies ---
+def _decode_token_block(x, info: SlotInfo, axis: str):
+    """Pad (B, H) replicated decode tokens to P*B_loc rows and take this
+    rank's contiguous (B_loc, H) block."""
+    P = info.world
+    B, H = x.shape
+    B_loc = -(-B // P)
+    pad = B_loc * P - B
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, H), x.dtype)], axis=0)
+    rank = jax.lax.axis_index(axis)
+    return jax.lax.dynamic_slice_in_dim(x, rank * B_loc, B_loc, 0)
+
+
+def _ep_decode_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
+                    info: SlotInfo, axis: str, impl: Optional[str],
+                    rng: Optional[jax.Array], mesh_axes=None):
+    """Runs INSIDE shard_map: x is (B, H) decode tokens REPLICATED over
+    the EP axis (decode batches are tiny; sequence-sharding them is not
+    possible at S=1). Each rank gates its ceil(B/P)-token block, computes
+    it, and an all-gather reassembles the batch.
+
+    ``impl`` names an EXCHANGE_IMPLS strategy run on the decode-flavor
+    plan — capacity tile 8, so a single token stages ≤ 8 rows per slot
+    instead of a 128-row kernel tile. ``impl=None`` is the
+    replicated-hot-expert fast path (E < P): the full expert set is
+    SMALLER than one per-device shard of a big-E layer, so the entry
+    point feeds the slot-major weights in replicated and the token block
+    computes via the gather path with NO dispatch/combine traffic at
+    all. Either way the replica each rank reads is selected by rank
+    (SlotInfo.slot_of_expert), so concurrent ranks spread their reads
+    across the R bit-identical copies instead of all hitting replica 0.
+
+    Returns (y (B, H), aux dict)."""
+    B, H = x.shape
+    rank = jax.lax.axis_index(axis)
+    x_loc = _decode_token_block(x, info, axis)
+
+    params = {"gate": w_gate, "w1": w1, "w2": w2}
+    if w3 is not None:
+        params["w3"] = w3
+    gate_out = run_gate(params, x_loc, cfg, rng)
+    slot_ids = info.slot_of_expert(gate_out.expert_indices, rank)
+
+    if impl is None:   # E < P fast path: local replica, zero exchange
+        og = dataclasses.replace(gate_out, expert_indices=slot_ids)
+        y_loc = moe_ffn_gather(params, x_loc, cfg, og)
+    else:
+        plan = make_exchange_plan(
+            cfg.gate, slot_ids, info, phase="decode",
+            num_chunks=(cfg.num_chunks if impl == "pipelined" else 1),
+            axis=axis, mesh_axes=mesh_axes)
+        buf = scatter_to_buffer(plan, x_loc, cfg.gate.top_k)
+        plan = exchange_counts(plan)
+        y_back = EXCHANGE_IMPLS[impl](plan, buf, (w1, w2, w3), cfg)
+        y_loc = gather_combine(plan, y_back.reshape(plan.num_rows, H),
+                               gate_out.combine_weights)
+
+    y_loc = y_loc.astype(x.dtype)
+    if cfg.d_ff_shared > 0:
+        y_loc = y_loc + shared_expert_ffn(shared, x_loc, cfg)
+    y = jax.lax.all_gather(y_loc, axis, axis=0, tiled=True)[:B]
+    aux = {
+        "aux_loss": jax.lax.pmean(gate_out.aux_loss, axis),
+        "z_loss": jax.lax.pmean(gate_out.z_loss, axis),
+    }
+    return y, aux
+
+
+def distributed_moe_decode(params: dict, x: jax.Array, cfg: MoEConfig,
+                           mesh: jax.sharding.Mesh, *,
+                           ep_axis: str = "model",
+                           rng: Optional[jax.Array] = None):
+    """Latency-oriented expert-parallel MoE over decode tokens x (B, H).
+
+    The decode counterpart of :func:`distributed_moe`: same strategy
+    table, different plan flavor. x enters and leaves REPLICATED (one
+    token per sequence; there is no sequence dim to keep resident), the
+    plan aligns capacity to DECODE_TILE_M (8) with no 128-row floor — a
+    1-token batch ships ≤ 8 rows per slot on the wire — and expert
+    compute runs as the cost-equivalent einsum (the grouped kernel's
+    128-row tiles would reintroduce the padding the plan removed), which
+    also means a requested ``dist_impl="fused"`` downgrades to ``rdma``
+    through its expert-compute gate.
+
+    When E < P the exchange is skipped entirely: every rank receives a
+    replica of the (small) expert set and computes its token block
+    locally, reading the replica selected by rank (``impl=None`` in
+    :func:`_ep_decode_body`). The decode serve layout stores those
+    weights replicated (launch/steps.build_cell ``replicate_experts``)
+    so the replicated in_specs resolve without a weight gather.
+
+    Expert weights must already be slot-major
+    (SlotInfo.expand_expert_weights). Returns (y (B, H), aux dict).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    info = SlotInfo.make(cfg.gate.num_experts, mesh.shape[ep_axis])
+    # decode plans stay below the kernel tile; the jnp gate avoids the
+    # pallas gate kernel's own 128-row tiling on tiny token counts.
+    cfg = dataclasses.replace(cfg, expert_compute="einsum",
+                              use_pallas_gate=False)
+    w3 = params.get("w3")
+    shared = {k: v for k, v in params.items() if k.startswith("shared_")}
+    rep2 = P(None, None)
+    if info.replicas > 1:
+        w_spec = P(None, None, None)   # fast path: every expert local
+        impl = None
+    else:
+        w_spec = P(ep_axis, None, None)
+        impl = resolve_dist_impl(cfg, mesh, ep_axis)
+    body = functools.partial(_ep_decode_body, cfg=cfg, info=info,
+                             axis=ep_axis, impl=impl, rng=rng,
+                             mesh_axes=tuple(mesh.shape))
+    in_specs = (rep2, w_spec, w_spec,
+                (w_spec if w3 is not None else None),
+                {k: rep2 for k in shared},
+                rep2)
+    out_specs = (rep2, {"aux_loss": P(), "z_loss": P()})
     fn = compat.shard_map(
         lambda wg, a, b, c, sh, xx: body(wg, a, b, c, sh, xx),
         mesh, in_specs, out_specs, check_vma=False)

@@ -1,0 +1,246 @@
+"""Planning layer of the EP data plane: WHAT travels, to WHERE, in WHAT
+shape — separated from the transport strategies that move it
+(core/dispatch.py, the ``EXCHANGE_IMPLS`` table).
+
+The paper's payload-efficiency claim ("never move or compute null work")
+binds differently per serving phase, so the planner is phase-aware:
+
+  * ``phase="train"`` — the train/prefill plan: per-slot capacity aligned
+    up to the fused kernel's 128-row tile (``TILE_M``, paper §3.2.1
+    in-place padding), pipeline chunks split on tile bounds. This
+    reproduces the pre-refactor ``slot_capacity``/``fixed_plan`` layout
+    BITWISE (the bulk/pipelined/rdma/fused equivalence-matrix tests are
+    the regression net).
+
+  * ``phase="decode"`` — the latency plan: at decode ``T·k ≪ E·C``, so a
+    128-row capacity floor would ship a full kernel tile per slot for a
+    single token. Capacity aligns to ``DECODE_TILE_M`` (8) instead — a
+    1-token batch stages ≤ 8 rows per slot on the wire — and expert
+    compute runs as the cost-equivalent einsum (the grouped kernel's
+    128-row tiles would reintroduce exactly the padding the plan
+    removed).
+
+An :class:`ExchangePlan` carries the slot topology (:class:`SlotInfo`),
+the static capacity/chunking, the traced placement arrays
+(``packed_pos``/``counts``), and the buffer layouts every strategy
+shares: the scatter buffer ``(slots, C, H)``, the staged slab and
+combine landing ``(P, local_slots·C, H)`` (writer-indexed — the
+Theorem 3.1 conflict-free discipline, see core/layout.py), and the
+expert-compute view ``(P, local_slots, C, H)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gate import GateConfig, TILE_M
+
+# Decode-plan capacity alignment: small enough that a single-token batch
+# ships no padding tile, large enough to keep the staged rows
+# lane-aligned for the DMA engine. No 128-row floor (paper §3.2.1 is a
+# THROUGHPUT alignment; at decode the wire payload dominates).
+DECODE_TILE_M = 8
+
+PHASES = ("train", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotInfo:
+    """Expert placement. The EP world always equals the mesh's model-axis
+    size P. When E >= P, each device hosts E/P experts. When E < P,
+    experts are replicated R = P/E times (production practice for hot
+    experts; DeepSeek-v3 style) and each source deterministically picks
+    replica (rank mod R), which balances load. Expert weights are stored
+    slot-major — (slots, H, F) — so the local slice is always contiguous
+    and P-divisible."""
+    num_experts: int
+    world: int            # EP world size P (model-axis size)
+    slots: int            # max(E, P)
+    replicas: int         # P // E if E < P else 1
+    local_slots: int      # slots // P
+
+    @staticmethod
+    def make(num_experts: int, world: int) -> "SlotInfo":
+        if num_experts >= world:
+            assert num_experts % world == 0, (num_experts, world)
+            return SlotInfo(num_experts, world, num_experts, 1,
+                            num_experts // world)
+        assert world % num_experts == 0, (num_experts, world)
+        return SlotInfo(num_experts, world, world,
+                        world // num_experts, 1)
+
+    def expand_expert_weights(self, w: jax.Array) -> jax.Array:
+        """(E, ...) -> slot-major (slots, ...) with replication if E < P."""
+        if self.replicas == 1:
+            return w
+        return jnp.repeat(w, self.replicas, axis=0)
+
+    def slot_of_expert(self, expert_idx: jax.Array,
+                       src_rank: jax.Array) -> jax.Array:
+        """Slot of ``expert_idx`` as selected by source ``src_rank``
+        (rank-balanced over the R bit-identical replicas when E < P;
+        identity when E >= P). ``src_rank`` may be a scalar rank or a
+        broadcastable array — the local decode path balances over token
+        index instead of rank (same modular mirror)."""
+        if self.replicas == 1:
+            return expert_idx
+        return expert_idx * self.replicas + (src_rank % self.replicas)
+
+
+def phase_tile_m(phase: str) -> int:
+    """Capacity alignment for a plan flavor: the fused kernel's 128-row
+    tile for train/prefill, the 8-row decode tile for decode."""
+    if phase not in PHASES:
+        raise ValueError(f"unknown phase {phase!r}; expected one of {PHASES}")
+    return TILE_M if phase == "train" else DECODE_TILE_M
+
+
+def slot_capacity(cfg: GateConfig, tokens: int, slots: int,
+                  tile_m: int = TILE_M, chunks: int = 1) -> int:
+    """Per-slot capacity aligned to the plan tile (bM=128 for the train
+    plan, §3.2.1; 8 for the decode plan).
+
+    §Perf iteration 3: aligning to tile_m only (not tile_m*chunks) keeps
+    capacity-padding compute minimal; the pipeline picks a chunk count
+    that divides the tile count instead (see effective_chunks)."""
+    raw = int(-(-cfg.top_k * tokens * cfg.capacity_factor // slots))
+    return max(tile_m, -(-raw // tile_m) * tile_m)
+
+
+def effective_chunks(capacity: int, want: int, tile_m: int = TILE_M) -> int:
+    """Largest chunk count <= want that splits capacity on tile bounds."""
+    tiles = capacity // tile_m
+    for c in range(min(want, tiles), 0, -1):
+        if tiles % c == 0:
+            return c
+    return 1
+
+
+def fixed_plan(slot_ids: jax.Array, slots: int, capacity: int):
+    """Slot/capacity placement for the fixed (slots, C, H) dispatch buffer.
+
+    Returns (packed_pos (T,k) int32 with drops -> slots*capacity,
+             counts (slots,) int32).
+    """
+    T, k = slot_ids.shape
+    flat_s = slot_ids.reshape(-1)
+    sort_idx = jnp.argsort(flat_s, stable=True).astype(jnp.int32)
+    sorted_s = flat_s[sort_idx]
+    counts = jnp.bincount(flat_s, length=slots).astype(jnp.int32)
+    run_start = jnp.cumsum(counts) - counts
+    rank_in_slot = jnp.arange(T * k, dtype=jnp.int32) - run_start[sorted_s]
+    kept = rank_in_slot < capacity
+    num_rows = slots * capacity
+    row_sorted = jnp.where(kept, sorted_s * capacity + rank_in_slot,
+                           num_rows).astype(jnp.int32)
+    packed_flat = jnp.full((T * k,), num_rows, jnp.int32)
+    packed_flat = packed_flat.at[sort_idx].set(row_sorted)
+    return packed_flat.reshape(T, k), jnp.minimum(counts, capacity)
+
+
+@dataclasses.dataclass
+class ExchangePlan:
+    """One routed batch's exchange: slot topology + capacity/chunking +
+    placement arrays + the buffer layouts every strategy shares.
+
+    Static fields (python ints/strings, resolved at trace time) describe
+    the layouts; ``packed_pos``/``counts``/``counts_rcv`` are traced
+    arrays. ``counts_rcv`` is None until :func:`exchange_counts` runs the
+    tiny metadata AllToAll (the only exchange that precedes the data
+    plane in every strategy, including the fused single kernel)."""
+    info: SlotInfo
+    phase: str            # "train" | "decode" (see phase_tile_m)
+    capacity: int         # C rows per slot (tile-aligned)
+    chunks: int           # pipeline chunk count (divides capacity tiles)
+    tile_m: int           # alignment the capacity was rounded to
+    axis: str             # EP mesh axis name
+    mesh_axes: Optional[Tuple[str, ...]]  # all mesh axes (peer addressing)
+    packed_pos: jax.Array                 # (T, k) rows into the buffer
+    counts: jax.Array                     # (slots,) send-side counts
+    counts_rcv: Optional[jax.Array] = None  # (P, local_slots) after exchange
+
+    # ---------------------------------------------------- layouts ----
+    @property
+    def num_rows(self) -> int:
+        return self.info.slots * self.capacity
+
+    def buffer_shape(self, H: int) -> Tuple[int, int, int]:
+        """Scatter buffer: (slots, C, H), slot-major."""
+        return (self.info.slots, self.capacity, H)
+
+    def staged_slab_shape(self, H: int) -> Tuple[int, int, int]:
+        """Per-peer staged slabs: (P, local_slots*C, H). Slab p holds the
+        rows bound for peer p's slots; the one-sided kernels push slab p
+        straight into peer p's landing[me] (writer-indexed)."""
+        i = self.info
+        return (i.world, i.local_slots * self.capacity, H)
+
+    # the combine landing mirrors the staged slab — same symmetric,
+    # writer-indexed layout, opposite direction (core/layout.py
+    # ROUND_COMBINE).
+    combine_landing_shape = staged_slab_shape
+
+    def recv_shape(self, H: int) -> Tuple[int, int, int, int]:
+        """Expert-compute view of the landing: (P, local_slots, C, H)."""
+        i = self.info
+        return (i.world, i.local_slots, self.capacity, H)
+
+
+def make_exchange_plan(gate_cfg: GateConfig, slot_ids: jax.Array,
+                       info: SlotInfo, *, phase: str = "train",
+                       num_chunks: int = 1, axis: str = "model",
+                       mesh_axes=None,
+                       tile_m: Optional[int] = None) -> ExchangePlan:
+    """Phase-aware planner: placement + layouts for one routed batch.
+
+    ``slot_ids``: (T, k) slot per (token, choice), already replica-
+    resolved via :meth:`SlotInfo.slot_of_expert`. ``phase="train"``
+    reproduces the pre-refactor tile-128 plan bitwise; ``phase="decode"``
+    aligns capacity to :data:`DECODE_TILE_M` with no 128-row floor.
+    """
+    tile = phase_tile_m(phase) if tile_m is None else tile_m
+    T = slot_ids.shape[0]
+    capacity = slot_capacity(gate_cfg, T, info.slots, tile_m=tile)
+    chunks = effective_chunks(capacity, num_chunks, tile_m=tile)
+    packed_pos, counts = fixed_plan(slot_ids, info.slots, capacity)
+    return ExchangePlan(
+        info=info, phase=phase, capacity=capacity, chunks=chunks,
+        tile_m=tile, axis=axis,
+        mesh_axes=tuple(mesh_axes) if mesh_axes is not None else None,
+        packed_pos=packed_pos, counts=counts)
+
+
+def exchange_counts(plan: ExchangePlan) -> ExchangePlan:
+    """Run the per-slot counts metadata AllToAll (the only pre-exchange
+    every strategy needs — tile_valid/work-conservation input) and return
+    the plan with ``counts_rcv`` (P, local_slots) filled."""
+    i = plan.info
+    counts_rcv = jax.lax.all_to_all(
+        plan.counts.reshape(i.world, i.local_slots), plan.axis, 0, 0,
+        tiled=False)
+    return dataclasses.replace(plan, counts_rcv=counts_rcv)
+
+
+def scatter_to_buffer(plan: ExchangePlan, x: jax.Array,
+                      top_k: int) -> jax.Array:
+    """Tokens (T, H) -> the plan's (slots, C, H) scatter buffer (drops
+    fall off the +1 guard row)."""
+    T, H = x.shape
+    flat_tok = jnp.arange(T * top_k, dtype=jnp.int32) // top_k
+    buf = jnp.zeros((plan.num_rows + 1, H), x.dtype)
+    buf = buf.at[plan.packed_pos.reshape(-1)].set(x[flat_tok], mode="drop")
+    return buf[:plan.num_rows].reshape(plan.buffer_shape(H))
+
+
+def gather_combine(plan: ExchangePlan, y_buf: jax.Array,
+                   weights: jax.Array) -> jax.Array:
+    """Combine-landing rows (slots*C, H) -> (T, H) weighted token sums."""
+    T, k = weights.shape
+    padded = jnp.concatenate(
+        [y_buf, jnp.zeros((1, y_buf.shape[1]), y_buf.dtype)], axis=0)
+    rows = jnp.minimum(plan.packed_pos, y_buf.shape[0])
+    g = padded[rows.reshape(-1)].reshape(T, k, -1)
+    return jnp.sum(g * weights.astype(g.dtype)[..., None], axis=1)

@@ -6,15 +6,18 @@ Three execution paths, all numerically equivalent (tested):
   * ``fused``  — the paper's single-kernel path on one device: fused gate
                  kernel + packed routing plan + ONE grouped-GEMM pallas_call
                  (GEMM0 -> act -> GEMM1 -> combine-scale) + gather-combine.
-  * ``dist``   — expert-parallel path (see ``core/dispatch.py``): bulk
-                 AllToAll (baseline, GShard-style), payload-efficient
+  * ``dist``   — expert-parallel path (planning in ``core/exchange.py``,
+                 transport in ``core/dispatch.py``): bulk AllToAll
+                 (baseline, GShard-style), payload-efficient
                  chunk-pipelined dispatch (the paper's contribution via
                  XLA async collectives), device-initiated one-sided RDMA
                  for both directions (``dist_impl="rdma"``, the paper's
                  §3.2 put+signal as pallas kernels), or the whole
                  operator as ONE persistent kernel — dispatch, expert
                  compute and combine fused into a single pallas_call
-                 (``dist_impl="fused"``, the paper's title claim).
+                 (``dist_impl="fused"``, the paper's title claim). At
+                 decode, ``distributed_moe_decode`` runs the same
+                 strategies on an 8-row-capacity decode plan.
 
 Shared experts (DeepSeek-v2) run as a dense FFN added to the routed output.
 """
@@ -220,7 +223,8 @@ def moe_ffn_packed(params: dict, x: jax.Array, cfg: MoEConfig,
     """Capacity-packed grouped compute via batched einsum — the XLA-native
     cost-equivalent of the fused kernel (used on CPU and by the dry-run;
     identical routing/drop semantics to ``fused``)."""
-    from repro.core.dispatch import _experts_einsum, fixed_plan
+    from repro.core.dispatch import _experts_einsum
+    from repro.core.exchange import fixed_plan
     gc = cfg.gate
     T = x.shape[0]
     E = gc.num_experts

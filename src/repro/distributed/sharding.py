@@ -38,7 +38,7 @@ _STACKED_PREFIXES = ("layers", "enc_layers", "cross", "cross_norm")
 
 
 def param_spec(cfg: ArchConfig, mesh: Mesh, path: str, shape,
-               serve: bool = False) -> P:
+               serve: bool = False, replicate_experts: bool = False) -> P:
     """PartitionSpec for one parameter, by its pytree path.
 
     Scanned-layer params carry a leading L dim (never sharded); all rules
@@ -92,10 +92,16 @@ def param_spec(cfg: ArchConfig, mesh: Mesh, path: str, shape,
     if name in ("w_dkv", "w_kr"):
         return repl                      # latent dims are small; replicate
     if name in ("w1", "w3") and nd == 3:                 # experts
+        if replicate_experts:
+            return repl                  # E < P decode fast path: the
+                                         # (small) expert set is resident
+                                         # on every rank — zero exchange
         if serve:
             return sh(2)                 # gather-MoE: shard F
         return sh(0) if _div(lshape[0], m) else sh(2)    # EP else expert-TP
     if name == "w2" and nd == 3:
+        if replicate_experts:
+            return repl
         if serve:
             return sh(1)
         return sh(0) if _div(lshape[0], m) else sh(1)
@@ -131,12 +137,12 @@ def zero1_spec(spec: P, shape, mesh: Mesh) -> P:
 
 
 def params_shardings(cfg: ArchConfig, mesh: Mesh, params_tree,
-                     serve: bool = False):
+                     serve: bool = False, replicate_experts: bool = False):
     """NamedSharding pytree for a params pytree (works on SDS trees)."""
     def one(path, leaf):
         key = "/".join(_pstr(p) for p in path)
         return NamedSharding(mesh, param_spec(cfg, mesh, key, leaf.shape,
-                                              serve))
+                                              serve, replicate_experts))
     return jax.tree_util.tree_map_with_path(one, params_tree)
 
 

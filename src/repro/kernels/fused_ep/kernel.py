@@ -291,7 +291,7 @@ def fused_ep_moe(slabs: jax.Array, w1: jax.Array, w2: jax.Array,
     Returns:
       (P, local_slots*C, H): row p holds the outputs slot-owner p pushed
       back for the rows THIS device staged toward p — the layout
-      ``_gather_combine`` unpacks, bitwise-equal to the bulk path.
+      ``exchange.gather_combine`` unpacks, bitwise-equal to the bulk path.
     """
     return _fused_ep(slabs, w1, w2, w3, counts_rcv, axis, world,
                      activation, interpret,

@@ -226,7 +226,7 @@ def rdma_combine(slabs: jax.Array, *, axis: str, world: int,
     owner, so Theorem 3.1's p* = source discipline holds in reverse).
     Returns (P, C, H) where row p holds the outputs slot-owner p computed
     for tokens THIS device staged toward p — exactly the layout
-    ``_gather_combine`` unpacks by ``packed_pos``.
+    ``exchange.gather_combine`` unpacks by ``packed_pos``.
     """
     return _combine_p(slabs, axis, world, interpret,
                       None if mesh_axes is None else tuple(mesh_axes))

@@ -4,8 +4,48 @@ style slot management (requests join/leave the batch between steps).
 CPU-scale example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
       --requests 8 --prompt-len 32 --max-new 16
+
+Expert-parallel decode (MoE archs): ``--ep P`` builds a (1, P) host mesh,
+keeps the expert weights EP-sharded (slot-major, the same layout the
+train cells use) and routes every decode token through
+``distributed_moe_decode`` — ``--dist-impl`` selects the exchange
+strategy (core/dispatch.EXCHANGE_IMPLS; unrunnable strategies downgrade
+with a logged reason):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+      --reduced --ep 4 --dist-impl pipelined --requests 4 --max-new 8
 """
 from __future__ import annotations
+
+def _ep_from_argv(argv) -> int:
+    """Best-effort pre-argparse read of --ep (both '--ep N' and '--ep=N'
+    forms); 0 on absent/malformed — argparse reports the real error."""
+    for i, a in enumerate(argv):
+        val = None
+        if a == "--ep" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif a.startswith("--ep="):
+            val = a.split("=", 1)[1]
+        if val is not None:
+            try:
+                return int(val)
+            except ValueError:
+                return 0
+    return 0
+
+
+if __name__ == "__main__":
+    # --ep P needs P host placeholder devices; XLA locks the device count
+    # on first init, so this must run before the jax import below (plain
+    # library imports of this module are unaffected).
+    import os as _os
+    import sys as _sys
+    _ep = _ep_from_argv(_sys.argv)
+    _flags = _os.environ.get("XLA_FLAGS", "")
+    if _ep > 1 and "--xla_force_host_platform_device_count" not in _flags:
+        _os.environ["XLA_FLAGS"] = (
+            _flags
+            + f" --xla_force_host_platform_device_count={_ep}").strip()
 
 import argparse
 import time
@@ -15,7 +55,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import get_config
+from repro.core.moe import DIST_IMPLS
 from repro.launch.steps import make_pctx
 from repro.models.model import init_params
 from repro.models.serve import decode_step, init_cache, prefill
@@ -26,14 +68,17 @@ class BatchedServer:
 
     One fixed decode batch of ``slots``; finished sequences free their
     slot for queued requests (continuous batching at step granularity).
+    ``mesh`` (optional) is entered around every step so the EP decode
+    path's shard_map sees it on ambient-mesh JAX versions.
     """
 
     def __init__(self, cfg, params, *, slots: int, seq_budget: int,
-                 pctx, dtype=jnp.float32):
+                 pctx, dtype=jnp.float32, mesh=None):
         self.cfg, self.params, self.pctx = cfg, params, pctx
         self.slots = slots
         self.seq_budget = seq_budget
         self.dtype = dtype
+        self.mesh = mesh
         self._prefill = jax.jit(
             lambda p, b: prefill(cfg, p, b, seq_budget, pctx, dtype=dtype))
         self._decode = jax.jit(
@@ -47,21 +92,27 @@ class BatchedServer:
         if self.cfg.enc_dec:
             batch["frames"] = jnp.zeros(
                 (n, self.cfg.enc_seq, self.cfg.d_model), self.dtype)
-        logits, cache = self._prefill(self.params, batch)
-        out = [[] for _ in range(n)]
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        steps = []                 # (token row, emitted mask) per step
         done = np.zeros(n, bool)
-        for _ in range(max_new):
-            for i in range(n):
-                if not done[i]:
-                    out[i].append(int(tok[i]))
-                    if eos >= 0 and int(tok[i]) == eos:
-                        done[i] = True
-            if done.all():
-                break
-            logits, cache = self._decode(self.params, cache, tok)
+        with compat.with_mesh(self.mesh):
+            logits, cache = self._prefill(self.params, batch)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        return out
+            for _ in range(max_new):
+                # ONE device->host sync per step: the loop used to call
+                # int(tok[i]) per sequence per step — n blocking
+                # transfers each — serializing the decode stream on
+                # host round-trips. Pull the vector once and keep the
+                # done/EOS bookkeeping in numpy.
+                tok_np = np.asarray(tok)
+                emit = ~done
+                steps.append((tok_np, emit))
+                if eos >= 0:
+                    done = done | (emit & (tok_np == eos))
+                if done.all():
+                    break
+                logits, cache = self._decode(self.params, cache, tok)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return [[int(t[i]) for t, e in steps if e[i]] for i in range(n)]
 
 
 def main(argv=None):
@@ -72,17 +123,44 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ep", type=int, default=1,
+                    help="EP world (model-axis size); >1 builds a (1, ep) "
+                         "host mesh and serves MoE layers expert-parallel")
+    ap.add_argument("--dist-impl", default="pipelined",
+                    choices=list(DIST_IMPLS),
+                    help="EP exchange strategy (unrunnable strategies "
+                         "downgrade with a logged reason)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    pctx = make_pctx(cfg, None, train=False)
+    mesh = None
+    if args.ep > 1:
+        if jax.device_count() < args.ep:
+            raise SystemExit(
+                f"--ep {args.ep} needs {args.ep} devices, have "
+                f"{jax.device_count()} (run as a script so the host "
+                "placeholder devices are forced before jax init)")
+        mesh = compat.make_mesh((1, args.ep), ("data", "model"))
+    pctx = make_pctx(cfg, mesh, train=False, dist_impl=args.dist_impl)
     params = init_params(cfg, jax.random.PRNGKey(args.seed),
-                         dtype=jnp.float32)
+                         dtype=jnp.float32, ep_world=args.ep)
+    if mesh is not None:
+        # decode serving keeps the EP (slot-major-sharded) expert layout —
+        # the same placement the train cells use — instead of the old
+        # F-sharded serve layout; when E < ep the (small) expert set is
+        # replicated so the fast path finds every expert resident (see
+        # launch/steps.build_cell).
+        from repro.distributed import sharding as shd
+        rep_experts = (cfg.moe is not None
+                       and cfg.moe.num_experts < args.ep)
+        params = jax.device_put(
+            params, shd.params_shardings(cfg, mesh, params, serve=False,
+                                         replicate_experts=rep_experts))
     server = BatchedServer(cfg, params, slots=args.requests,
                            seq_budget=args.prompt_len + args.max_new,
-                           pctx=pctx)
+                           pctx=pctx, mesh=mesh)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab,
                            (args.requests, args.prompt_len)).astype(np.int32)

@@ -201,9 +201,23 @@ def build_cell(arch: str, shape: str, mesh: Optional[Mesh], *,
 
     p_sds = params_specs(cfg, ep_world, dtype)
     b_sds = batch_specs(cfg, cell, dtype)
-    serve_layout = cell.kind == "decode"
+    # decode cells keep the EP (slot-major-sharded) expert layout when
+    # the mesh can host expert parallelism — the decode step routes MoE
+    # through distributed_moe_decode, which wants weights sharded on the
+    # slot dim like train/prefill. The replicated/F-sharded serve layout
+    # only remains for meshes that cannot run EP (model axis 1).
+    serve_layout = cell.kind == "decode" and not pctx.use_ep
+    # E < P decode: the replicated-hot-expert fast path wants the (small)
+    # expert set RESIDENT on every rank — replicate the slot-major
+    # weights instead of slot-sharding them, so the per-step weight
+    # all-gather the fast path's replicated in_specs would otherwise
+    # imply vanishes (the weights already live everywhere).
+    rep_experts = (cell.kind == "decode" and pctx.use_ep
+                   and cfg.moe is not None
+                   and cfg.moe.num_experts < ep_world)
     if mesh is not None:
-        p_sh = shd.params_shardings(cfg, mesh, p_sds, serve=serve_layout)
+        p_sh = shd.params_shardings(cfg, mesh, p_sds, serve=serve_layout,
+                                    replicate_experts=rep_experts)
         b_sh = _batch_shardings(mesh, b_sds, pctx.policy)
     else:
         p_sh = b_sh = None

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.dispatch import SlotInfo, distributed_moe
+from repro.core.dispatch import (SlotInfo, distributed_moe,
+                                 distributed_moe_decode)
 from repro.core.gate import GateConfig
 from repro.core.moe import (MoEConfig, init_moe_params, moe_layer,
                             moe_ffn_gather, run_gate, shared_expert_ffn)
@@ -219,10 +220,25 @@ def _apply_ffn(cfg: ArchConfig, p_layer, x, pctx: ParallelContext,
     mcfg = _moe_config(cfg, pctx)
     mp = p_layer["moe"]
     if decode:
-        og = run_gate(mp, x2d, dataclasses.replace(mcfg, use_pallas_gate=False))
+        mcfg_d = dataclasses.replace(mcfg, use_pallas_gate=False)
+        if pctx.use_ep and pctx.mesh is not None \
+                and pctx.mesh.shape.get(pctx.model_axis, 1) > 1:
+            # latency-oriented EP decode: decode-flavor ExchangePlan
+            # (8-row capacity tile) over slot-major sharded weights,
+            # replicated-hot-expert fast path when E < P.
+            y, aux = distributed_moe_decode(mp, x2d, mcfg_d, pctx.mesh,
+                                            ep_axis=pctx.model_axis)
+            return y.reshape(shape), aux["aux_loss"] + aux["z_loss"]
+        og = run_gate(mp, x2d, mcfg_d)
         info = SlotInfo.make(cfg.moe.num_experts, max(1, pctx.ep_world))
+        # replica selected per token (mirror SlotInfo.slot_of_expert):
+        # always reading replica 0 made the first copy a bandwidth
+        # hotspot when E < P; balancing over the token index spreads
+        # reads across the R bit-identical replicas.
+        tok = jnp.arange(x2d.shape[0],
+                         dtype=og.expert_indices.dtype)[:, None]
         og = dataclasses.replace(
-            og, expert_indices=(og.expert_indices * info.replicas))
+            og, expert_indices=info.slot_of_expert(og.expert_indices, tok))
         y = moe_ffn_gather(mp, x2d, mcfg, og)
         if mcfg.d_ff_shared > 0:
             y = y + shared_expert_ffn(mp, x2d, mcfg)

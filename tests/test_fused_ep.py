@@ -315,4 +315,8 @@ def test_bench_smoke_emits_per_impl_json(tmp_path):
     assert local_impls == {"packed", "fused", "ref"}
     dist_impls = {row["impl"] for row in rec["distributed"]}
     assert {"bulk_c1", "pipelined_c2", "rdma_c1", "fused_c1"} <= dist_impls
-    assert all(row["us"] > 0 for row in rec["local"] + rec["distributed"])
+    decode_impls = {row["impl"] for row in rec["decode"]}
+    assert {"decode_gather", "decode_bulk", "decode_pipelined",
+            "decode_rdma"} <= decode_impls
+    assert all(row["us"] > 0 for row in
+               rec["local"] + rec["distributed"] + rec["decode"])
