@@ -1,7 +1,7 @@
 # FlashMoE repro — common entry points. Pure-Python JAX project: no
 # build step, PYTHONPATH=src is the only setup (see README.md).
 
-.PHONY: test smoke check-docs bench bench-smoke dryrun
+.PHONY: test smoke check-docs bench bench-smoke bench-serving serve-smoke dryrun
 
 # tier-1 verify: the whole suite (multi-device cases spawn subprocesses)
 test:
@@ -23,6 +23,17 @@ bench:
 # tiny-shape CI sanity run: every impl row must emit valid JSON
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_latency --smoke /tmp/bench_smoke.json
+
+# refresh the committed serving baseline (static vs continuous batching)
+bench-serving:
+	PYTHONPATH=src python -m benchmarks.bench_serving BENCH_serving.json
+
+# tiny-shape continuous-batching engine run (Poisson arrivals, slot
+# refill, EOS stop) — the serving CI sanity target
+serve-smoke:
+	PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+		--reduced --requests 4 --slots 2 --prompt-len 8 --max-new 6 \
+		--arrival-rate 0.5 --eos 7
 
 # lower+compile one production cell on the host-placeholder mesh
 dryrun:

@@ -19,18 +19,16 @@ must stay valid and per-impl complete; wall times are meaningless).
 """
 import argparse
 import json
-import os
 import sys
 
 if __name__ == "__main__":
     # multi-device EP bench needs host placeholder devices; must be set
     # before jax first initializes (library imports are unaffected).
-    # Append to any pre-existing XLA_FLAGS so exported debug/dump flags
-    # don't silently disable the distributed section of the baseline.
-    _flags = os.environ.get("XLA_FLAGS", "")
-    if "--xla_force_host_platform_device_count" not in _flags:
-        os.environ["XLA_FLAGS"] = (
-            _flags + " --xla_force_host_platform_device_count=4").strip()
+    # force_host_devices appends to any pre-existing XLA_FLAGS so
+    # exported debug/dump flags don't silently disable the distributed
+    # section of the baseline.
+    from repro.launch.bootstrap import force_host_devices
+    force_host_devices(4)
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,160 @@
+"""Serving benchmark: static-batch vs continuous-batch slot refill.
+
+One Poisson-arrival request set with per-request generation budgets is
+served twice through the SAME slot count:
+
+  * **static** — ``serving.static.BatchedServer``: fixed batches in
+    FCFS order, each decoded to completion; a batch pays the MAX budget
+    of its members while finished rows idle (arrival waits are NOT
+    charged — the count is pure decode steps, which favors static);
+  * **continuous** — ``serving.ServingEngine``: freed slots refill from
+    the queue between decode steps.
+
+Both rows record decode steps, slot occupancy and an ``identical`` flag:
+per-request greedy token streams must be bitwise-identical to a one-shot
+fixed-batch reference holding ALL requests (row-independence of the
+decode math — the property tests/test_serving.py enforces). Fewer
+continuous decode steps for the same identical token set is the
+continuous-batching win.
+
+Writes BENCH_serving.json (the committed serving-trajectory baseline).
+``--smoke`` is the tiny-shape CI variant; ``--ep P`` serves the MoE
+layers expert-parallel on a (1, P) host-placeholder mesh (rows gain an
+"ep" field). Wall times are CPU-relative — compare trajectories, not
+absolutes.
+"""
+import argparse
+import json
+import sys
+
+if __name__ == "__main__":
+    # host placeholder devices for --ep; must precede the first jax
+    # import in the process (library imports are unaffected).
+    from repro.launch.bootstrap import ep_from_argv, force_host_devices
+    force_host_devices(ep_from_argv())
+
+import numpy as np
+
+import jax
+
+from repro.launch.serve import build_serving_setup, poisson_arrivals
+from repro.serving import (BatchedServer, run_continuous_workload,
+                           run_static_workload)
+
+
+def make_workload(cfg, *, requests, prompt_len, max_new_lo, max_new_hi,
+                  rate, seed):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab,
+                           (requests, prompt_len)).astype(np.int32)
+    max_new = rng.integers(max_new_lo, max_new_hi + 1,
+                           requests).astype(int)
+    arrivals = poisson_arrivals(rng, requests, rate)
+    return prompts, max_new, arrivals
+
+
+def reference_streams(cfg, params, pctx, mesh, prompts, max_new, *,
+                      seq_budget, eos):
+    """One-shot fixed batch of ALL requests, truncated to each request's
+    own budget — the greedy chain only depends on the request's own
+    prefix, so truncation commutes with decoding."""
+    ref = BatchedServer(cfg, params, slots=len(prompts),
+                        seq_budget=seq_budget, pctx=pctx, mesh=mesh)
+    outs = ref.run(prompts, int(max(max_new)), eos=eos)
+    return [outs[i][:int(max_new[i])] for i in range(len(prompts))]
+
+
+def run_benchmark(args):
+    cfg, mesh, pctx, params = build_serving_setup(args)
+    prompts, max_new, arrivals = make_workload(
+        cfg, requests=args.requests, prompt_len=args.prompt_len,
+        max_new_lo=args.max_new_lo, max_new_hi=args.max_new_hi,
+        rate=args.arrival_rate, seed=args.seed)
+    seq_budget = args.prompt_len + int(max(max_new))
+    expected = reference_streams(cfg, params, pctx, mesh, prompts, max_new,
+                                 seq_budget=seq_budget, eos=args.eos)
+    rows = []
+    for mode in ("static", "continuous"):
+        if mode == "static":
+            outs, steps, dt, summary = run_static_workload(
+                cfg, params, pctx, mesh, prompts, max_new,
+                slots=args.slots, seq_budget=seq_budget, eos=args.eos)
+        else:
+            outs, steps, dt, summary = run_continuous_workload(
+                cfg, params, pctx, mesh, prompts, max_new, arrivals,
+                slots=args.slots, seq_budget=seq_budget, eos=args.eos)
+        tokens = sum(len(o) for o in outs)
+        row = {
+            "mode": mode, "requests": args.requests, "slots": args.slots,
+            "decode_steps": int(steps), "tokens": int(tokens),
+            "identical": outs == expected,
+            "wall_s": round(dt, 3),
+            "tok_s": round(tokens / dt, 1) if dt > 0 else 0.0,
+        }
+        if args.ep > 1:
+            row["ep"] = args.ep
+            row["dist_impl"] = args.dist_impl
+        if summary is not None:
+            row["slot_occupancy"] = summary["slot_occupancy"]
+            row["mean_wait_steps"] = summary["wait_steps"]["mean"]
+        rows.append(row)
+        print(f"{mode:11s} steps={steps:4d} tokens={tokens:4d} "
+              f"identical={row['identical']}", file=sys.stderr)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("out_path", nargs="?", default="BENCH_serving.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, few requests: JSON-validity CI "
+                         "run (see make serve-smoke / tests)")
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--full", action="store_true",
+                    help="serve the full-size arch (default: the "
+                         "CPU-scale cfg.reduced() shapes)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new-lo", type=int, default=4)
+    ap.add_argument("--max-new-hi", type=int, default=12)
+    ap.add_argument("--arrival-rate", type=float, default=0.7,
+                    help="Poisson arrivals per decode step (staggered "
+                         "admissions force mid-stream slot refills)")
+    ap.add_argument("--eos", type=int, default=-1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ep", type=int, default=1)
+    ap.add_argument("--dist-impl", default="pipelined")
+    args = ap.parse_args(argv)
+    args.reduced = not args.full    # build_serving_setup's knob
+    if args.smoke:
+        args.requests, args.slots = 6, 2
+        args.prompt_len, args.max_new_lo, args.max_new_hi = 8, 2, 6
+
+    rows = run_benchmark(args)
+    rec = {
+        "meta": {
+            "bench": "bench_serving",
+            "mode": "smoke" if args.smoke else "full",
+            "arch": args.arch, "reduced": args.reduced,
+            "arrival_rate": args.arrival_rate, "seed": args.seed,
+            "ep": args.ep,
+            "jax": jax.__version__,
+            "platform": jax.devices()[0].platform,
+            "devices": jax.device_count(),
+            "note": ("decode_steps are virtual-clock counts "
+                     "(deterministic); wall times are CPU-relative. "
+                     "'identical' = per-request greedy streams bitwise "
+                     "== the one-shot fixed-batch reference."),
+        },
+        "rows": rows,
+    }
+    with open(args.out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+        f.write("\n")
+    print(f"wrote {args.out_path}", file=sys.stderr)
+    return rec
+
+
+if __name__ == "__main__":
+    main()

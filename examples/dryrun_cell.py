@@ -4,10 +4,11 @@ the smallest end-to-end tour of the multi-pod machinery.
   python examples/dryrun_cell.py --arch mixtral-8x7b --shape train_4k
 """
 import os
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.bootstrap import force_host_devices
+force_host_devices(512)  # before anything imports jax
 
 import argparse
 import json

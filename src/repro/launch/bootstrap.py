@@ -1,0 +1,59 @@
+"""Pre-jax-init XLA host-device bootstrap, shared by every CLI that
+builds multi-device meshes out of host placeholder devices.
+
+XLA locks the host platform's device count at first jax init, so these
+helpers MUST run before the first ``import jax`` in the process — which
+is why this module imports nothing heavier than ``os``/``sys`` and why
+callers invoke it from inside their ``if __name__ == "__main__":``
+guard ahead of their jax-importing module body (plain library imports
+are unaffected). Used by ``repro.launch.serve``, ``repro.launch.dryrun``,
+``benchmarks/bench_latency.py``, ``benchmarks/bench_serving.py`` and
+``examples/dryrun_cell.py``.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Optional, Sequence
+
+HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int, override: bool = False) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS.
+
+    Appends rather than overwrites (exported debug/dump flags survive)
+    and by default defers to any count already present — an outer
+    driver, e.g. a test harness, wins. ``override=True`` replaces an
+    existing count instead: the dry-run's 512-chip production mesh is a
+    hard requirement, not a default. ``n <= 1`` is a no-op: a
+    single-device run never needs placeholders.
+    """
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if HOST_DEVICE_FLAG in flags:
+        if not override:
+            return
+        flags = re.sub(rf"{HOST_DEVICE_FLAG}=\S+", "", flags).strip()
+    os.environ["XLA_FLAGS"] = (flags + f" {HOST_DEVICE_FLAG}={n}").strip()
+
+
+def ep_from_argv(argv: Optional[Sequence[str]] = None) -> int:
+    """Best-effort pre-argparse read of ``--ep`` (both ``--ep N`` and
+    ``--ep=N`` forms); 0 on absent/malformed — argparse reports the
+    real error later."""
+    argv = sys.argv if argv is None else argv
+    for i, a in enumerate(argv):
+        val = None
+        if a == "--ep" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif a.startswith("--ep="):
+            val = a.split("=", 1)[1]
+        if val is not None:
+            try:
+                return int(val)
+            except ValueError:
+                return 0
+    return 0

@@ -1,8 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be the very first lines: jax locks the device count on first init.
-# The dry-run (and ONLY the dry-run) builds the 512-chip production mesh
-# out of host placeholder devices; smoke tests and benches see 1 device.
+
+from repro.launch.bootstrap import force_host_devices
+force_host_devices(512, override=True)
+# ^ MUST run before anything imports jax: XLA locks the device count on
+# first init. The dry-run (and ONLY the dry-run) builds the 512-chip
+# production mesh out of host placeholder devices (override: 512 is a
+# hard requirement of make_production_mesh, so an inherited smaller
+# count loses); smoke tests and benches see 1 device (they never
+# import this module).
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 

@@ -1,54 +1,38 @@
-"""Serving driver: batched prefill + decode loop with continuous-batching
-style slot management (requests join/leave the batch between steps).
+"""Serving CLI: a thin driver over the continuous-batching
+``repro.serving.ServingEngine`` (slot refill between decode steps,
+per-slot KV positions, one host sync per step).
 
-CPU-scale example:
+CPU-scale example — 8 requests trickling in at ~0.5 arrivals per decode
+step through 4 slots, stopping at token 7 or after 16 tokens:
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
-      --requests 8 --prompt-len 32 --max-new 16
+      --requests 8 --slots 4 --prompt-len 32 --max-new 16 \
+      --arrival-rate 0.5 --eos 7
 
-Expert-parallel decode (MoE archs): ``--ep P`` builds a (1, P) host mesh,
-keeps the expert weights EP-sharded (slot-major, the same layout the
-train cells use) and routes every decode token through
+Expert-parallel decode (MoE archs): ``--ep P`` builds a (1, P) host
+mesh, keeps the expert weights EP-sharded (slot-major, the same layout
+the train cells use) and routes every decode token through
 ``distributed_moe_decode`` — ``--dist-impl`` selects the exchange
 strategy (core/dispatch.EXCHANGE_IMPLS; unrunnable strategies downgrade
 with a logged reason):
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
       --reduced --ep 4 --dist-impl pipelined --requests 4 --max-new 8
+
+``--static`` runs the fixed-batch baseline (``serving.static``) on the
+same request set instead — the comparison ``benchmarks/bench_serving.py``
+automates.
 """
 from __future__ import annotations
 
-def _ep_from_argv(argv) -> int:
-    """Best-effort pre-argparse read of --ep (both '--ep N' and '--ep=N'
-    forms); 0 on absent/malformed — argparse reports the real error."""
-    for i, a in enumerate(argv):
-        val = None
-        if a == "--ep" and i + 1 < len(argv):
-            val = argv[i + 1]
-        elif a.startswith("--ep="):
-            val = a.split("=", 1)[1]
-        if val is not None:
-            try:
-                return int(val)
-            except ValueError:
-                return 0
-    return 0
-
-
 if __name__ == "__main__":
-    # --ep P needs P host placeholder devices; XLA locks the device count
-    # on first init, so this must run before the jax import below (plain
-    # library imports of this module are unaffected).
-    import os as _os
-    import sys as _sys
-    _ep = _ep_from_argv(_sys.argv)
-    _flags = _os.environ.get("XLA_FLAGS", "")
-    if _ep > 1 and "--xla_force_host_platform_device_count" not in _flags:
-        _os.environ["XLA_FLAGS"] = (
-            _flags
-            + f" --xla_force_host_platform_device_count={_ep}").strip()
+    # --ep P needs P host placeholder devices; XLA locks the device
+    # count on first init, so this must run before the jax import below
+    # (plain library imports of this module are unaffected).
+    from repro.launch.bootstrap import ep_from_argv, force_host_devices
+    force_host_devices(ep_from_argv())
 
 import argparse
-import time
 
 import numpy as np
 
@@ -60,78 +44,29 @@ from repro.configs.base import get_config
 from repro.core.moe import DIST_IMPLS
 from repro.launch.steps import make_pctx
 from repro.models.model import init_params
-from repro.models.serve import decode_step, init_cache, prefill
+# BatchedServer lives in repro.serving.static now; re-exported here for
+# the old import path.
+from repro.serving import (BatchedServer, ServingEngine,
+                           run_continuous_workload, run_static_workload,
+                           write_json)
+
+__all__ = ["BatchedServer", "ServingEngine", "main", "poisson_arrivals"]
 
 
-class BatchedServer:
-    """Minimal batched inference engine over the model zoo.
-
-    One fixed decode batch of ``slots``; finished sequences free their
-    slot for queued requests (continuous batching at step granularity).
-    ``mesh`` (optional) is entered around every step so the EP decode
-    path's shard_map sees it on ambient-mesh JAX versions.
-    """
-
-    def __init__(self, cfg, params, *, slots: int, seq_budget: int,
-                 pctx, dtype=jnp.float32, mesh=None):
-        self.cfg, self.params, self.pctx = cfg, params, pctx
-        self.slots = slots
-        self.seq_budget = seq_budget
-        self.dtype = dtype
-        self.mesh = mesh
-        self._prefill = jax.jit(
-            lambda p, b: prefill(cfg, p, b, seq_budget, pctx, dtype=dtype))
-        self._decode = jax.jit(
-            lambda p, c, t: decode_step(cfg, p, c, t, pctx),
-            donate_argnums=(1,))
-
-    def run(self, prompts: np.ndarray, max_new: int, eos: int = -1):
-        """prompts: (n, prompt_len) int32, n <= slots. Greedy decode."""
-        n, plen = prompts.shape
-        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
-        if self.cfg.enc_dec:
-            batch["frames"] = jnp.zeros(
-                (n, self.cfg.enc_seq, self.cfg.d_model), self.dtype)
-        steps = []                 # (token row, emitted mask) per step
-        done = np.zeros(n, bool)
-        with compat.with_mesh(self.mesh):
-            logits, cache = self._prefill(self.params, batch)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            for _ in range(max_new):
-                # ONE device->host sync per step: the loop used to call
-                # int(tok[i]) per sequence per step — n blocking
-                # transfers each — serializing the decode stream on
-                # host round-trips. Pull the vector once and keep the
-                # done/EOS bookkeeping in numpy.
-                tok_np = np.asarray(tok)
-                emit = ~done
-                steps.append((tok_np, emit))
-                if eos >= 0:
-                    done = done | (emit & (tok_np == eos))
-                if done.all():
-                    break
-                logits, cache = self._decode(self.params, cache, tok)
-                tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        return [[int(t[i]) for t, e in steps if e[i]] for i in range(n)]
+def poisson_arrivals(rng: np.random.Generator, n: int,
+                     rate: float) -> np.ndarray:
+    """Virtual-clock arrival steps for a Poisson process with ``rate``
+    mean arrivals per decode step (exponential inter-arrival gaps,
+    floored onto the step grid). rate <= 0: everything arrives at 0."""
+    if rate <= 0:
+        return np.zeros(n, np.int64)
+    gaps = rng.exponential(1.0 / rate, n)
+    return np.floor(np.cumsum(gaps)).astype(np.int64)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-7b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ep", type=int, default=1,
-                    help="EP world (model-axis size); >1 builds a (1, ep) "
-                         "host mesh and serves MoE layers expert-parallel")
-    ap.add_argument("--dist-impl", default="pipelined",
-                    choices=list(DIST_IMPLS),
-                    help="EP exchange strategy (unrunnable strategies "
-                         "downgrade with a logged reason)")
-    args = ap.parse_args(argv)
-
+def build_serving_setup(args):
+    """cfg/mesh/pctx/params shared by the engine and static paths (and
+    by benchmarks/bench_serving.py)."""
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -148,29 +83,82 @@ def main(argv=None):
                          dtype=jnp.float32, ep_world=args.ep)
     if mesh is not None:
         # decode serving keeps the EP (slot-major-sharded) expert layout —
-        # the same placement the train cells use — instead of the old
-        # F-sharded serve layout; when E < ep the (small) expert set is
-        # replicated so the fast path finds every expert resident (see
-        # launch/steps.build_cell).
+        # the same placement the train cells use; when E < ep the (small)
+        # expert set is replicated so the fast path finds every expert
+        # resident (see launch/steps.build_cell).
         from repro.distributed import sharding as shd
         rep_experts = (cfg.moe is not None
                        and cfg.moe.num_experts < args.ep)
         params = jax.device_put(
             params, shd.params_shardings(cfg, mesh, params, serve=False,
                                          replicate_experts=rep_experts))
-    server = BatchedServer(cfg, params, slots=args.requests,
-                           seq_budget=args.prompt_len + args.max_new,
-                           pctx=pctx, mesh=mesh)
+    return cfg, mesh, pctx, params
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots (0: one per request — no queueing)")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="stop token id (recorded, then the slot frees); "
+                         "-1 disables — then --max-new is the only stop")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals per decode step on the "
+                         "virtual clock (0: all requests arrive at once)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static", action="store_true",
+                    help="run the fixed-batch baseline instead of the "
+                         "continuous-batching engine")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the serving metrics summary JSON here")
+    ap.add_argument("--ep", type=int, default=1,
+                    help="EP world (model-axis size); >1 builds a (1, ep) "
+                         "host mesh and serves MoE layers expert-parallel")
+    ap.add_argument("--dist-impl", default="pipelined",
+                    choices=list(DIST_IMPLS),
+                    help="EP exchange strategy (unrunnable strategies "
+                         "downgrade with a logged reason)")
+    args = ap.parse_args(argv)
+
+    cfg, mesh, pctx, params = build_serving_setup(args)
+    slots = args.slots if args.slots > 0 else args.requests
+    seq_budget = args.prompt_len + args.max_new
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab,
                            (args.requests, args.prompt_len)).astype(np.int32)
-    t0 = time.time()
-    outs = server.run(prompts, args.max_new)
-    dt = time.time() - t0
+    arrivals = poisson_arrivals(rng, args.requests, args.arrival_rate)
+
+    max_new = np.full(args.requests, args.max_new, int)
+    if args.static:
+        outs, steps, dt, _ = run_static_workload(
+            cfg, params, pctx, mesh, prompts, max_new, slots=slots,
+            seq_budget=seq_budget, eos=args.eos)
+        summary = {"mode": "static", "decode_steps": steps,
+                   "tokens": sum(len(o) for o in outs),
+                   "wall_s": round(dt, 3)}
+    else:
+        outs, _, dt, stats = run_continuous_workload(
+            cfg, params, pctx, mesh, prompts, max_new, arrivals,
+            slots=slots, seq_budget=seq_budget, eos=args.eos)
+        summary = {"mode": "continuous", **stats}
     total = sum(len(o) for o in outs)
-    print(f"served {args.requests} requests, {total} tokens "
-          f"in {dt:.2f}s ({total/dt:.1f} tok/s)")
+    print(f"served {args.requests} requests ({summary['mode']}, "
+          f"{slots} slots), {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s), "
+          f"{summary['decode_steps']} decode steps")
+    if summary.get("slot_occupancy") is not None:
+        print(f"occupancy {summary['slot_occupancy']:.0%}, "
+              f"mean TTFT {summary['ttft_s']['mean'] * 1e3:.0f}ms, "
+              f"mean TPOT {summary['tpot_s']['mean'] * 1e3:.1f}ms")
     print("sample:", outs[0][:8])
+    if args.metrics_out:
+        write_json(args.metrics_out, summary)
+        print(f"wrote {args.metrics_out}")
     return outs
 
 

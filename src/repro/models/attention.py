@@ -213,8 +213,10 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      scale: Optional[float] = None) -> jax.Array:
     """Single-position attention vs a cache.
 
-    q: (B, nq, hd); caches: (B, Smax, nkv, hd); kv_len: scalar/int — number
-    of valid cache positions (the new token is at kv_len - 1).
+    q: (B, nq, hd); caches: (B, Smax, nkv, hd); kv_len: scalar — number
+    of valid cache positions (the new token is at kv_len - 1) — or a
+    (B,) vector of per-row lengths (continuous-batching slots decode at
+    independent positions).
     """
     B, nq, hd = q.shape
     Smax, nkv = k_cache.shape[1], k_cache.shape[2]
@@ -225,11 +227,12 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     qf = (q.astype(jnp.float32) * scale).reshape(B, nkv, g, hd)
     s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
     pos = jnp.arange(Smax)
-    mask = pos[None, :] < kv_len
+    kv2 = jnp.reshape(jnp.asarray(kv_len), (-1, 1))  # (B, 1) or (1, 1)
+    mask = pos[None, :] < kv2
     if not _is_static_zero(window):
-        mask &= (pos[None, :] > kv_len - 1 - window) \
+        mask &= (pos[None, :] > kv2 - 1 - window) \
             | (jnp.asarray(window) <= 0)
-    s = jnp.where(mask[None, None], s, NEG_INF)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, nq, dv)

@@ -92,9 +92,19 @@ def init_cache(cfg: ArchConfig, batch: int, seq_budget: int,
 
 
 # ------------------------------------------------------------- decode ----
+def _row_update(cache_row, update_row, start):
+    """One sequence's cache update: (C, ...) <- (1, ...) at ``start``.
+    vmapped over the batch so every slot writes at its OWN position —
+    the continuous-batching engine decodes slots that joined the batch
+    at different steps (per-slot ``pos``)."""
+    return jax.lax.dynamic_update_slice_in_dim(cache_row, update_row,
+                                               start, axis=0)
+
+
 def _attn_decode(cfg: ArchConfig, p_layer, h, cache_l, pos, is_global,
                  pctx: ParallelContext):
-    """h: (B, 1, H). Returns (attn_out (B,1,H), new cache slices)."""
+    """h: (B, 1, H); pos: (B,) per-row positions.
+    Returns (attn_out (B,1,H), new cache slices)."""
     B = h.shape[0]
     theta, window = _layer_theta_window(cfg, is_global)
     new = {}
@@ -104,7 +114,7 @@ def _attn_decode(cfg: ArchConfig, p_layer, h, cache_l, pos, is_global,
                        preferred_element_type=jnp.float32).astype(h.dtype)
         q = q.reshape(B, 1, cfg.n_heads, m.qk_nope + m.qk_rope)
         q_n, q_r = q[..., :m.qk_nope], q[..., m.qk_nope:]
-        pos_b = jnp.full((B, 1), pos)
+        pos_b = pos[:, None]
         q_r = apply_rope(q_r, pos_b, cfg.rope_theta)
         q = jnp.concatenate([q_n, q_r], axis=-1)[:, 0]
         ckv = jnp.einsum("bsh,hc->bsc", h, p_layer["attn"]["w_dkv"],
@@ -113,10 +123,8 @@ def _attn_decode(cfg: ArchConfig, p_layer, h, cache_l, pos, is_global,
         kr = jnp.einsum("bsh,hr->bsr", h, p_layer["attn"]["w_kr"],
                         preferred_element_type=jnp.float32).astype(h.dtype)
         kr = apply_rope(kr[:, :, None, :], pos_b, cfg.rope_theta)[:, :, 0]
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(
-            cache_l["ckv"], ckv, pos, axis=1)
-        kr_c = jax.lax.dynamic_update_slice_in_dim(
-            cache_l["kr"], kr, pos, axis=1)
+        ckv_c = jax.vmap(_row_update)(cache_l["ckv"], ckv, pos)
+        kr_c = jax.vmap(_row_update)(cache_l["kr"], kr, pos)
         new["ckv"], new["kr"] = ckv_c, kr_c
         from repro.models.attention import mla_expand_kv
         k, v = mla_expand_kv(p_layer["attn"], ckv_c, kr_c, cfg.n_heads,
@@ -125,7 +133,7 @@ def _attn_decode(cfg: ArchConfig, p_layer, h, cache_l, pos, is_global,
                              scale=(m.qk_nope + m.qk_rope) ** -0.5)
         o = o.reshape(B, 1, cfg.n_heads * m.v_head).astype(h.dtype)
     else:
-        pos_b = jnp.full((B, 1), pos)
+        pos_b = pos[:, None]
         q, k, v = _project_qkv(p_layer["attn"], h, cfg.n_heads,
                                cfg.n_kv_heads, cfg.head_dim_,
                                qk_norm=cfg.qk_norm, use_rope=False)
@@ -134,10 +142,8 @@ def _attn_decode(cfg: ArchConfig, p_layer, h, cache_l, pos, is_global,
             k = rope_any(k, pos_b, theta)
         C = cache_l["k"].shape[1]
         slot = pos % C  # ring buffer when C < seq budget (uniform SWA)
-        k_c = jax.lax.dynamic_update_slice_in_dim(
-            cache_l["k"], k, slot, axis=1)
-        v_c = jax.lax.dynamic_update_slice_in_dim(
-            cache_l["v"], v, slot, axis=1)
+        k_c = jax.vmap(_row_update)(cache_l["k"], k, slot)
+        v_c = jax.vmap(_row_update)(cache_l["v"], v, slot)
         new["k"], new["v"] = k_c, v_c
         kv_len = jnp.minimum(pos + 1, C)
         win = jnp.where(jnp.asarray(C) == cfg.window, 0, window)
@@ -196,12 +202,20 @@ def _block_decode(cfg: ArchConfig, p_layer, x, cache_l, pos, is_global,
 
 def decode_step(cfg: ArchConfig, params, cache, tokens: jax.Array,
                 pctx: ParallelContext = LOCAL):
-    """One token for every sequence. tokens: (B,). Returns (logits, cache)."""
-    pos = cache["pos"]
+    """One token for every sequence. tokens: (B,). Returns (logits, cache).
+
+    ``cache["pos"]`` is either a scalar (every sequence at the same
+    position — what ``prefill`` returns) or a (B,) vector of PER-SLOT
+    positions (the continuous-batching engine: slots admitted at
+    different steps decode together). The scalar form is broadcast, so
+    both run the identical vectorized program.
+    """
+    B = tokens.shape[0]
+    stored = cache["pos"]
+    pos = jnp.broadcast_to(jnp.reshape(stored, (-1,)), (B,))
     x = params["embed"][tokens][:, None, :]  # (B, 1, H)
     if cfg.pos_emb == "sinusoidal":
-        x = x + sinusoidal_pos(jnp.full((1,), pos), cfg.d_model)[None].astype(
-            x.dtype)
+        x = x + sinusoidal_pos(pos, cfg.d_model)[:, None].astype(x.dtype)
 
     new_front = []
     for p_layer, c_l in zip(params.get("front", []), cache["front"]):
@@ -233,7 +247,7 @@ def decode_step(cfg: ArchConfig, params, cache, tokens: jax.Array,
     new_cache = dict(cache)
     new_cache["layers"] = new_layers
     new_cache["front"] = new_front
-    new_cache["pos"] = pos + 1
+    new_cache["pos"] = stored + 1          # keeps the stored shape
     return logits, new_cache
 
 

@@ -1,0 +1,23 @@
+"""Continuous-batching serving subsystem.
+
+Dataflow: requests → ``FCFSScheduler`` (admission queue) →
+``SlotKVManager`` (one fixed (slots, seq_budget) cache, per-slot
+positions, jitted prefill splicing) → ``ServingEngine`` step loop
+(batched ``decode_step`` over the slot set, EP-mesh aware) →
+``ServingMetrics`` (TTFT / TPOT / occupancy, JSON export).
+``serving.static.BatchedServer`` is the fixed-batch baseline and
+bitwise reference.
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import ServingMetrics, write_json
+from repro.serving.requests import Request, RequestState
+from repro.serving.runners import (run_continuous_workload,
+                                   run_static_workload)
+from repro.serving.scheduler import FCFSScheduler
+from repro.serving.slots import SlotKVManager
+from repro.serving.static import BatchedServer
+
+__all__ = ["ServingEngine", "ServingMetrics", "write_json", "Request",
+           "RequestState", "FCFSScheduler", "SlotKVManager",
+           "BatchedServer", "run_static_workload",
+           "run_continuous_workload"]

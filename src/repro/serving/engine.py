@@ -1,0 +1,183 @@
+"""ServingEngine: continuous batching over the EP decode path.
+
+The step loop FlashMoE's host side wants — no idle slots, no retraces,
+one host sync:
+
+  1. **Admissions** — while a slot is free and the FCFS head has
+     arrived, prefill that request alone (batch 1) and splice its cache
+     into the freed slot (``SlotKVManager.insert_prefill``: jitted,
+     donated, traces once). The prefill's argmax IS the request's first
+     token (TTFT stops here).
+  2. **Decode** — ONE batched ``decode_step`` over the whole fixed slot
+     set. Occupied slots advance their request; free slots carry
+     garbage rows that cost a row of compute but keep the batch shape
+     constant, so the decode executable never retraces across the whole
+     serving run. Per-row decode math is independent of batch
+     composition (row-independence), which is why a request's greedy
+     stream is bitwise-identical to the fixed-batch
+     ``serving.static.BatchedServer`` reference.
+  3. **Bookkeeping** — one device→host sync per step (the PR-4 rule):
+     pull the argmax token vector once, then EOS / max_new / refill
+     decisions are all host-side numpy.
+
+EP-mesh aware: ``mesh`` is entered around every device call
+(``compat.with_mesh``) so the decode step's MoE layers route through
+``distributed_moe_decode`` exactly as the fixed-batch server does.
+
+Time is a virtual clock in decode-step units (deterministic: tests and
+benches compare step counts, not wall times); wall timestamps ride
+along for TTFT/throughput metrics.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.models.serve import decode_step, prefill
+from repro.serving.metrics import ServingMetrics
+from repro.serving.requests import RUNNING, Request, RequestState
+from repro.serving.scheduler import FCFSScheduler
+from repro.serving.slots import SlotKVManager
+
+
+class ServingEngine:
+    """Continuous-batching inference engine over the model zoo."""
+
+    def __init__(self, cfg, params, *, slots: int, seq_budget: int,
+                 pctx, dtype=jnp.float32, mesh=None, eos: int = -1):
+        self.cfg, self.params, self.pctx = cfg, params, pctx
+        self.dtype = dtype
+        self.mesh = mesh
+        self.default_eos = eos
+        self.scheduler = FCFSScheduler(seq_budget)
+        self.kv = SlotKVManager(cfg, slots, seq_budget, dtype)
+        self.metrics = ServingMetrics(slots)
+        self.clock = 0                         # virtual time, decode steps
+        self._next_rid = 0
+        self._last_tok = np.zeros((slots,), np.int32)
+        self._prefill = jax.jit(
+            lambda p, b: prefill(cfg, p, b, seq_budget, pctx, dtype=dtype))
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(cfg, p, c, t, pctx),
+            donate_argnums=(1,))
+        self._warn_if_capacity_can_drop(slots)
+
+    def _warn_if_capacity_can_drop(self, slots: int) -> None:
+        """The bitwise contract needs drop-free routing. The local
+        gather path never drops; the EP exchange path drops rows past
+        the decode plan's per-expert capacity — and free slots' garbage
+        rows contend for it too. Warn when the worst case (every row
+        picking the same expert) exceeds capacity; the E < P replicated
+        fast path has no exchange and is exempt."""
+        pctx, moe = self.pctx, self.cfg.moe
+        if (moe is None or not getattr(pctx, "use_ep", False)
+                or pctx.mesh is None or moe.num_experts < pctx.ep_world):
+            return
+        from repro.core.dispatch import SlotInfo
+        from repro.core.exchange import DECODE_TILE_M, slot_capacity
+        from repro.core.gate import GateConfig
+        gc = GateConfig(num_experts=moe.num_experts, top_k=moe.top_k,
+                        capacity_factor=moe.capacity_factor)
+        info = SlotInfo.make(moe.num_experts, pctx.ep_world)
+        cap = slot_capacity(gc, slots, info.slots, tile_m=DECODE_TILE_M)
+        if cap < slots:
+            warnings.warn(
+                f"EP decode capacity {cap} rows/expert < {slots} slots: "
+                "a hot expert can drop tokens (and free-slot garbage "
+                "rows contend for capacity), voiding the bitwise "
+                "fixed-batch equivalence — raise capacity_factor "
+                f"(now {moe.capacity_factor}) or use fewer slots",
+                stacklevel=3)
+
+    # ------------------------------------------------------ submission --
+    def submit(self, prompt, max_new: int, *, arrival: int = 0,
+               eos: Optional[int] = None, rid: Optional[int] = None
+               ) -> RequestState:
+        """Enqueue one request (EOS defaults to the engine-wide value;
+        per-request overrides win)."""
+        rid = self._next_rid if rid is None else rid
+        if any(s.rid == rid for s in self.scheduler.states):
+            raise ValueError(f"duplicate request id {rid}")
+        self._next_rid = max(self._next_rid, rid) + 1
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
+                      arrival=arrival,
+                      eos=self.default_eos if eos is None else eos)
+        return self.scheduler.submit(req, t_submit=time.perf_counter())
+
+    # ------------------------------------------------------- admission --
+    def _admit_one(self, st: RequestState) -> None:
+        slot = self.kv.alloc(st)
+        st.slot, st.status, st.admit_step = slot, RUNNING, self.clock
+        batch = {"tokens": jnp.asarray(st.request.prompt[None, :],
+                                       jnp.int32)}
+        if self.cfg.enc_dec:
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.enc_seq, self.cfg.d_model), self.dtype)
+        logits, pcache = self._prefill(self.params, batch)
+        self.kv.insert_prefill(slot, pcache)
+        # the prefill's argmax is the request's FIRST generated token
+        tok0 = int(np.asarray(jnp.argmax(logits[0], -1)))
+        if st.record(tok0, step=self.clock, now=time.perf_counter()):
+            self.kv.release(slot)              # max_new=1 or instant EOS
+        else:
+            self._last_tok[slot] = tok0
+
+    def _admit(self) -> int:
+        n = 0
+        while self.kv.free_slots:
+            st = self.scheduler.admit(self.clock)
+            if st is None:
+                break
+            self._admit_one(st)
+            n += 1
+        return n
+
+    # ------------------------------------------------------- step loop --
+    def step(self) -> bool:
+        """Admissions + one batched decode across the slot set.
+        Returns True while the engine still has (or awaits) work."""
+        with compat.with_mesh(self.mesh):
+            self._admit()
+            if not self.kv.owner:
+                nxt = self.scheduler.next_arrival()
+                if nxt is None:
+                    return False               # drained
+                # idle: fast-forward the virtual clock to the next
+                # arrival instead of ticking empty decode steps
+                skip = max(1, nxt - self.clock)
+                self.clock += skip
+                self.metrics.record_idle(skip)
+                return True
+            tok = jnp.asarray(self._last_tok)
+            logits, self.kv.cache = self._decode(self.params,
+                                                 self.kv.cache, tok)
+            tok_new = jnp.argmax(logits, -1).astype(jnp.int32)
+        tok_np = np.asarray(tok_new)           # THE one device→host sync
+        self.metrics.record_decode_step(self.kv.occupancy)
+        self.clock += 1
+        now = time.perf_counter()
+        self._last_tok = np.array(tok_np)
+        for slot, st in list(self.kv.owner.items()):
+            if st.record(int(tok_np[slot]), step=self.clock, now=now):
+                self.kv.release(slot)          # refilled next _admit()
+        return bool(self.kv.owner or self.scheduler.pending)
+
+    def run(self) -> List[RequestState]:
+        """Drive the step loop until every submitted request finishes;
+        returns all RequestStates in submission order."""
+        while self.step():
+            pass
+        return self.scheduler.states
+
+    # -------------------------------------------------------- results ---
+    @property
+    def outputs(self) -> Dict[int, List[int]]:
+        """rid -> greedy token stream, for every submitted request."""
+        return {s.rid: list(s.tokens) for s in self.scheduler.states}

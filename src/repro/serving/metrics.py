@@ -1,0 +1,85 @@
+"""Serving metrics: TTFT, time-per-output-token, throughput, occupancy.
+
+Two clocks, deliberately: the *virtual* clock (decode-step index) gives
+deterministic, machine-independent numbers — queue wait, steps to first
+token, total decode steps — and is what benchmarks and tests compare.
+The *wall* clock gives tok/s and latency seconds for humans. Every
+summary is a plain-JSON-serializable dict (``write_json`` exports it).
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Dict, List, Optional
+
+
+def _pct(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile of an already-sorted list: the smallest
+    value with at least q of the mass at or below it (ceil(q*n) - 1),
+    so p95 of 20 samples is the 19th value, not the max."""
+    if not sorted_vals:
+        return 0.0
+    n = len(sorted_vals)
+    i = min(n - 1, max(0, math.ceil(q * n) - 1))
+    return float(sorted_vals[i])
+
+
+class ServingMetrics:
+    """Per-step occupancy trace + aggregation over finished requests."""
+
+    def __init__(self, slots: int):
+        self.slots = slots
+        self.decode_steps = 0
+        self.idle_steps = 0
+        self._occ: List[int] = []           # occupied slots per decode step
+
+    def record_decode_step(self, occupied: int) -> None:
+        self.decode_steps += 1
+        self._occ.append(occupied)
+
+    def record_idle(self, steps: int = 1) -> None:
+        self.idle_steps += steps
+
+    def summary(self, states, *, wall_s: Optional[float] = None
+                ) -> Dict[str, Any]:
+        """Aggregate over RequestStates (finished or not) + the step
+        trace. TTFT per request = first-token wall time minus submit
+        wall time; steps-to-first-token = admit step minus arrival."""
+        done = [s for s in states if s.t_finish is not None]
+        ttft = sorted((s.t_first - s.t_submit) for s in done
+                      if s.t_first is not None)
+        wait_steps = sorted(float(s.admit_step - s.request.arrival)
+                            for s in done if s.admit_step >= 0)
+        tpot = sorted(
+            (s.t_finish - s.t_first) / (len(s.tokens) - 1)
+            for s in done if len(s.tokens) > 1)
+        n_tokens = sum(len(s.tokens) for s in states)
+        occ = sum(self._occ) / (self.slots * len(self._occ)) \
+            if self._occ else 0.0
+        rec: Dict[str, Any] = {
+            "requests": len(states),
+            "finished": len(done),
+            "tokens": n_tokens,
+            "decode_steps": self.decode_steps,
+            "idle_steps": self.idle_steps,
+            "slot_occupancy": round(occ, 4),
+            "ttft_s": {"mean": _mean(ttft), "p50": _pct(ttft, 0.50),
+                       "p95": _pct(ttft, 0.95)},
+            "wait_steps": {"mean": _mean(wait_steps),
+                           "p95": _pct(wait_steps, 0.95)},
+            "tpot_s": {"mean": _mean(tpot), "p50": _pct(tpot, 0.50)},
+        }
+        if wall_s is not None:
+            rec["wall_s"] = round(wall_s, 3)
+            rec["tok_s"] = round(n_tokens / wall_s, 1) if wall_s > 0 else 0.0
+        return rec
+
+
+def _mean(vals: List[float]) -> float:
+    return float(sum(vals) / len(vals)) if vals else 0.0
+
+
+def write_json(path: str, record: Dict[str, Any]) -> None:
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")

@@ -1,0 +1,88 @@
+"""Request objects for the continuous-batching serving engine.
+
+A ``Request`` is what a client submits: a prompt, a generation budget
+and an arrival time on the engine's virtual clock (decode-step units —
+deterministic, so serving runs are reproducible and testable bitwise).
+``RequestState`` is the engine's bookkeeping around it: queue → slot →
+emitted tokens → completion, plus the wall-clock timestamps the metrics
+layer aggregates (TTFT, time-per-output-token).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    ``arrival`` is in virtual-clock units (engine decode steps): the
+    scheduler may not admit the request before ``step >= arrival``.
+    ``eos`` < 0 disables the EOS stop (then ``max_new`` is the only stop
+    condition); the engine records the EOS token itself before stopping,
+    mirroring the fixed-batch reference semantics.
+    """
+    rid: int
+    prompt: np.ndarray          # (plen,) int32 token ids
+    max_new: int
+    arrival: int = 0
+    eos: int = -1
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt",
+                           np.asarray(self.prompt, np.int32).reshape(-1))
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+        if self.prompt.size < 1:
+            raise ValueError("empty prompt")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+    @property
+    def seq_need(self) -> int:
+        """Cache positions this request needs: prompt + generated."""
+        return self.prompt_len + self.max_new
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Engine-side lifecycle of one request."""
+    request: Request
+    status: str = QUEUED
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    # virtual clock (engine step index)
+    admit_step: int = -1
+    finish_step: int = -1
+    # wall clock (time.perf_counter seconds)
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    def record(self, tok: int, *, step: int, now: float) -> bool:
+        """Append one greedy token; returns True when the request is
+        finished (EOS emitted or max_new reached)."""
+        self.tokens.append(int(tok))
+        if self.t_first is None:
+            self.t_first = now
+        eos = self.request.eos
+        done = (len(self.tokens) >= self.request.max_new
+                or (eos >= 0 and int(tok) == eos))
+        if done:
+            self.status = DONE
+            self.finish_step = step
+            self.t_finish = now
+        return done

@@ -1,0 +1,59 @@
+"""Workload runners shared by the serve CLI and bench_serving: serve
+one (prompts, per-request budgets, arrivals) request set through either
+policy and return (streams, decode_steps, wall_s, summary) — so the CLI
+and the benchmark can never drift apart on admission order or step
+accounting.
+
+Streams come back truncated to each request's own ``max_new`` (the
+greedy chain depends only on the request's own prefix, so truncation
+commutes with decoding) in submission order.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.serving.engine import ServingEngine
+from repro.serving.static import BatchedServer
+
+
+def run_static_workload(cfg, params, pctx, mesh, prompts, max_new, *,
+                        slots: int, seq_budget: int, eos: int = -1
+                        ) -> Tuple[list, int, float, Optional[dict]]:
+    """Fixed batches of ``slots`` requests in FCFS order, each decoded
+    to completion at the MAX budget of its members (arrival waits are
+    not charged — pure decode steps, which favors this baseline)."""
+    max_new = np.asarray(max_new, int)
+    server = BatchedServer(cfg, params, slots=slots,
+                           seq_budget=seq_budget, pctx=pctx, mesh=mesh)
+    outs, steps = [], 0
+    t0 = time.perf_counter()
+    for i in range(0, len(prompts), slots):
+        hi = int(max(max_new[i:i + slots]))
+        batch = server.run(prompts[i:i + slots], hi, eos=eos)
+        outs += [batch[j][:int(max_new[i + j])] for j in range(len(batch))]
+        steps += server.steps_used
+    return outs, steps, time.perf_counter() - t0, None
+
+
+def run_continuous_workload(cfg, params, pctx, mesh, prompts, max_new,
+                            arrivals, *, slots: int, seq_budget: int,
+                            eos: int = -1
+                            ) -> Tuple[list, int, float, dict]:
+    """The continuous-batching engine over the same request set; the
+    returned summary is ``ServingMetrics.summary`` (wall_s included)."""
+    max_new = np.asarray(max_new, int)
+    engine = ServingEngine(cfg, params, slots=slots,
+                           seq_budget=seq_budget, pctx=pctx, mesh=mesh,
+                           eos=eos)
+    t0 = time.perf_counter()
+    for i in range(len(prompts)):
+        engine.submit(prompts[i], int(max_new[i]),
+                      arrival=int(arrivals[i]))
+    states = engine.run()
+    dt = time.perf_counter() - t0
+    outs = [engine.outputs[s.rid] for s in states]
+    return outs, engine.metrics.decode_steps, dt, \
+        engine.metrics.summary(states, wall_s=dt)

@@ -1,0 +1,61 @@
+"""FCFS admission queue + slot-refill policy.
+
+The scheduler owns the waiting line only; slots are the
+``SlotKVManager``'s business. Between decode steps the engine asks
+``admit(now)`` once per free slot: requests are admitted strictly in
+submission (FCFS) order, gated on their virtual arrival time — a later
+request never jumps an earlier one even if the earlier one has not
+"arrived" yet, which keeps admission order deterministic under any slot
+count (the property the bitwise serving tests rely on).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.serving.requests import QUEUED, Request, RequestState
+
+
+class FCFSScheduler:
+    """First-come-first-served queue bounded by the cache's seq budget."""
+
+    def __init__(self, seq_budget: int):
+        self.seq_budget = seq_budget
+        self._queue: Deque[RequestState] = deque()
+        self._all: List[RequestState] = []
+
+    def submit(self, req: Request, *, t_submit: float = 0.0) -> RequestState:
+        """Validate + enqueue. A request that can never fit the fixed
+        (slots, seq_budget) cache is rejected up front, not wedged at
+        the head of the queue forever."""
+        if req.seq_need > self.seq_budget:
+            raise ValueError(
+                f"request {req.rid}: prompt_len + max_new = {req.seq_need} "
+                f"exceeds seq_budget {self.seq_budget}")
+        st = RequestState(request=req, status=QUEUED, t_submit=t_submit)
+        self._queue.append(st)
+        self._all.append(st)
+        return st
+
+    def admit(self, now: int) -> Optional[RequestState]:
+        """Pop the head request if it has arrived by virtual time
+        ``now``; None when the queue is empty or the head is still in
+        the future (strict FCFS: no lookahead past the head)."""
+        if self._queue and self._queue[0].request.arrival <= now:
+            return self._queue.popleft()
+        return None
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def next_arrival(self) -> Optional[int]:
+        """Virtual arrival time of the head request (None if empty) —
+        lets an idle engine fast-forward its clock instead of ticking
+        one empty step at a time."""
+        return self._queue[0].request.arrival if self._queue else None
+
+    @property
+    def states(self) -> List[RequestState]:
+        """Every state ever submitted, in submission order."""
+        return list(self._all)

@@ -1,0 +1,91 @@
+"""Per-slot KV management over ONE fixed (slots, seq_budget) cache.
+
+The engine never reshapes or reallocates its decode cache: it is built
+once by ``models/serve.init_cache`` with batch = ``slots`` and lives on
+device for the engine's whole life, with ``cache["pos"]`` widened to a
+(slots,) vector — each slot decodes at its own position (the form
+``decode_step`` broadcasts scalars into anyway, so the math is the
+one program either way).
+
+Admissions are a jitted, buffer-donated surgery: ``insert_prefill``
+writes a freshly prefilled batch-1 cache into one slot of the big cache
+with ``dynamic_update_slice`` per leaf. Because every prefill cache has
+the same (1, C, ...) leaf shapes regardless of prompt length (prefill
+pads to the budget), the insert traces exactly ONCE — and because the
+big cache's shape never changes, the decode step never retraces on
+admission. That is the property that makes slot refill free.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.serve import init_cache
+
+
+def _insert(big, slot, small):
+    """big: (slots, seq_budget) cache; small: batch-1 prefill cache.
+    Leaf layout (models/serve.init_cache): ``layers`` and ``cross_*``
+    stack scanned layers in front of the batch dim (axis 1); ``front``
+    per-layer dicts carry batch at axis 0; ``pos`` is the per-slot
+    position vector here."""
+    out: Dict[str, Any] = dict(big)
+    out["pos"] = big["pos"].at[slot].set(small["pos"].astype(jnp.int32))
+    out["layers"] = jax.tree.map(
+        lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+            b, s.astype(b.dtype), slot, axis=1),
+        big["layers"], small["layers"])
+    out["front"] = [
+        jax.tree.map(lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+            b, s.astype(b.dtype), slot, axis=0), bf, sf)
+        for bf, sf in zip(big["front"], small["front"])]
+    for key in ("cross_k", "cross_v"):
+        if key in big:
+            out[key] = jax.lax.dynamic_update_slice_in_dim(
+                big[key], small[key].astype(big[key].dtype), slot, axis=1)
+    return out
+
+
+class SlotKVManager:
+    """Owns the engine's fixed-shape decode cache + slot free list."""
+
+    def __init__(self, cfg, slots: int, seq_budget: int,
+                 dtype=jnp.float32):
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.cfg = cfg
+        self.slots = slots
+        self.seq_budget = seq_budget
+        cache = init_cache(cfg, slots, seq_budget, dtype)
+        # scalar -> per-slot positions (decode_step handles both forms)
+        cache["pos"] = jnp.zeros((slots,), jnp.int32)
+        self.cache = cache
+        self._free: List[int] = list(range(slots - 1, -1, -1))
+        self.owner: Dict[int, Any] = {}       # slot -> RequestState
+        # donate the big cache: admission updates it in place on device
+        self._insert = jax.jit(_insert, donate_argnums=(0,))
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> int:
+        return self.slots - len(self._free)
+
+    def alloc(self, state) -> int:
+        slot = self._free.pop()
+        self.owner[slot] = state
+        return slot
+
+    def release(self, slot: int) -> None:
+        del self.owner[slot]
+        self._free.append(slot)
+
+    def insert_prefill(self, slot: int, prefill_cache) -> None:
+        """Write one prefilled sequence into ``slot`` (jitted, big cache
+        donated — no host round-trip, no decode retrace)."""
+        self.cache = self._insert(self.cache, jnp.int32(slot),
+                                  prefill_cache)

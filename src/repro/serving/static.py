@@ -1,0 +1,74 @@
+"""The static-batch server: one fixed batch, decoded to completion.
+
+This is the baseline continuous batching is measured against, AND the
+numerical reference the engine must match bitwise: per-row decode math
+is independent of batch composition, so a request's greedy token stream
+is identical whether it rides a fixed batch here or a refilled slot in
+``ServingEngine``. (It is the pre-engine ``launch/serve.BatchedServer``,
+moved into the serving subsystem; the CLI re-exports it.)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.models.serve import decode_step, prefill
+
+
+class BatchedServer:
+    """Minimal fixed-batch inference engine over the model zoo.
+
+    One prefill of all ``n <= slots`` prompts together, then one decode
+    batch run to completion — freed rows sit idle (the gap the
+    continuous-batching ``ServingEngine`` closes). ``mesh`` (optional)
+    is entered around every step so the EP decode path's shard_map sees
+    it on ambient-mesh JAX versions.
+    """
+
+    def __init__(self, cfg, params, *, slots: int, seq_budget: int,
+                 pctx, dtype=jnp.float32, mesh=None):
+        self.cfg, self.params, self.pctx = cfg, params, pctx
+        self.slots = slots
+        self.seq_budget = seq_budget
+        self.dtype = dtype
+        self.mesh = mesh
+        self.steps_used = 0            # decode steps of the last run()
+        self._prefill = jax.jit(
+            lambda p, b: prefill(cfg, p, b, seq_budget, pctx, dtype=dtype))
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(cfg, p, c, t, pctx),
+            donate_argnums=(1,))
+
+    def run(self, prompts: np.ndarray, max_new: int, eos: int = -1):
+        """prompts: (n, prompt_len) int32, n <= slots. Greedy decode."""
+        n, plen = prompts.shape
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if self.cfg.enc_dec:
+            batch["frames"] = jnp.zeros(
+                (n, self.cfg.enc_seq, self.cfg.d_model), self.dtype)
+        steps = []                 # (token row, emitted mask) per step
+        done = np.zeros(n, bool)
+        self.steps_used = 0
+        with compat.with_mesh(self.mesh):
+            logits, cache = self._prefill(self.params, batch)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            for i in range(max_new):
+                # ONE device->host sync per step: pull the token vector
+                # once and keep the done/EOS bookkeeping in numpy.
+                tok_np = np.asarray(tok)
+                emit = ~done
+                steps.append((tok_np, emit))
+                if eos >= 0:
+                    done = done | (emit & (tok_np == eos))
+                if done.all() or i == max_new - 1:
+                    # the prefill supplies token 1, so max_new tokens
+                    # need max_new - 1 decodes: a decode here would
+                    # produce a token nobody emits
+                    break
+                logits, cache = self._decode(self.params, cache, tok)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                self.steps_used += 1
+        return [[int(t[i]) for t, e in steps if e[i]] for i in range(n)]

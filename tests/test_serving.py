@@ -1,0 +1,342 @@
+"""The continuous-batching serving subsystem (src/repro/serving/):
+
+  * scheduler: strict FCFS with arrival gating + seq-budget validation
+    (pure host logic, smoke);
+  * slot manager: one fixed cache, per-slot positions, jitted prefill
+    splicing (smoke);
+  * metrics: summary shape + JSON round-trip (smoke);
+  * THE contract: continuous-batching output is per-request
+    bitwise-identical to a one-shot fixed-batch ``BatchedServer``
+    reference, with staggered arrivals that force mid-stream slot
+    refills — locally, and at world 4 on an EP mesh for dist_impl in
+    {bulk, pipelined, rdma} (subprocess, like every multi-device test);
+  * the serve CLI threads --eos through (the old dead-EOS bug);
+  * bench_serving --smoke emits valid JSON rows for both modes, with
+    the continuous row finishing in fewer decode steps.
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import _ROOT, run_sub
+
+
+# ----------------------------------------------------------- host logic --
+@pytest.mark.smoke
+def test_scheduler_fcfs_arrival_gating_and_budget():
+    from repro.serving import FCFSScheduler, Request
+
+    s = FCFSScheduler(seq_budget=16)
+    with pytest.raises(ValueError):   # 10 + 7 > 16: can never fit
+        s.submit(Request(rid=0, prompt=np.zeros(10, np.int32), max_new=7))
+    a = s.submit(Request(rid=1, prompt=np.zeros(8, np.int32), max_new=4,
+                         arrival=2))
+    b = s.submit(Request(rid=2, prompt=np.zeros(4, np.int32), max_new=4,
+                         arrival=0))
+    assert s.pending == 2
+    # strict FCFS: b arrived first on the clock but a is the queue head
+    assert s.admit(0) is None and s.next_arrival() == 2
+    assert s.admit(2) is a
+    assert s.admit(2) is b
+    assert s.admit(2) is None and s.pending == 0
+    assert s.states == [a, b]
+
+
+@pytest.mark.smoke
+def test_request_record_eos_and_budget_stops():
+    from repro.serving import Request, RequestState
+
+    r = Request(rid=0, prompt=np.zeros(4, np.int32), max_new=3, eos=9)
+    st = RequestState(request=r)
+    assert not st.record(5, step=0, now=0.0)
+    assert st.record(9, step=1, now=0.1)          # EOS recorded, then stop
+    assert st.tokens == [5, 9] and st.finish_step == 1
+    st2 = RequestState(request=r)
+    for i, tok in enumerate((1, 2, 3)):           # max_new stop
+        done = st2.record(tok, step=i, now=0.0)
+    assert done and st2.tokens == [1, 2, 3]
+    with pytest.raises(ValueError):
+        Request(rid=1, prompt=np.zeros(4, np.int32), max_new=0)
+
+
+@pytest.mark.smoke
+def test_engine_rejects_duplicate_rid():
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.serving import ServingEngine
+
+    cfg = get_config("qwen2-7b").reduced()
+    pctx = make_pctx(cfg, None, train=False)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    eng = ServingEngine(cfg, params, slots=1, seq_budget=8, pctx=pctx)
+    eng.submit(np.zeros(4, np.int32), 2, rid=7)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(4, np.int32), 2, rid=7)
+    assert eng.submit(np.zeros(4, np.int32), 2).rid == 8
+
+
+@pytest.mark.smoke
+def test_metrics_summary_json_roundtrip():
+    from repro.serving import Request, RequestState, ServingMetrics
+
+    m = ServingMetrics(slots=2)
+    m.record_decode_step(2)
+    m.record_decode_step(1)
+    m.record_idle(3)
+    st = RequestState(request=Request(rid=0, prompt=np.zeros(2, np.int32),
+                                      max_new=2, arrival=1))
+    st.admit_step = 2
+    st.t_submit = 0.0
+    st.record(4, step=2, now=0.5)
+    st.record(5, step=3, now=0.6)
+    rec = m.summary([st], wall_s=1.0)
+    assert rec["decode_steps"] == 2 and rec["idle_steps"] == 3
+    assert rec["slot_occupancy"] == pytest.approx(0.75)
+    assert rec["finished"] == 1 and rec["tokens"] == 2
+    assert rec["wait_steps"]["mean"] == 1.0       # admitted 1 step late
+    assert rec["ttft_s"]["mean"] == pytest.approx(0.5)
+    json.loads(json.dumps(rec))                   # JSON-serializable
+    from repro.serving.metrics import _pct
+    vals = [float(i) for i in range(1, 21)]       # 1..20, sorted
+    assert _pct(vals, 0.95) == 19.0               # nearest-rank, not max
+    assert _pct(vals, 0.50) == 10.0
+
+
+@pytest.mark.smoke
+def test_slot_manager_insert_and_per_slot_pos():
+    """insert_prefill splices a batch-1 prefill cache into one slot of
+    the big cache (every leaf row + its pos entry) without touching the
+    other slots."""
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.models.serve import prefill
+    from repro.serving import SlotKVManager
+
+    cfg = get_config("qwen2-7b").reduced()
+    pctx = make_pctx(cfg, None, train=False)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    kv = SlotKVManager(cfg, slots=3, seq_budget=12, dtype=jnp.float32)
+    assert kv.cache["pos"].shape == (3,) and kv.free_slots == 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    _, pc = jax.jit(lambda p, b: prefill(cfg, p, b, 12, pctx,
+                                         dtype=jnp.float32))(
+        params, {"tokens": toks})
+    before = jax.tree.map(np.asarray, kv.cache["layers"])
+    kv.insert_prefill(1, pc)
+    assert np.asarray(kv.cache["pos"]).tolist() == [0, 8, 0]
+    for key, leaf in kv.cache["layers"].items():
+        got, small = np.asarray(leaf), np.asarray(pc["layers"][key])
+        np.testing.assert_array_equal(got[:, 1], small[:, 0])
+        np.testing.assert_array_equal(got[:, 0], np.asarray(before[key])[:, 0])
+    st = object()
+    assert kv.alloc(st) == 0 and kv.occupancy == 1
+    kv.release(0)
+    assert kv.free_slots == 3 and kv.owner == {}
+
+
+@pytest.mark.smoke
+def test_bootstrap_helpers(monkeypatch):
+    from repro.launch.bootstrap import (HOST_DEVICE_FLAG, ep_from_argv,
+                                        force_host_devices)
+
+    assert ep_from_argv(["x", "--ep", "4"]) == 4
+    assert ep_from_argv(["x", "--ep=8"]) == 8
+    assert ep_from_argv(["x", "--ep", "nope"]) == 0
+    assert ep_from_argv(["x"]) == 0
+    import os
+    monkeypatch.setenv("XLA_FLAGS", "--foo=1")
+    force_host_devices(4)
+    assert f"{HOST_DEVICE_FLAG}=4" in os.environ["XLA_FLAGS"]
+    force_host_devices(8)   # existing count wins by default
+    assert f"{HOST_DEVICE_FLAG}=4" in os.environ["XLA_FLAGS"]
+    force_host_devices(512, override=True)   # the dry-run's hard floor
+    flags = os.environ["XLA_FLAGS"]
+    assert f"{HOST_DEVICE_FLAG}=512" in flags and "=4" not in flags
+    assert "--foo=1" in flags   # unrelated flags survive the override
+    monkeypatch.setenv("XLA_FLAGS", "")
+    force_host_devices(1)   # no-op
+    assert HOST_DEVICE_FLAG not in os.environ["XLA_FLAGS"]
+
+
+# ------------------------------------------------- the bitwise contract --
+def _workload(cfg, n, plen, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab, (n, plen)).astype(np.int32)
+    return prompts
+
+
+def test_engine_bitwise_matches_fixed_batch_reference_local():
+    """Staggered arrivals through 2 slots (mid-stream refills forced)
+    produce per-request greedy streams bitwise-identical to the one-shot
+    fixed-batch reference; and the continuous engine spends fewer decode
+    steps than a static server at the same slot count."""
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.serving import BatchedServer, ServingEngine
+
+    cfg = get_config("mixtral-8x7b").reduced()
+    pctx = make_pctx(cfg, None, train=False)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    n, plen = 6, 8
+    max_news = [3, 6, 2, 5, 4, 3]
+    budget = plen + max(max_news)
+    prompts = _workload(cfg, n, plen)
+    ref = BatchedServer(cfg, params, slots=n, seq_budget=budget, pctx=pctx)
+    ref_out = ref.run(prompts, max(max_news))
+    expected = [ref_out[i][:max_news[i]] for i in range(n)]
+
+    eng = ServingEngine(cfg, params, slots=2, seq_budget=budget, pctx=pctx)
+    for i in range(n):
+        eng.submit(prompts[i], max_news[i], arrival=i)
+    states = eng.run()
+    assert [eng.outputs[i] for i in range(n)] == expected
+    # at least one slot served more than one request (a real refill)
+    slot_counts = {}
+    for s in states:
+        slot_counts[s.slot] = slot_counts.get(s.slot, 0) + 1
+    assert max(slot_counts.values()) > 1
+    # fewer decode steps than the static baseline at the SAME slot count
+    static = BatchedServer(cfg, params, slots=2, seq_budget=budget,
+                           pctx=pctx)
+    static_steps = 0
+    for i in range(0, n, 2):
+        static.run(prompts[i:i + 2], max(max_news[i:i + 2]))
+        static_steps += static.steps_used
+    assert eng.metrics.decode_steps < static_steps
+    summary = eng.metrics.summary(states)
+    assert summary["finished"] == n
+    assert 0.0 < summary["slot_occupancy"] <= 1.0
+
+
+def test_engine_eos_stops_and_cli_threads_eos():
+    """Per-request EOS: the engine records the EOS token then frees the
+    slot; the serve CLI's --eos reaches the engine (the old CLI dropped
+    it on the floor — max-new was the only stop)."""
+    from repro.configs import get_config
+    from repro.launch.serve import main as serve_main
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.serving import BatchedServer, ServingEngine
+
+    cfg = get_config("mixtral-8x7b").reduced()
+    pctx = make_pctx(cfg, None, train=False)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    n, plen, max_new = 2, 8, 8
+    budget = plen + max_new
+    prompts = _workload(cfg, n, plen)
+    ref = BatchedServer(cfg, params, slots=n, seq_budget=budget, pctx=pctx)
+    free_run = ref.run(prompts, max_new)
+    eos = free_run[0][2]              # force an early stop on request 0
+    expected = ref.run(prompts, max_new, eos=eos)
+    assert len(expected[0]) < max_new  # the EOS actually truncates
+
+    eng = ServingEngine(cfg, params, slots=n, seq_budget=budget, pctx=pctx,
+                        eos=eos)
+    for i in range(n):
+        eng.submit(prompts[i], max_new)
+    eng.run()
+    assert [eng.outputs[i] for i in range(n)] == expected
+    assert eng.outputs[0][-1] == eos
+
+    outs = serve_main(["--arch", "mixtral-8x7b", "--reduced",
+                       "--requests", "2", "--prompt-len", "8",
+                       "--max-new", "8", "--eos", str(eos)])
+    assert outs == expected           # same seed/shapes as above
+
+
+def test_engine_bitwise_matches_reference_world4_ep():
+    """World-4 EP: continuous batching with staggered arrivals ==
+    fixed-batch reference, bitwise, for every decode-runnable strategy.
+    The pure-EP (4,) mesh lets the one-sided rdma kernels execute under
+    interpret; (1, 4) exercises the serve CLI's mesh shape."""
+    run_sub("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.compat import make_mesh
+    from repro.distributed import sharding as shd
+    from repro.serving import BatchedServer, ServingEngine
+    cfg = get_config("mixtral-8x7b").reduced()
+    rng = np.random.default_rng(0)
+    n, plen = 4, 8
+    prompts = rng.integers(0, cfg.vocab, (n, plen)).astype(np.int32)
+    max_news = [3, 5, 2, 4]
+    budget = plen + max(max_news)
+    cases = [(("data", "model"), (1, 4), "bulk"),
+             (("model",), (4,), "pipelined"),
+             (("model",), (4,), "rdma")]
+    for axes, shape, impl in cases:
+        mesh = make_mesh(shape, axes)
+        pctx = make_pctx(cfg, mesh, train=False, dist_impl=impl)
+        assert pctx.use_ep
+        params = init_params(cfg, jax.random.PRNGKey(0),
+                             dtype=jnp.float32, ep_world=4)
+        params = jax.device_put(params, shd.params_shardings(
+            cfg, mesh, params, serve=False))
+        ref = BatchedServer(cfg, params, slots=n, seq_budget=budget,
+                            pctx=pctx, mesh=mesh)
+        ref_out = ref.run(prompts, max(max_news))
+        expected = [ref_out[i][:max_news[i]] for i in range(n)]
+        eng = ServingEngine(cfg, params, slots=2, seq_budget=budget,
+                            pctx=pctx, mesh=mesh)
+        for i in range(n):
+            eng.submit(prompts[i], max_news[i], arrival=i)
+        states = eng.run()
+        got = [eng.outputs[i] for i in range(n)]
+        assert got == expected, (axes, impl)
+        refills = {}
+        for s in states:
+            refills[s.slot] = refills.get(s.slot, 0) + 1
+        assert max(refills.values()) > 1, (axes, impl)
+        print(f"{axes} {impl} OK steps={eng.metrics.decode_steps}")
+    # the EP capacity guard: at capacity_factor=1.0 a 16-slot engine
+    # can drop tokens on a hot expert -> constructor must warn
+    import warnings, dataclasses
+    cfg_low = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ServingEngine(cfg_low, params, slots=16, seq_budget=budget,
+                      pctx=pctx, mesh=mesh)
+        ServingEngine(cfg, params, slots=16, seq_budget=budget,
+                      pctx=pctx, mesh=mesh)   # cf=4.0: no warning
+    msgs = [str(x.message) for x in w]
+    assert any("can drop tokens" in m for m in msgs), msgs
+    assert sum("can drop tokens" in m for m in msgs) == 1, msgs
+    print("SERVING EP BITWISE OK")
+    """, devices=4)
+
+
+# ------------------------------------------------------------ benchmark --
+def test_bench_serving_smoke_emits_valid_rows(tmp_path):
+    """bench_serving --smoke: valid JSON, both modes present + identical
+    to the reference, continuous strictly fewer decode steps (the
+    continuous-batching win under staggered arrivals)."""
+    out = tmp_path / "bench_serving.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_serving", "--smoke",
+         str(out)],
+        capture_output=True, text=True, timeout=600,
+        cwd=_ROOT, env={**__import__("os").environ,
+                        "PYTHONPATH": f"{_ROOT}/src"})
+    assert r.returncode == 0, f"stdout:{r.stdout}\nstderr:{r.stderr}"
+    rec = json.loads(out.read_text())
+    assert rec["meta"]["bench"] == "bench_serving"
+    rows = {row["mode"]: row for row in rec["rows"]}
+    assert set(rows) == {"static", "continuous"}
+    for row in rows.values():
+        assert row["identical"] is True
+        assert row["decode_steps"] > 0 and row["tokens"] > 0
+    assert rows["continuous"]["decode_steps"] < \
+        rows["static"]["decode_steps"]
+    assert rows["continuous"]["tokens"] == rows["static"]["tokens"]
