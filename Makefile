@@ -1,7 +1,7 @@
 # FlashMoE repro — common entry points. Pure-Python JAX project: no
 # build step, PYTHONPATH=src is the only setup (see README.md).
 
-.PHONY: test smoke check-docs bench bench-smoke bench-serving serve-smoke dryrun
+.PHONY: test smoke check-docs check-bench bench bench-smoke bench-serving serve-smoke dryrun
 
 # tier-1 verify: the whole suite (multi-device cases spawn subprocesses)
 test:
@@ -15,6 +15,11 @@ smoke:
 # or make targets that don't exist
 check-docs:
 	python tools/check_docs.py README.md docs/ARCHITECTURE.md
+
+# bench-drift gate: fresh --smoke records vs the committed BENCH_*.json
+# baselines (coverage, >2x relative regressions, dropless invariants)
+check-bench:
+	PYTHONPATH=src python tools/check_bench.py
 
 # refresh the latency baseline (local paths + bulk/pipelined/rdma/fused EP)
 bench:

@@ -12,7 +12,12 @@ all under interpret) on a 4-device host-platform mesh, plus the
 latency-oriented EP DECODE path (distributed_moe_decode on the 8-row
 decode plan, per dist_impl, against the local gather baseline), and
 writes the whole record to BENCH_latency.json — the perf-trajectory
-baseline future PRs compare against.
+baseline future PRs compare against (``tools/check_bench.py`` gates on
+it). Every EP row rides with exchange accounting from the plan it ran:
+``dropped_tokens`` (must read 0 on ``*_dropless`` rows),
+``payload_bytes`` (count-sized routed load) and ``buffer_bytes`` (what
+the static buffers actually ship — worst-case capacity padding vs the
+dropless tile-aligned footprint).
 
 ``--smoke`` runs a tiny-shape variant of every row (CI sanity: the JSON
 must stay valid and per-impl complete; wall times are meaningless).
@@ -36,6 +41,49 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_fn
 from repro.core.gate import GateConfig
 from repro.core.moe import MoEConfig, init_moe_params, moe_layer
+
+
+def plan_stats(params, cfg, info, x, *, phase):
+    """Exchange accounting for one EP bench row, computed host-side.
+
+    Rebuilds the ExchangePlan each rank would build for its contiguous
+    token block (decode pads to ceil(B/P) rows per rank, mirroring
+    ``_decode_token_block``) and sums over ranks:
+
+      * ``dropped_tokens`` — routed rows past capacity (0 by
+        construction for dropless plans — the bench-level invariant);
+      * ``payload_bytes`` — rows carrying real tokens x H x 4B, what a
+        count-sized wire format ships;
+      * ``buffer_bytes`` — static buffer rows x H x 4B, what the
+        exchange actually ships (worst-case capacity padding vs the
+        dropless routed-load + tile-alignment footprint).
+    """
+    import dataclasses
+
+    from repro.core.exchange import (buffer_rows, dropped_tokens,
+                                     make_exchange_plan, payload_rows)
+    from repro.core.moe import run_gate
+
+    x2 = x.reshape(-1, x.shape[-1])
+    T, H = x2.shape
+    world = info.world
+    t_loc = -(-T // world)
+    if t_loc * world > T:
+        x2 = jnp.concatenate(
+            [x2, jnp.zeros((t_loc * world - T, H), x2.dtype)], axis=0)
+    gcfg = dataclasses.replace(cfg, use_pallas_gate=False)
+    dropped = payload = buf = 0
+    for r in range(world):
+        og = run_gate(dict(params), x2[r * t_loc:(r + 1) * t_loc], gcfg)
+        ids = info.slot_of_expert(og.expert_indices, jnp.int32(r))
+        plan = make_exchange_plan(cfg.gate, ids, info, phase=phase,
+                                  dropless=cfg.dropless)
+        dropped += int(dropped_tokens(plan))
+        payload += int(payload_rows(plan))
+        buf += int(buffer_rows(plan))
+    return {"dropped_tokens": dropped,
+            "payload_bytes": payload * H * 4,
+            "buffer_bytes": buf * H * 4}
 
 
 def run(tokens_list=(512, 1024, 2048, 4096), E=16, H=256, F=256,
@@ -87,15 +135,21 @@ def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256,
                     aux_loss=0.0, router_z_loss=0.0)
     info = SlotInfo.make(E, P_)
     results = []
-    for impl, chunks in (("bulk", 1), ("pipelined", 2), ("pipelined", 4),
-                         ("rdma", 1), ("fused", 1)):
+    # capacity rows first (the pre-dropless baseline trajectory), then a
+    # dropless row per transport: same shapes, ragged count-sized plans.
+    variants = [("bulk", 1, False), ("pipelined", 2, False),
+                ("pipelined", 4, False), ("rdma", 1, False),
+                ("fused", 1, False), ("bulk", 1, True),
+                ("pipelined", 2, True), ("rdma", 1, True),
+                ("fused", 1, True)]
+    for impl, chunks, dropless in variants:
         # "fused" runs its expert compute INSIDE the kernel, so it cannot
         # use the einsum stand-in the XLA-side impls are timed with; its
         # row therefore includes interpret-mode kernel-compute overhead
         # (compare fused across PRs, not against the einsum rows).
         cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
                         gated=False, interpret=True, dist_impl=impl,
-                        num_chunks=chunks,
+                        num_chunks=chunks, dropless=dropless,
                         expert_compute=("kernel" if impl == "fused"
                                         else "einsum"))
         m = mesh_ep if impl in ("rdma", "fused") else mesh
@@ -105,15 +159,18 @@ def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256,
                 params[w] = info.expand_expert_weights(params[w])
         fn = jax.jit(lambda p, x, cfg=cfg, m=m: distributed_moe(
             p, x, cfg, m)[0])
+        name_impl = f"{impl}_c{chunks}" + ("_dropless" if dropless else "")
         for T in tokens_list:
             shape = ((1, T, H) if impl in ("rdma", "fused")
                      else (P_, T // P_, H))
             x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
             with with_mesh(m):
                 us = time_fn(fn, params, x, warmup=warmup, iters=iters)
-            name = f"fig10/ep_{impl}_c{chunks}_T{T}"
-            emit(name, us, f"tokens={T};experts={E};world={P_}")
-            results.append((f"{impl}_c{chunks}", T, us))
+            stats = plan_stats(params, cfg, info, x, phase="train")
+            name = f"fig10/ep_{name_impl}_T{T}"
+            emit(name, us, f"tokens={T};experts={E};world={P_};"
+                 f"dropped={stats['dropped_tokens']}")
+            results.append((name_impl, T, us, stats))
     return results
 
 
@@ -148,25 +205,31 @@ def run_decode(batch_list=(1, 8), E=8, H=256, F=256, warmup=3, iters=10):
         x = jax.random.normal(jax.random.PRNGKey(1), (B, H), jnp.float32)
         us = time_fn(fn_l, params, x, warmup=warmup, iters=iters)
         emit(f"fig10/decode_gather_T{B}", us, f"tokens={B};experts={E}")
-        results.append(("decode_gather", B, us))
+        results.append(("decode_gather", B, us, None))
     pd = dict(params)
     for w in ("w1", "w2", "w3"):
         if w in pd:
             pd[w] = info.expand_expert_weights(pd[w])
-    for impl in ("bulk", "pipelined", "rdma"):
+    for impl, dropless in (("bulk", False), ("pipelined", False),
+                           ("rdma", False), ("bulk", True),
+                           ("pipelined", True), ("rdma", True)):
         cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
                         gated=False, interpret=True, dist_impl=impl,
-                        num_chunks=2, use_pallas_gate=False)
+                        num_chunks=2, use_pallas_gate=False,
+                        dropless=dropless)
         fn = jax.jit(lambda p, x, c=cfg: distributed_moe_decode(
             p, x, c, mesh_ep)[0])
+        name_impl = f"decode_{impl}" + ("_dropless" if dropless else "")
         for B in batch_list:
             x = jax.random.normal(jax.random.PRNGKey(1), (B, H),
                                   jnp.float32)
             with with_mesh(mesh_ep):
                 us = time_fn(fn, pd, x, warmup=warmup, iters=iters)
-            emit(f"fig10/decode_{impl}_T{B}", us,
-                 f"tokens={B};experts={E};world={P_}")
-            results.append((f"decode_{impl}", B, us))
+            stats = plan_stats(pd, cfg, info, x, phase="decode")
+            emit(f"fig10/{name_impl}_T{B}", us,
+                 f"tokens={B};experts={E};world={P_};"
+                 f"dropped={stats['dropped_tokens']}")
+            results.append((name_impl, B, us, stats))
     return results
 
 
@@ -195,10 +258,11 @@ def main(out_path: str = "BENCH_latency.json", smoke: bool = False):
         },
         "local": [{"impl": i, "tokens": t, "us": round(us, 1)}
                   for i, t, us in local],
-        "distributed": [{"impl": i, "tokens": t, "us": round(us, 1)}
-                        for i, t, us in dist],
-        "decode": [{"impl": i, "tokens": t, "us": round(us, 1)}
-                   for i, t, us in dec],
+        "distributed": [{"impl": i, "tokens": t, "us": round(us, 1), **s}
+                        for i, t, us, s in dist],
+        "decode": [{"impl": i, "tokens": t, "us": round(us, 1),
+                    **(s or {})}
+                   for i, t, us, s in dec],
     }
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1)

@@ -11,6 +11,18 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 
+_DEFAULT_CAPACITY_FACTOR = 1.25
+
+# one-shot guard for the capacity_factor-under-dropless warning (module
+# state, reset by tests via _reset_dropless_cf_warning)
+_warned_dropless_cf = False
+
+
+def _reset_dropless_cf_warning() -> None:
+    global _warned_dropless_cf
+    _warned_dropless_cf = False
+
+
 @dataclasses.dataclass(frozen=True)
 class MoESpec:
     num_experts: int
@@ -19,10 +31,30 @@ class MoESpec:
     num_shared: int = 0
     d_ff_shared: int = 0
     first_k_dense: int = 0          # deepseek: first k layers use dense FFN
-    capacity_factor: float = 1.25
+    # Advisory for capacity-mode (dropless=False) plans only: a dropless
+    # plan sizes expert groups by actual routed counts, so tuning
+    # capacity_factor there is dead config (warned once, see
+    # __post_init__).
+    capacity_factor: float = _DEFAULT_CAPACITY_FACTOR
     score_fn: str = "softmax"
     aux_loss: float = 1e-2
     router_z_loss: float = 1e-3
+    # MegaBlocks-style dropless routing: ragged count-sized expert groups,
+    # zero dropped tokens (core/exchange "Dropless (ragged) plans").
+    dropless: bool = False
+
+    def __post_init__(self):
+        global _warned_dropless_cf
+        if (self.dropless
+                and self.capacity_factor != _DEFAULT_CAPACITY_FACTOR
+                and not _warned_dropless_cf):
+            import warnings
+            _warned_dropless_cf = True
+            warnings.warn(
+                "MoESpec.capacity_factor is set but dropless=True: dropless "
+                "plans size expert groups by actual routed counts, so "
+                "capacity_factor has no effect (it applies to capacity-mode "
+                "plans only)", stacklevel=2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,11 +142,16 @@ class ArchConfig:
             local_window=min(self.local_window, 16) if self.local_window else 0,
         )
         if self.moe is not None:
-            changes["moe"] = dataclasses.replace(
-                self.moe, num_experts=min(8, self.moe.num_experts),
+            moe_changes: Dict = dict(
+                num_experts=min(8, self.moe.num_experts),
                 d_ff_expert=128,
-                d_ff_shared=128 if self.moe.d_ff_shared else 0,
-                capacity_factor=4.0)
+                d_ff_shared=128 if self.moe.d_ff_shared else 0)
+            if not self.moe.dropless:
+                # tiny smoke batches are skewed; give capacity-mode plans
+                # headroom. A dropless plan never drops — no bump needed
+                # (and setting it would be dead config, warned above).
+                moe_changes["capacity_factor"] = 4.0
+            changes["moe"] = dataclasses.replace(self.moe, **moe_changes)
         if self.ssm is not None:
             changes["ssm"] = dataclasses.replace(
                 self.ssm, d_inner=256 if self.ssm.d_inner else 0,

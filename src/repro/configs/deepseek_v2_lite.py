@@ -16,7 +16,7 @@ CONFIG = register(ArchConfig(
     activation="silu", gated_ffn=True,
     moe=MoESpec(num_experts=64, top_k=6, d_ff_expert=1408,
                 num_shared=2, d_ff_shared=2816, first_k_dense=1,
-                capacity_factor=1.5),
+                dropless=True),
     skip_long=True,
     source="arXiv:2405.04434",
     notes="MLA + 2 shared + 64 routed top-6; layer 0 dense",

@@ -1,14 +1,18 @@
 """The paper's own evaluation config (FlashDMoE §4).
 
 MoE transformer: 16 attention heads, d_model 2048, FFN intermediate 2048,
-top-2 routing, capacity factor 1.0, E in {8,16,32,64,128} experts.
+top-2 routing, E in {8,16,32,64,128} experts. Routing is dropless (the
+paper's "never drop or recompute" — §3.2.1 work conservation taken to its
+limit), so no capacity factor is tuned; pass ``dropless=False`` to get
+the historical capacity-1.0 variant for ablations.
 Used by the benchmark harness to reproduce the paper's tables/figures.
 """
 from repro.configs.base import ArchConfig, MoESpec, register
 
 
 def paper_config(num_experts: int = 64, n_layers: int = 1,
-                 capacity_factor: float = 1.0) -> ArchConfig:
+                 dropless: bool = True) -> ArchConfig:
+    moe_kw = {} if dropless else {"capacity_factor": 1.0}
     return ArchConfig(
         name=f"flashmoe-paper-e{num_experts}", family="moe",
         n_layers=n_layers, d_model=2048, n_heads=16, n_kv_heads=16,
@@ -16,7 +20,7 @@ def paper_config(num_experts: int = 64, n_layers: int = 1,
         rope_theta=10000.0,
         activation="gelu", gated_ffn=False,
         moe=MoESpec(num_experts=num_experts, top_k=2, d_ff_expert=2048,
-                    capacity_factor=capacity_factor),
+                    dropless=dropless, **moe_kw),
         skip_long=True,
         source="FlashDMoE §4 (NeurIPS 2025)",
     )

@@ -13,7 +13,7 @@ CONFIG = register(ArchConfig(
     rope_theta=1e6, window=4096,
     activation="silu", gated_ffn=True,
     moe=MoESpec(num_experts=8, top_k=2, d_ff_expert=14336,
-                capacity_factor=1.25),
+                dropless=True),
     source="arXiv:2401.04088",
     notes="SWA window 4096; MoE every layer",
 ))

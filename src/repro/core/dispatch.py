@@ -71,12 +71,12 @@ import jax.numpy as jnp
 from repro.core.exchange import (DECODE_TILE_M, ExchangePlan, SlotInfo,
                                  effective_chunks, exchange_counts,
                                  fixed_plan, gather_combine,
-                                 make_exchange_plan, scatter_to_buffer,
-                                 slot_capacity)
+                                 make_exchange_plan, ragged_tile_tables,
+                                 scatter_to_buffer, slot_capacity)
 from repro.core.moe import (DIST_IMPLS, MoEConfig, moe_ffn_gather, run_gate,
                             shared_expert_ffn)
 from repro.kernels.fused_ep.kernel import fused_ep_moe
-from repro.kernels.fused_moe.ops import grouped_expert_ffn
+from repro.kernels.fused_moe.ops import grouped_expert_ffn, ragged_expert_ffn
 from repro.kernels.rdma.kernel import rdma_combine, rdma_dispatch
 
 _logger = logging.getLogger(__name__)
@@ -196,6 +196,56 @@ def _experts_einsum(w1, w2, w3, x, cfg: MoEConfig):
     return jnp.einsum("lrf,lfh->lrh", h.astype(x.dtype), w2)
 
 
+def _ragged_einsum(w1, w2, w3, x, tile_slot, tile_valid, cfg: MoEConfig,
+                   tile_m: int):
+    """Cost-equivalent variable-group GEMM as a tile-gathered einsum.
+
+    The ragged counterpart of :func:`_experts_einsum`: x is the
+    flattened (rows, H) dropless landing, tiled by ``tile_m``; each tile
+    contracts against its owner slot's weights (``w1[tile_slot]``), and
+    alignment-padding tiles are zeroed like the kernel's predication.
+    Used by the dry-run/roofline and the decode plan (8-row tiles).
+    """
+    rows, H = x.shape
+    nt = rows // tile_m
+    xt = x.reshape(nt, tile_m, H)
+    h = jnp.einsum("mth,mhf->mtf", xt, w1[tile_slot],
+                   preferred_element_type=jnp.float32
+                   if x.dtype == jnp.float32 else None)
+    if cfg.activation == "silu":
+        h = jax.nn.silu(h)
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.activation == "relu":
+        h = jax.nn.relu(h)
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    if w3 is not None:
+        h = h * jnp.einsum("mth,mhf->mtf", xt, w3[tile_slot]).astype(h.dtype)
+    y = jnp.einsum("mtf,mfh->mth", h.astype(x.dtype), w2[tile_slot])
+    y = jnp.where(tile_valid[:, None, None] > 0, y, jnp.zeros_like(y))
+    return y.reshape(rows, H)
+
+
+def _ragged_expert_compute(w1, w2, w3, landing, cfg: MoEConfig,
+                           tile_m: int, tables):
+    """Expert tiles on a dropless (P, slab_rows, H) landing: every tile's
+    owner slot and validity come from the traced ragged tables
+    (exchange.ragged_tile_tables — group boundaries from the exchanged
+    counts), so compute is count-proportional with no capacity padding.
+    """
+    P, R, H = landing.shape
+    tile_slot, tile_valid = tables
+    x = landing.reshape(P * R, H)
+    if cfg.expert_compute == "einsum":
+        y = _ragged_einsum(w1, w2, w3, x, tile_slot, tile_valid, cfg, tile_m)
+    else:
+        y = ragged_expert_ffn(w1, w2, w3, x, tile_slot, tile_valid,
+                              activation=cfg.activation, tile_m=tile_m,
+                              interpret=cfg.interpret)
+    return y.reshape(P, R, H)
+
+
 def _local_expert_compute(w1, w2, w3, recv, counts_rcv, cfg: MoEConfig):
     """Expert tiles on the received buffer — ONE fused grouped-GEMM kernel.
 
@@ -225,6 +275,14 @@ def _exchange_bulk(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     info, C = plan.info, plan.capacity
     H = buf.shape[-1]
     recv = jax.lax.all_to_all(buf, plan.axis, 0, 0, tiled=True)
+    if plan.dropless:
+        # buf is already per-peer slabs (P, slab_rows, H); the landing's
+        # ragged groups are walked via the traced tile tables.
+        tables = ragged_tile_tables(plan.counts_rcv, plan.slab_rows,
+                                    plan.tile_m)
+        y = _ragged_expert_compute(w1, w2, w3, recv, cfg, plan.tile_m,
+                                   tables)
+        return jax.lax.all_to_all(y, plan.axis, 0, 0, tiled=True)
     recv = recv.reshape(plan.recv_shape(H))
     y = _local_expert_compute(w1, w2, w3, recv, plan.counts_rcv, cfg)
     y = y.reshape(info.slots, C, H)
@@ -245,6 +303,8 @@ def _exchange_pipelined(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     w1, w2, w3 = weights
     info, axis, n = plan.info, plan.axis, plan.chunks
     counts_rcv = plan.counts_rcv
+    if plan.dropless:
+        return _exchange_pipelined_ragged(plan, buf, weights, cfg)
     S, C, H = buf.shape
     Cc = C // n
     P, Ls = info.world, info.local_slots
@@ -281,6 +341,56 @@ def _exchange_pipelined(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     return out
 
 
+def _exchange_pipelined_ragged(plan: ExchangePlan, buf, weights,
+                               cfg: MoEConfig):
+    """The overlapped schedule over a dropless plan: chunks split the
+    per-peer SLAB rows (tile-aligned — plan.chunks divides the slab's
+    tile count), and each chunk's compute walks the slice of the traced
+    ragged tile tables that covers its rows. Groups may straddle a chunk
+    boundary; that is fine because groups start tile-aligned and every
+    tile computes independently against its owner slot's weights."""
+    w1, w2, w3 = weights
+    axis, n, tile = plan.axis, plan.chunks, plan.tile_m
+    P, R, H = buf.shape
+    Rc = R // n
+    tpc = Rc // tile
+    ts_full, tv_full = ragged_tile_tables(plan.counts_rcv, R, tile)
+    ts_full = ts_full.reshape(P, -1)
+    tv_full = tv_full.reshape(P, -1)
+
+    def a2a(z):
+        return jax.lax.all_to_all(z, axis, 0, 0, tiled=True)
+
+    def chunk(i):
+        return jax.lax.dynamic_slice_in_dim(buf, i * Rc, Rc, axis=1)
+
+    def tables(i):
+        ts = jax.lax.dynamic_slice_in_dim(ts_full, i * tpc, tpc, axis=1)
+        tv = jax.lax.dynamic_slice_in_dim(tv_full, i * tpc, tpc, axis=1)
+        return ts.reshape(-1), tv.reshape(-1)
+
+    out = jnp.zeros((P, R, H), buf.dtype)
+    recv = a2a(chunk(0))
+
+    def body(i, carry):
+        out, recv = carry
+        nxt = a2a(chunk(i + 1))                        # overlap: dispatch i+1
+        y = _ragged_expert_compute(w1, w2, w3, recv, cfg, tile,
+                                   tables(i))          # compute i
+        y_back = a2a(y)                                # overlap: combine i
+        out = jax.lax.dynamic_update_slice_in_dim(out, y_back, i * Rc,
+                                                  axis=1)
+        return out, nxt
+
+    if n > 1:
+        out, recv = jax.lax.fori_loop(0, n - 1, body, (out, recv),
+                                      unroll=True)
+    y = _ragged_expert_compute(w1, w2, w3, recv, cfg, tile, tables(n - 1))
+    y_back = a2a(y)
+    return jax.lax.dynamic_update_slice_in_dim(out, y_back, (n - 1) * Rc,
+                                               axis=1)
+
+
 def _exchange_rdma(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     # Both directions device-initiated (paper §3.2): slab p of the
     # staged buffer — the Ls*C rows bound for peer p's slots — is
@@ -294,6 +404,17 @@ def _exchange_rdma(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     P = info.world
     slabs = buf.reshape(plan.staged_slab_shape(H))
     landing = rdma_dispatch(slabs, axis=plan.axis, world=P,
+                            interpret=cfg.interpret,
+                            mesh_axes=plan.mesh_axes)
+    if plan.dropless:
+        # the one-sided kernels are shape-agnostic over (P, rows, H)
+        # slabs — ragged slabs ride the same rotation schedule; only
+        # the expert compute walks the traced group boundaries.
+        tables = ragged_tile_tables(plan.counts_rcv, plan.slab_rows,
+                                    plan.tile_m)
+        y = _ragged_expert_compute(w1, w2, w3, landing, cfg, plan.tile_m,
+                                   tables)
+        return rdma_combine(y, axis=plan.axis, world=P,
                             interpret=cfg.interpret,
                             mesh_axes=plan.mesh_axes)
     recv = landing.reshape(plan.recv_shape(H))
@@ -315,6 +436,18 @@ def _exchange_fused(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     info, C = plan.info, plan.capacity
     H = buf.shape[-1]
     slabs = buf.reshape(plan.staged_slab_shape(H))
+    if plan.dropless:
+        # the persistent kernel walks the SAME ragged tile tables the
+        # unfused paths use, passed in SMEM next to the counts metadata.
+        ts, tv = ragged_tile_tables(plan.counts_rcv, plan.slab_rows,
+                                    plan.tile_m)
+        P = info.world
+        y_back = fused_ep_moe(
+            slabs, w1, w2, w3, plan.counts_rcv, axis=plan.axis,
+            world=P, activation=cfg.activation, interpret=cfg.interpret,
+            mesh_axes=plan.mesh_axes,
+            tile_slot=ts.reshape(P, -1), tile_valid=tv.reshape(P, -1))
+        return y_back
     y_back = fused_ep_moe(
         slabs, w1, w2, w3, plan.counts_rcv, axis=plan.axis,
         world=info.world, activation=cfg.activation,
@@ -354,7 +487,7 @@ def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
     plan = make_exchange_plan(
         cfg.gate, slot_ids, info, phase="train",
         num_chunks=(cfg.num_chunks if impl == "pipelined" else 1),
-        axis=axis, mesh_axes=mesh_axes)
+        axis=axis, mesh_axes=mesh_axes, dropless=cfg.dropless)
     buf = scatter_to_buffer(plan, x_loc, cfg.gate.top_k)
     plan = exchange_counts(plan)
 
@@ -458,7 +591,7 @@ def _ep_decode_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
         plan = make_exchange_plan(
             cfg.gate, slot_ids, info, phase="decode",
             num_chunks=(cfg.num_chunks if impl == "pipelined" else 1),
-            axis=axis, mesh_axes=mesh_axes)
+            axis=axis, mesh_axes=mesh_axes, dropless=cfg.dropless)
         buf = scatter_to_buffer(plan, x_loc, cfg.gate.top_k)
         plan = exchange_counts(plan)
         y_back = EXCHANGE_IMPLS[impl](plan, buf, (w1, w2, w3), cfg)

@@ -27,6 +27,24 @@ shares: the scatter buffer ``(slots, C, H)``, the staged slab and
 combine landing ``(P, local_slots·C, H)`` (writer-indexed — the
 Theorem 3.1 conflict-free discipline, see core/layout.py), and the
 expert-compute view ``(P, local_slots, C, H)``.
+
+**Dropless (ragged) plans** — ``make_exchange_plan(..., dropless=True)``
+(MegaBlocks-style, see PAPERS.md): instead of a uniform per-slot
+capacity, each slot's group is sized by its ACTUAL routed count.  Within
+the slab bound for peer ``p``, the ``local_slots`` groups pack
+contiguously at tile-aligned traced ``group_offsets`` (cumulative sums
+of tile-aligned counts — alignment only up to the kernel-launch tile
+``TILE_M``/``DECODE_TILE_M``, never a 128-row capacity floor).  The slab
+itself keeps a STATIC row bound ``slab_rows = roundup(T·k +
+Ls·(tile−1), tile)`` — the provable worst case for rows one source can
+stage toward one peer — so the exchange stays static-shape on JAX
+0.4.x (no ``ragged_all_to_all``) while **no token is ever dropped**:
+every routed row gets a real slab row by construction (counts are
+unclipped and the bound covers them plus alignment waste).  The receive
+side recomputes the same offsets deterministically from the exchanged
+``counts_rcv`` (:func:`recv_group_offsets`), so sender and receiver
+agree on the ragged layout without exchanging it.  ``capacity_factor``
+plays no role in a dropless plan.
 """
 from __future__ import annotations
 
@@ -119,6 +137,80 @@ def effective_chunks(capacity: int, want: int, tile_m: int = TILE_M) -> int:
     return 1
 
 
+def dropless_slab_rows(tokens: int, top_k: int, local_slots: int,
+                       tile_m: int = TILE_M) -> int:
+    """Static per-peer slab bound for a dropless plan.
+
+    One source can stage at most ``tokens*top_k`` real rows toward one
+    peer, plus at most ``tile_m - 1`` alignment-padding rows per group
+    (one group per local slot); rounding the sum up to ``tile_m`` keeps
+    the slab whole tiles. This is the ragged analogue of
+    ``routing.packed_rows`` — worst-case ALIGNMENT waste, not worst-case
+    CAPACITY padding, so it scales with the routed load, not with
+    ``capacity_factor``."""
+    raw = tokens * top_k + local_slots * (tile_m - 1)
+    return -(-raw // tile_m) * tile_m
+
+
+def _align_up(n: jax.Array, tile_m: int) -> jax.Array:
+    return (n + tile_m - 1) // tile_m * tile_m
+
+
+def ragged_plan(slot_ids: jax.Array, info: SlotInfo, slab_rows: int,
+                tile_m: int):
+    """Dropless placement into per-peer slabs with ragged tile-aligned
+    groups. The drop-free ``T_phi``: every routed row maps to a REAL
+    buffer row (no ``num_rows`` drop sentinel can occur).
+
+    Returns (packed_pos (T,k) int32 into the flattened (P*slab_rows)
+    buffer, counts (slots,) int32 UNCLIPPED, group_offsets (slots,)
+    int32 — each slot's start row WITHIN its peer slab).
+    """
+    T, k = slot_ids.shape
+    S, Ls = info.slots, info.local_slots
+    flat_s = slot_ids.reshape(-1)
+    sort_idx = jnp.argsort(flat_s, stable=True).astype(jnp.int32)
+    sorted_s = flat_s[sort_idx]
+    counts = jnp.bincount(flat_s, length=S).astype(jnp.int32)
+    run_start = jnp.cumsum(counts) - counts
+    rank_in_slot = jnp.arange(T * k, dtype=jnp.int32) - run_start[sorted_s]
+    # tile-aligned ragged group starts, reset at each slab boundary
+    aligned = _align_up(counts, tile_m)
+    csum = jnp.cumsum(aligned) - aligned               # global exclusive
+    slab_of_slot = jnp.arange(S, dtype=jnp.int32) // Ls
+    group_offsets = (csum - csum[slab_of_slot * Ls]).astype(jnp.int32)
+    row_sorted = (slab_of_slot[sorted_s] * slab_rows
+                  + group_offsets[sorted_s] + rank_in_slot).astype(jnp.int32)
+    packed_flat = jnp.zeros((T * k,), jnp.int32).at[sort_idx].set(row_sorted)
+    return packed_flat.reshape(T, k), counts, group_offsets
+
+
+def recv_group_offsets(counts_rcv: jax.Array, tile_m: int) -> jax.Array:
+    """Receive-side ragged layout: within-slab group start per (source,
+    local slot), recomputed from the exchanged counts with the SAME
+    align-then-cumsum rule the sender used — deterministic agreement
+    without shipping offsets. counts_rcv: (P, Ls) -> offsets (P, Ls)."""
+    aligned = _align_up(counts_rcv, tile_m)
+    return (jnp.cumsum(aligned, axis=1) - aligned).astype(jnp.int32)
+
+
+def ragged_tile_tables(counts_rcv: jax.Array, slab_rows: int,
+                       tile_m: int):
+    """Per-tile task tables over the flattened (P*slab_rows) landing of a
+    dropless plan: which LOCAL slot owns each tile, and whether the tile
+    holds any real rows (tile_valid from the group residue). The ragged
+    analogue of ``grouped_expert_ffn``'s rectangular tables; boundary
+    walk shared with the single-device routing plan
+    (``kernels.fused_moe.kernel.group_tile_tables``)."""
+    from repro.kernels.fused_moe.kernel import group_tile_tables
+    P, Ls = counts_rcv.shape
+    offs = recv_group_offsets(counts_rcv, tile_m)
+    tile_slot, tile_valid = jax.vmap(
+        lambda o, c: group_tile_tables(o, c, slab_rows, tile_m)
+    )(offs, counts_rcv)
+    return tile_slot.reshape(-1), tile_valid.reshape(-1)
+
+
 def fixed_plan(slot_ids: jax.Array, slots: int, capacity: int):
     """Slot/capacity placement for the fixed (slots, C, H) dispatch buffer.
 
@@ -150,10 +242,16 @@ class ExchangePlan:
     the layouts; ``packed_pos``/``counts``/``counts_rcv`` are traced
     arrays. ``counts_rcv`` is None until :func:`exchange_counts` runs the
     tiny metadata AllToAll (the only exchange that precedes the data
-    plane in every strategy, including the fused single kernel)."""
+    plane in every strategy, including the fused single kernel).
+
+    Dropless plans (``dropless=True``): ``capacity`` is 0 (meaningless —
+    groups are count-sized), ``slab_rows`` bounds each per-peer slab and
+    ``group_offsets`` (traced, (slots,)) holds each slot's tile-aligned
+    start row WITHIN its slab; ``counts`` is UNCLIPPED, so
+    ``dropped_tokens`` is 0 by construction."""
     info: SlotInfo
     phase: str            # "train" | "decode" (see phase_tile_m)
-    capacity: int         # C rows per slot (tile-aligned)
+    capacity: int         # C rows per slot (tile-aligned); 0 if dropless
     chunks: int           # pipeline chunk count (divides capacity tiles)
     tile_m: int           # alignment the capacity was rounded to
     axis: str             # EP mesh axis name
@@ -161,21 +259,33 @@ class ExchangePlan:
     packed_pos: jax.Array                 # (T, k) rows into the buffer
     counts: jax.Array                     # (slots,) send-side counts
     counts_rcv: Optional[jax.Array] = None  # (P, local_slots) after exchange
+    dropless: bool = False                # ragged count-sized groups
+    slab_rows: int = 0                    # static per-peer slab rows
+    group_offsets: Optional[jax.Array] = None  # (slots,) within-slab starts
 
     # ---------------------------------------------------- layouts ----
     @property
     def num_rows(self) -> int:
+        if self.dropless:
+            return self.info.world * self.slab_rows
         return self.info.slots * self.capacity
 
     def buffer_shape(self, H: int) -> Tuple[int, int, int]:
-        """Scatter buffer: (slots, C, H), slot-major."""
+        """Scatter buffer: (slots, C, H) slot-major, or the per-peer
+        ragged slabs (P, slab_rows, H) for a dropless plan."""
+        if self.dropless:
+            return (self.info.world, self.slab_rows, H)
         return (self.info.slots, self.capacity, H)
 
     def staged_slab_shape(self, H: int) -> Tuple[int, int, int]:
-        """Per-peer staged slabs: (P, local_slots*C, H). Slab p holds the
-        rows bound for peer p's slots; the one-sided kernels push slab p
-        straight into peer p's landing[me] (writer-indexed)."""
+        """Per-peer staged slabs: (P, local_slots*C, H) — or, dropless,
+        (P, slab_rows, H) (the scatter buffer IS already per-peer
+        slabs). Slab p holds the rows bound for peer p's slots; the
+        one-sided kernels push slab p straight into peer p's landing[me]
+        (writer-indexed)."""
         i = self.info
+        if self.dropless:
+            return (i.world, self.slab_rows, H)
         return (i.world, i.local_slots * self.capacity, H)
 
     # the combine landing mirrors the staged slab — same symmetric,
@@ -184,7 +294,12 @@ class ExchangePlan:
     combine_landing_shape = staged_slab_shape
 
     def recv_shape(self, H: int) -> Tuple[int, int, int, int]:
-        """Expert-compute view of the landing: (P, local_slots, C, H)."""
+        """Expert-compute view of the landing: (P, local_slots, C, H).
+        Capacity plans only — a dropless landing has no uniform C; its
+        compute walks :func:`ragged_tile_tables` instead."""
+        if self.dropless:
+            raise ValueError("dropless plans have no rectangular recv "
+                             "view; use ragged_tile_tables")
         i = self.info
         return (i.world, i.local_slots, self.capacity, H)
 
@@ -193,16 +308,32 @@ def make_exchange_plan(gate_cfg: GateConfig, slot_ids: jax.Array,
                        info: SlotInfo, *, phase: str = "train",
                        num_chunks: int = 1, axis: str = "model",
                        mesh_axes=None,
-                       tile_m: Optional[int] = None) -> ExchangePlan:
+                       tile_m: Optional[int] = None,
+                       dropless: bool = False) -> ExchangePlan:
     """Phase-aware planner: placement + layouts for one routed batch.
 
     ``slot_ids``: (T, k) slot per (token, choice), already replica-
     resolved via :meth:`SlotInfo.slot_of_expert`. ``phase="train"``
     reproduces the pre-refactor tile-128 plan bitwise; ``phase="decode"``
     aligns capacity to :data:`DECODE_TILE_M` with no 128-row floor.
+    ``dropless=True`` replaces the capacity layout with ragged
+    count-sized groups (the same ``phase`` tile still sets the group
+    alignment): ``capacity_factor`` is ignored and no token ever drops.
     """
     tile = phase_tile_m(phase) if tile_m is None else tile_m
     T = slot_ids.shape[0]
+    if dropless:
+        slab = dropless_slab_rows(T, slot_ids.shape[1], info.local_slots,
+                                  tile_m=tile)
+        chunks = effective_chunks(slab, num_chunks, tile_m=tile)
+        packed_pos, counts, group_offsets = ragged_plan(
+            slot_ids, info, slab, tile)
+        return ExchangePlan(
+            info=info, phase=phase, capacity=0, chunks=chunks,
+            tile_m=tile, axis=axis,
+            mesh_axes=tuple(mesh_axes) if mesh_axes is not None else None,
+            packed_pos=packed_pos, counts=counts, dropless=True,
+            slab_rows=slab, group_offsets=group_offsets)
     capacity = slot_capacity(gate_cfg, T, info.slots, tile_m=tile)
     chunks = effective_chunks(capacity, num_chunks, tile_m=tile)
     packed_pos, counts = fixed_plan(slot_ids, info.slots, capacity)
@@ -226,8 +357,10 @@ def exchange_counts(plan: ExchangePlan) -> ExchangePlan:
 
 def scatter_to_buffer(plan: ExchangePlan, x: jax.Array,
                       top_k: int) -> jax.Array:
-    """Tokens (T, H) -> the plan's (slots, C, H) scatter buffer (drops
-    fall off the +1 guard row)."""
+    """Tokens (T, H) -> the plan's scatter buffer ((slots, C, H), or the
+    per-peer ragged slabs (P, slab_rows, H) for a dropless plan, whose
+    guard row is never hit — drops of a capacity plan fall off the +1
+    guard row)."""
     T, H = x.shape
     flat_tok = jnp.arange(T * top_k, dtype=jnp.int32) // top_k
     buf = jnp.zeros((plan.num_rows + 1, H), x.dtype)
@@ -244,3 +377,30 @@ def gather_combine(plan: ExchangePlan, y_buf: jax.Array,
     rows = jnp.minimum(plan.packed_pos, y_buf.shape[0])
     g = padded[rows.reshape(-1)].reshape(T, k, -1)
     return jnp.sum(g * weights.astype(g.dtype)[..., None], axis=1)
+
+
+# -------------------------------------------------- plan accounting -----
+def dropped_tokens(plan: ExchangePlan) -> jax.Array:
+    """Routed (token, choice) rows this plan drops (traced int32).
+
+    Capacity plans map overflow rows to the ``num_rows`` sentinel;
+    dropless plans map every row to a real slab row, so this is 0 by
+    construction — the invariant the benches and serving engine report.
+    """
+    return jnp.sum(plan.packed_pos >= plan.num_rows).astype(jnp.int32)
+
+
+def payload_rows(plan: ExchangePlan) -> jax.Array:
+    """Rows of the exchange that carry real tokens (traced int32):
+    count-sized — what a ragged wire format would ship. Compare against
+    ``buffer_rows`` (what the static buffer ships) for the dropless
+    payload-efficiency win recorded by bench_latency."""
+    if plan.dropless:
+        return jnp.sum(plan.counts).astype(jnp.int32)
+    return jnp.sum(jnp.minimum(plan.counts, plan.capacity)).astype(jnp.int32)
+
+
+def buffer_rows(plan: ExchangePlan) -> int:
+    """Static rows the exchange buffers hold (worst-case capacity padding
+    for capacity plans; routed load + tile-alignment waste for dropless)."""
+    return plan.num_rows

@@ -70,6 +70,13 @@ class MoEConfig:
     # costs reflect the TPU kernel's true I/O+flops rather than
     # interpret-mode loop artifacts (see DESIGN.md §Roofline-fidelity).
     expert_compute: str = "kernel"
+    # Dropless (MegaBlocks-style) routing: expert groups are sized by
+    # ACTUAL routed counts (ragged, tile-aligned) instead of a fixed
+    # capacity — no token ever drops, and gate.capacity_factor is
+    # advisory for capacity-mode (dropless=False) plans only. Applies to
+    # both the local fused path (routing.make_routing_plan) and the EP
+    # path (exchange.make_exchange_plan).
+    dropless: bool = False
 
 
 def init_moe_params(key: jax.Array, cfg: MoEConfig,
@@ -180,7 +187,7 @@ def moe_ffn_fused(params: dict, x: jax.Array, cfg: MoEConfig,
                   out_gate: GateOutput) -> jax.Array:
     """Single-device FlashMoE: one grouped-GEMM kernel over packed tiles."""
     gc = cfg.gate
-    plan = make_routing_plan(gc, out_gate)
+    plan = make_routing_plan(gc, out_gate, dropless=cfg.dropless)
     xp = permute_tokens(x, plan, gc.top_k)
     scale = packed_combine_scale(plan, out_gate.combine_weights, gc.top_k)
     y_packed = fused_moe_ffn(
@@ -214,8 +221,12 @@ def moe_ffn_gather(params: dict, x: jax.Array, cfg: MoEConfig,
     h = _dense_act(cfg, h, g)
     y = jnp.einsum("tkf,tkfh->tkh", h.astype(x.dtype), w2g,
                    preferred_element_type=jnp.float32)
+    # combine with the SAME expression as exchange.gather_combine (mul
+    # then sum over k) — an einsum contraction lowers with different
+    # FMA fusion and would differ by rounding, which matters because
+    # this function is the bitwise oracle for the dropless EP tests.
     w = out_gate.combine_weights.astype(jnp.float32)
-    return jnp.einsum("tkh,tk->th", y, w).astype(x.dtype)
+    return jnp.sum(y * w[..., None], axis=1).astype(x.dtype)
 
 
 def moe_ffn_packed(params: dict, x: jax.Array, cfg: MoEConfig,

@@ -64,14 +64,23 @@ class RoutingPlan:
 
 
 def make_routing_plan(cfg: GateConfig, out: GateOutput,
-                      tile_m: int = TILE_M) -> RoutingPlan:
+                      tile_m: int = TILE_M,
+                      dropless: bool = False) -> RoutingPlan:
     """Build the packed routing plan from gate decisions.
 
     Deterministic, vectorized, O(T k log(T k)): one stable sort + cumsums.
+
+    ``dropless=True`` builds the drop-free ``T_phi``: capacity is the
+    whole routed load (``T*k``), so ``kept`` is always true and every
+    (token, choice) maps to a REAL packed row — no ``num_rows`` drop
+    sentinel can occur. The packed buffer is already sized for this
+    (``packed_rows`` bounds the full load plus alignment waste), so the
+    layout is unchanged; only the clipping disappears and
+    ``capacity_factor`` becomes irrelevant.
     """
     T, k = out.expert_indices.shape
     E = cfg.num_experts
-    cap = expert_capacity(cfg, T)
+    cap = T * k if dropless else expert_capacity(cfg, T)
     flat_e = out.expert_indices.reshape(-1)  # (T*k,)
 
     # Stable sort by expert id; ties keep token order (deterministic routing).
@@ -104,16 +113,12 @@ def make_routing_plan(cfg: GateConfig, out: GateOutput,
     packed_pos_flat = packed_pos_flat.at[sort_idx].set(packed_row_sorted)
     packed_pos = packed_pos_flat.reshape(T, k)
 
-    # Task-descriptor table: owner expert of every bM tile.
-    num_tiles = num_rows // tile_m
-    tile_starts = jnp.arange(num_tiles, dtype=jnp.int32) * tile_m
-    # expert owning row r: searchsorted over group_offsets
-    tile_expert = (
-        jnp.searchsorted(group_offsets, tile_starts, side="right") - 1
-    ).astype(jnp.int32)
-    tile_expert = jnp.clip(tile_expert, 0, E - 1)
-    used = group_offsets[tile_expert] + group_sizes[tile_expert]
-    tile_valid = (tile_starts < used).astype(jnp.int32)
+    # Task-descriptor table: owner expert of every bM tile. The boundary
+    # walk is shared with every other variable-group grouped-GEMM
+    # consumer (EP ragged plans, see exchange.ragged_tile_tables).
+    from repro.kernels.fused_moe.kernel import group_tile_tables
+    tile_expert, tile_valid = group_tile_tables(
+        group_offsets, group_sizes, num_rows, tile_m)
 
     return RoutingPlan(
         sort_idx=sort_idx,

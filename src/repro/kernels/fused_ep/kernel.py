@@ -61,7 +61,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.gate import TILE_M
 from repro.kernels.fused_moe.kernel import _act, effective_tile_f
-from repro.kernels.fused_moe.ops import grouped_expert_ffn
+from repro.kernels.fused_moe.ops import grouped_expert_ffn, ragged_expert_ffn
 from repro.kernels.rdma.kernel import (_CompilerParams, device_id_for_peer,
                                        rdma_combine, rdma_dispatch)
 
@@ -76,17 +76,33 @@ def _tile_ffn(x, w1_ref, w2_ref, w3_ref, l, *, activation: str,
               tile_f: int, num_f: int):
     """One 128-row expert tile, bitwise-mirroring _kernel_body of
     kernels/fused_moe: same f-tile split, same f32 accumulation order,
-    same cast points — this is what makes fused == bulk bitwise."""
+    same cast points — this is what makes fused == bulk bitwise.
+
+    ``l`` is the owner slot: a static python int on the capacity path
+    (uniform layout), or a TRACED scalar read from the ragged tile-slot
+    table on the dropless path — then the weight blocks are fetched with
+    a dynamic ``pl.ds`` leading index (same values, dynamic addressing).
+    """
+    dyn = not isinstance(l, int)
+
+    def w_block(ref, f, f_leading):
+        fsl = slice(f * tile_f, (f + 1) * tile_f)
+        if dyn:
+            blk = (ref[pl.ds(l, 1), fsl, :] if f_leading
+                   else ref[pl.ds(l, 1), :, fsl])
+            return blk[0]
+        return ref[l, fsl, :] if f_leading else ref[l, :, fsl]
+
     acc = jnp.zeros((x.shape[0], x.shape[1]), jnp.float32)
     for f in range(num_f):
-        w1f = w1_ref[l, :, f * tile_f:(f + 1) * tile_f]
+        w1f = w_block(w1_ref, f, False)
         h = jnp.dot(x, w1f, preferred_element_type=jnp.float32)
         h = _act(activation, h)
         if w3_ref is not None:
-            g = jnp.dot(x, w3_ref[l, :, f * tile_f:(f + 1) * tile_f],
+            g = jnp.dot(x, w_block(w3_ref, f, False),
                         preferred_element_type=jnp.float32)
             h = h * g
-        w2f = w2_ref[l, f * tile_f:(f + 1) * tile_f, :]
+        w2f = w_block(w2_ref, f, True)
         acc = acc + jnp.dot(h.astype(w2f.dtype), w2f,
                             preferred_element_type=jnp.float32)
     return acc
@@ -98,9 +114,11 @@ def _fused_ep_body(slabs_ref, w1_ref, w2_ref, w3_ref, counts_ref,
                    disp_send, disp_recv, comb_send, comb_recv, copy_sem,
                    *, axis: str, world: int, local_slots: int,
                    capacity: int, activation: str, tile_f: int,
-                   num_f: int, mesh_axes):
+                   num_f: int, mesh_axes, tile_slot_ref=None,
+                   tile_valid_ref=None, slab_tiles: int = 0):
     my_id = jax.lax.axis_index(axis)
-    tiles = capacity // TILE_M
+    ragged = tile_slot_ref is not None
+    tiles = 0 if ragged else capacity // TILE_M
 
     def make_disp(s):
         # staged slab for peer (me+s)%P -> peer's landing row ME
@@ -139,26 +157,37 @@ def _fused_ep_body(slabs_ref, w1_ref, w2_ref, w3_ref, counts_ref,
         if s + LOOKAHEAD < world:
             make_disp(s + LOOKAHEAD).start()   # keep dispatch in flight
         src = jax.lax.rem(my_id - s + world, world)
-        for l in range(local_slots):
-            for t in range(tiles):
-                row0 = l * capacity + t * TILE_M
-                ld = pltpu.make_async_copy(
-                    land_ref.at[src, pl.ds(row0, TILE_M)], x_vmem, copy_sem)
-                ld.start()
-                ld.wait()
-                valid = (t * TILE_M) < counts_ref[src, l]
-                y_vmem[...] = jax.lax.cond(
-                    valid,
-                    lambda: _tile_ffn(
-                        x_vmem[...], w1_ref, w2_ref, w3_ref, l,
-                        activation=activation, tile_f=tile_f,
-                        num_f=num_f).astype(y_vmem.dtype),
-                    lambda: jnp.zeros(y_vmem.shape, y_vmem.dtype))
-                st = pltpu.make_async_copy(
-                    y_vmem, ystage_ref.at[src, pl.ds(row0, TILE_M)],
-                    copy_sem)
-                st.start()
-                st.wait()
+
+        def run_tile(row0, l, valid):
+            ld = pltpu.make_async_copy(
+                land_ref.at[src, pl.ds(row0, TILE_M)], x_vmem, copy_sem)
+            ld.start()
+            ld.wait()
+            y_vmem[...] = jax.lax.cond(
+                valid,
+                lambda: _tile_ffn(
+                    x_vmem[...], w1_ref, w2_ref, w3_ref, l,
+                    activation=activation, tile_f=tile_f,
+                    num_f=num_f).astype(y_vmem.dtype),
+                lambda: jnp.zeros(y_vmem.shape, y_vmem.dtype))
+            st = pltpu.make_async_copy(
+                y_vmem, ystage_ref.at[src, pl.ds(row0, TILE_M)],
+                copy_sem)
+            st.start()
+            st.wait()
+
+        if ragged:
+            # dropless slab: walk the ragged tile tables — owner slot
+            # and validity per tile come from the exchanged counts, not
+            # a uniform capacity stride.
+            for t in range(slab_tiles):
+                run_tile(t * TILE_M, tile_slot_ref[src, t],
+                         tile_valid_ref[src, t] == 1)
+        else:
+            for l in range(local_slots):
+                for t in range(tiles):
+                    run_tile(l * capacity + t * TILE_M, l,
+                             (t * TILE_M) < counts_ref[src, l])
         make_comb(s).start()   # combine round s overlaps compute of s+1
 
     for s in range(world):
@@ -166,20 +195,30 @@ def _fused_ep_body(slabs_ref, w1_ref, w2_ref, w3_ref, counts_ref,
 
 
 def _fused_ep_call(slabs, w1, w2, w3, counts, *, axis: str, world: int,
-                   activation: str, interpret: bool, mesh_axes):
+                   activation: str, interpret: bool, mesh_axes,
+                   tile_slot=None, tile_valid=None):
     P, LsC, H = slabs.shape
     Ls, _, F = w1.shape
     assert P == world, (P, world)
-    assert LsC % Ls == 0, (LsC, Ls)
-    C = LsC // Ls
-    assert C % TILE_M == 0, (C, TILE_M)
+    ragged = tile_slot is not None
+    if ragged:
+        assert LsC % TILE_M == 0, (LsC, TILE_M)
+        C = 0
+        slab_tiles = LsC // TILE_M
+        assert tile_slot.shape == tile_valid.shape == (P, slab_tiles), (
+            tile_slot.shape, (P, slab_tiles))
+    else:
+        assert LsC % Ls == 0, (LsC, Ls)
+        C = LsC // Ls
+        assert C % TILE_M == 0, (C, TILE_M)
+        slab_tiles = 0
     tile_f = effective_tile_f(H, F, slabs.dtype.itemsize, TILE_M)
     num_f = F // tile_f
 
     body = functools.partial(
         _fused_ep_body, axis=axis, world=world, local_slots=Ls,
         capacity=C, activation=activation, tile_f=tile_f, num_f=num_f,
-        mesh_axes=mesh_axes)
+        mesh_axes=mesh_axes, slab_tiles=slab_tiles)
 
     in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),    # staged slabs
                 pl.BlockSpec(memory_space=pltpu.VMEM),   # w1 (resident)
@@ -190,6 +229,12 @@ def _fused_ep_call(slabs, w1, w2, w3, counts, *, axis: str, world: int,
         inputs.append(w3)
     in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))  # counts
     inputs.append(counts)
+    if ragged:
+        # the ragged tile tables ride next to the counts metadata
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        inputs.append(tile_slot.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        inputs.append(tile_valid.astype(jnp.int32))
 
     def wrapped(*refs):
         if w3 is not None:
@@ -199,7 +244,11 @@ def _fused_ep_call(slabs, w1, w2, w3, counts, *, axis: str, world: int,
             s_r, w1_r, w2_r, c_r = refs[:4]
             w3_r = None
             rest = refs[4:]
-        body(s_r, w1_r, w2_r, w3_r, c_r, *rest)
+        kw = {}
+        if ragged:
+            kw = {"tile_slot_ref": rest[0], "tile_valid_ref": rest[1]}
+            rest = rest[2:]
+        body(s_r, w1_r, w2_r, w3_r, c_r, *rest, **kw)
 
     y_back, _land = pl.pallas_call(
         wrapped,
@@ -228,19 +277,20 @@ def _fused_ep_call(slabs, w1, w2, w3, counts, *, axis: str, world: int,
     return y_back
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
-def _fused_ep(slabs, w1, w2, w3, counts, axis, world, activation,
-              interpret, mesh_axes):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11))
+def _fused_ep(slabs, w1, w2, w3, counts, tile_slot, tile_valid, axis,
+              world, activation, interpret, mesh_axes):
     return _fused_ep_call(slabs, w1, w2, w3, counts, axis=axis,
                           world=world, activation=activation,
-                          interpret=interpret, mesh_axes=mesh_axes)
+                          interpret=interpret, mesh_axes=mesh_axes,
+                          tile_slot=tile_slot, tile_valid=tile_valid)
 
 
-def _fused_ep_fwd(slabs, w1, w2, w3, counts, axis, world, activation,
-                  interpret, mesh_axes):
-    y = _fused_ep(slabs, w1, w2, w3, counts, axis, world, activation,
-                  interpret, mesh_axes)
-    return y, (slabs, w1, w2, w3, counts)
+def _fused_ep_fwd(slabs, w1, w2, w3, counts, tile_slot, tile_valid, axis,
+                  world, activation, interpret, mesh_axes):
+    y = _fused_ep(slabs, w1, w2, w3, counts, tile_slot, tile_valid, axis,
+                  world, activation, interpret, mesh_axes)
+    return y, (slabs, w1, w2, w3, counts, tile_slot, tile_valid)
 
 
 def _fused_ep_bwd(axis, world, activation, interpret, mesh_axes, res, g):
@@ -249,23 +299,34 @@ def _fused_ep_bwd(axis, world, activation, interpret, mesh_axes, res, g):
     rdma_dispatch -> grouped_expert_ffn -> rdma_combine composition and
     pull ``g`` back through it. rdma_* carry their own custom VJPs (each
     is the other applied to the cotangent), so the backward transport is
-    itself a pair of device-initiated one-sided exchanges."""
-    slabs, w1, w2, w3, counts = res
+    itself a pair of device-initiated one-sided exchanges. On the
+    dropless path the middle stage is ragged_expert_ffn re-tracing the
+    same traced group boundaries (sorted to expert-contiguous order)."""
+    slabs, w1, w2, w3, counts, tile_slot, tile_valid = res
     Ls = w1.shape[0]
 
     def decomposed(s, a, b, c):
         landing = rdma_dispatch(s, axis=axis, world=world,
                                 interpret=interpret, mesh_axes=mesh_axes)
-        P_, LsC, H = landing.shape
-        recv = landing.reshape(P_, Ls, LsC // Ls, H)
-        y = grouped_expert_ffn(a, b, c, recv, counts,
-                               activation=activation, interpret=interpret)
-        return rdma_combine(y.reshape(P_, LsC, H), axis=axis, world=world,
+        P_, R, H = landing.shape
+        if tile_slot is not None:
+            y = ragged_expert_ffn(
+                a, b, c, landing.reshape(P_ * R, H),
+                tile_slot.reshape(-1), tile_valid.reshape(-1),
+                activation=activation, interpret=interpret)
+            y = y.reshape(P_, R, H)
+        else:
+            recv = landing.reshape(P_, Ls, R // Ls, H)
+            y = grouped_expert_ffn(
+                a, b, c, recv, counts,
+                activation=activation, interpret=interpret
+            ).reshape(P_, R, H)
+        return rdma_combine(y, axis=axis, world=world,
                             interpret=interpret, mesh_axes=mesh_axes)
 
     _, vjp = jax.vjp(decomposed, slabs, w1, w2, w3)
     ds, dw1, dw2, dw3 = vjp(g)
-    return ds, dw1, dw2, dw3, None
+    return ds, dw1, dw2, dw3, None, None, None
 
 
 _fused_ep.defvjp(_fused_ep_fwd, _fused_ep_bwd)
@@ -274,7 +335,9 @@ _fused_ep.defvjp(_fused_ep_fwd, _fused_ep_bwd)
 def fused_ep_moe(slabs: jax.Array, w1: jax.Array, w2: jax.Array,
                  w3: Optional[jax.Array], counts_rcv: jax.Array, *,
                  axis: str, world: int, activation: str = "gelu",
-                 interpret: bool = False, mesh_axes=None) -> jax.Array:
+                 interpret: bool = False, mesh_axes=None,
+                 tile_slot: Optional[jax.Array] = None,
+                 tile_valid: Optional[jax.Array] = None) -> jax.Array:
     """Dispatch -> expert FFN -> combine in one persistent pallas kernel.
 
     Must run inside shard_map over ``axis`` (the EP axis).
@@ -288,11 +351,15 @@ def fused_ep_moe(slabs: jax.Array, w1: jax.Array, w2: jax.Array,
       counts_rcv: (P, local_slots) int32 — per-source token counts for MY
         slots, exchanged ahead of the kernel (the metadata plane; the
         payload plane never leaves the kernel).
+      tile_slot/tile_valid: (P, slab_tiles) int32 ragged tile tables for
+        dropless plans (exchange.ragged_tile_tables); when given, the
+        in-kernel compute loop walks these traced group boundaries
+        instead of the uniform capacity stride.
     Returns:
       (P, local_slots*C, H): row p holds the outputs slot-owner p pushed
       back for the rows THIS device staged toward p — the layout
       ``exchange.gather_combine`` unpacks, bitwise-equal to the bulk path.
     """
-    return _fused_ep(slabs, w1, w2, w3, counts_rcv, axis, world,
-                     activation, interpret,
+    return _fused_ep(slabs, w1, w2, w3, counts_rcv, tile_slot, tile_valid,
+                     axis, world, activation, interpret,
                      None if mesh_axes is None else tuple(mesh_axes))

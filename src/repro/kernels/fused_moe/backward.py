@@ -16,6 +16,15 @@ in HBM — it is recomputed per (m, f) tile in VMEM):
               dW2[e,f,:] += h~^T (dy*s)
 
 Forward math (kernel.py):  y = (act(x W1) [* x W3]) W2 * s.
+
+Tile-table contract: ``tile_expert`` may be TRACED (the dropless ragged
+plans build it from exchanged counts at trace time) but each expert's
+tiles must be CONTIGUOUS in m — the dw-kernel re-zeroes its accumulator
+whenever ``te[m]`` changes, and non-consecutive revisits of an output
+block are not accumulation-safe on real TPU. The variable-group wrapper
+(``ops.ragged_expert_ffn``) sorts tiles by owner before calling the
+kernels, so its custom-VJP residuals re-trace these same (contiguous)
+boundaries here without further changes.
 """
 from __future__ import annotations
 

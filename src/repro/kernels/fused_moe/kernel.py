@@ -78,6 +78,32 @@ def effective_tile_f(hidden: int, ffn: int, itemsize: int = 2,
     return divisor_tile_f(ffn, pick_tile_f(hidden, ffn, itemsize, tile_m))
 
 
+def group_tile_tables(group_offsets: jax.Array, group_sizes: jax.Array,
+                      num_rows: int, tile_m: int = 128):
+    """Per-tile task tables from ragged group boundaries — the
+    variable-group grouped-GEMM launch metadata.
+
+    Groups live at tile-aligned traced ``group_offsets`` with REAL sizes
+    ``group_sizes`` (alignment padding between ``offset+size`` and the
+    next offset). For each of the ``num_rows // tile_m`` kernel tiles:
+    ``tile_expert[t]`` = index of the group whose aligned region covers
+    the tile (searchsorted over the offsets — every tile start coincides
+    with at most one group start since offsets are tile-aligned), and
+    ``tile_valid[t]`` = 1 iff the tile start lies inside the group's
+    residue (``start < offset + size``), so the kernel skips pure
+    alignment-padding tiles. Returns (tile_expert, tile_valid) int32.
+    """
+    n = group_offsets.shape[0]
+    num_tiles = num_rows // tile_m
+    tile_starts = jnp.arange(num_tiles, dtype=jnp.int32) * tile_m
+    owner = (jnp.searchsorted(group_offsets, tile_starts, side="right")
+             - 1).astype(jnp.int32)
+    owner = jnp.clip(owner, 0, n - 1)
+    used = group_offsets[owner] + group_sizes[owner]
+    valid = (tile_starts < used).astype(jnp.int32)
+    return owner, valid
+
+
 def _act(name: str, x: jax.Array) -> jax.Array:
     if name == "gelu":
         return jax.nn.gelu(x)

@@ -128,3 +128,43 @@ def grouped_expert_ffn(w1, w2, w3, recv, counts_rcv, *, activation: str,
         x, w1, w2, w3, tile_expert, tile_valid, scale,
         activation=activation, interpret=interpret, use_kernel=True)
     return jnp.transpose(y.reshape(Ls, P, C, H), (1, 0, 2, 3))
+
+
+def ragged_expert_ffn(w1, w2, w3, x, tile_expert, tile_valid, *,
+                      activation: str, tile_m: int = TILE_M,
+                      interpret: bool = True) -> jax.Array:
+    """Variable-group grouped-GEMM over a ragged packed buffer.
+
+    The dropless analogue of :func:`grouped_expert_ffn`: groups are
+    count-sized at ragged tile-aligned boundaries, so the per-tile task
+    tables are TRACED (built from the exchanged counts by
+    ``exchange.ragged_tile_tables``) rather than a static repeat.
+
+    The kernel call is preceded by a stable tile-granular sort to
+    expert-contiguous order. In a dropless EP landing, a slot's tiles
+    recur once per SOURCE slab (non-contiguous in tile order), but the
+    backward dW kernel re-zeroes its accumulator whenever ``tile_expert``
+    changes between consecutive tiles — it requires each expert's tiles
+    to be contiguous (and on real TPU, non-consecutive revisits of an
+    output block are not accumulation-safe at all). Sorting tiles by
+    owner restores contiguity; forward tiles are row-independent, so
+    un-permuting the output is exact, and the custom VJP re-traces the
+    same (sorted) boundaries through the gathers for free.
+
+    Args:
+      x: (rows, H), rows % tile_m == 0 — the flattened ragged landing.
+      tile_expert/tile_valid: (rows // tile_m,) traced int32 tables.
+    Returns (rows, H); null (alignment-padding) tiles are zeros.
+    """
+    rows, H = x.shape
+    nt = rows // tile_m
+    order = jnp.argsort(tile_expert, stable=True).astype(jnp.int32)
+    inv = jnp.zeros((nt,), jnp.int32).at[order].set(
+        jnp.arange(nt, dtype=jnp.int32))
+    xs = x.reshape(nt, tile_m, H)[order].reshape(rows, H)
+    scale = jnp.ones((rows,), jnp.float32)
+    ys = fused_moe_ffn(
+        xs, w1, w2, w3, tile_expert[order], tile_valid[order], scale,
+        activation=activation, tile_m=tile_m, interpret=interpret,
+        use_kernel=True)
+    return ys.reshape(nt, tile_m, H)[inv].reshape(rows, H)

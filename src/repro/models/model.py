@@ -94,7 +94,7 @@ def _moe_config(cfg: ArchConfig, pctx: ParallelContext) -> MoEConfig:
         d_ff_shared=m.d_ff_shared, impl=pctx.moe_impl,
         dist_impl=pctx.dist_impl, num_chunks=pctx.num_chunks,
         interpret=pctx.interpret, expert_compute=pctx.expert_compute,
-        use_pallas_gate=pctx.use_pallas_gate)
+        use_pallas_gate=pctx.use_pallas_gate, dropless=m.dropless)
 
 
 def sinusoidal_pos(positions: jax.Array, d: int) -> jax.Array:

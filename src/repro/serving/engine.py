@@ -70,16 +70,23 @@ class ServingEngine:
         self._warn_if_capacity_can_drop(slots)
 
     def _warn_if_capacity_can_drop(self, slots: int) -> None:
-        """The bitwise contract needs drop-free routing. The local
-        gather path never drops; the EP exchange path drops rows past
-        the decode plan's per-expert capacity — and free slots' garbage
-        rows contend for it too. Warn when the worst case (every row
-        picking the same expert) exceeds capacity; the E < P replicated
-        fast path has no exchange and is exempt."""
+        """The bitwise contract needs drop-free routing. Structural
+        check: a dropless spec (``moe.dropless``) builds dropless decode
+        plans — every routed row gets a real slab row by construction
+        (core/exchange "Dropless (ragged) plans"), so no warning can
+        ever apply. Only an explicitly capacity-mode engine can drop:
+        the EP exchange path drops rows past the decode plan's
+        per-expert capacity — and free slots' garbage rows contend for
+        it too. For those, warn when the worst case (every row picking
+        the same expert) exceeds capacity. The local gather path never
+        drops, and the E < P replicated fast path has no exchange —
+        both exempt."""
         pctx, moe = self.pctx, self.cfg.moe
         if (moe is None or not getattr(pctx, "use_ep", False)
                 or pctx.mesh is None or moe.num_experts < pctx.ep_world):
             return
+        if getattr(moe, "dropless", False):
+            return                     # dropless plans cannot drop
         from repro.core.dispatch import SlotInfo
         from repro.core.exchange import DECODE_TILE_M, slot_capacity
         from repro.core.gate import GateConfig
@@ -93,7 +100,8 @@ class ServingEngine:
                 "a hot expert can drop tokens (and free-slot garbage "
                 "rows contend for capacity), voiding the bitwise "
                 "fixed-batch equivalence — raise capacity_factor "
-                f"(now {moe.capacity_factor}) or use fewer slots",
+                f"(now {moe.capacity_factor}), use fewer slots, or set "
+                "the spec dropless",
                 stacklevel=3)
 
     # ------------------------------------------------------ submission --

@@ -1,0 +1,150 @@
+"""tools/check_bench.py: the bench-drift gate behind `make check-bench`.
+
+The gate's compare logic is pure (committed record + fresh record ->
+failure list), so these tests drive it on synthetic records; one test
+runs the real CLI offline against the committed baselines (fresh ==
+committed must always pass). Plus the dropless config contract: setting
+``MoESpec.capacity_factor`` under ``dropless=True`` is dead config and
+warns exactly once per process.
+"""
+import copy
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+from check_bench import check_latency, check_serving  # noqa: E402
+
+LAT = {
+    "local": [{"impl": "packed", "tokens": 512, "us": 100.0},
+              {"impl": "fused", "tokens": 512, "us": 400.0}],
+    "distributed": [
+        {"impl": "bulk_c1", "tokens": 512, "us": 200.0,
+         "dropped_tokens": 3, "payload_bytes": 1000,
+         "buffer_bytes": 4000},
+        {"impl": "rdma_c1_dropless", "tokens": 512, "us": 300.0,
+         "dropped_tokens": 0, "payload_bytes": 1000,
+         "buffer_bytes": 8000}],
+    "decode": [{"impl": "decode_bulk", "tokens": 4, "us": 10.0,
+                "dropped_tokens": 0, "payload_bytes": 16,
+                "buffer_bytes": 64},
+               {"impl": "decode_rdma", "tokens": 4, "us": 40.0,
+                "dropped_tokens": 0, "payload_bytes": 16,
+                "buffer_bytes": 64}],
+}
+SRV = {"rows": [
+    {"mode": "static", "identical": True, "tok_s": 50.0},
+    {"mode": "continuous", "identical": True, "tok_s": 45.0}]}
+
+
+def test_identical_records_pass():
+    assert check_latency(LAT, copy.deepcopy(LAT)) == []
+    assert check_serving(SRV, copy.deepcopy(SRV)) == []
+
+
+def test_ratio_regression_fails_only_past_threshold():
+    fresh = copy.deepcopy(LAT)
+    # fused goes from 4x packed to 7x packed: < 2x blow-up, still fine
+    fresh["local"][1]["us"] = 700.0
+    assert check_latency(LAT, fresh) == []
+    # 9x packed: > 2x blow-up of the committed 4x ratio
+    fresh["local"][1]["us"] = 900.0
+    errs = check_latency(LAT, fresh)
+    assert len(errs) == 1 and "fused" in errs[0] and "regressed" in errs[0]
+    # a looser threshold lets the same record pass
+    assert check_latency(LAT, fresh, threshold=3.0) == []
+
+
+def test_lost_coverage_fails():
+    fresh = copy.deepcopy(LAT)
+    fresh["distributed"] = [r for r in fresh["distributed"]
+                            if r["impl"] != "rdma_c1_dropless"]
+    errs = check_latency(LAT, fresh)
+    assert any("coverage lost" in e and "rdma_c1_dropless" in e
+               for e in errs)
+
+
+def test_dropless_row_must_report_zero_drops():
+    fresh = copy.deepcopy(LAT)
+    fresh["distributed"][1]["dropped_tokens"] = 2
+    errs = check_latency(LAT, fresh)
+    assert any("dropped_tokens" in e and "rdma_c1_dropless" in e
+               for e in errs)
+    # a missing counter on a dropless row is just as dead a wire
+    del fresh["distributed"][1]["dropped_tokens"]
+    assert any("dropped_tokens" in e for e in check_latency(LAT, fresh))
+    # capacity rows may drop; no error for them
+    fresh2 = copy.deepcopy(LAT)
+    fresh2["distributed"][0]["dropped_tokens"] = 99
+    assert check_latency(LAT, fresh2) == []
+
+
+def test_payload_exceeding_buffer_fails():
+    fresh = copy.deepcopy(LAT)
+    fresh["decode"][1]["payload_bytes"] = 128   # > buffer_bytes=64
+    errs = check_latency(LAT, fresh)
+    assert any("payload" in e and "decode_rdma" in e for e in errs)
+
+
+def test_invalid_us_fails():
+    fresh = copy.deepcopy(LAT)
+    fresh["local"][0]["us"] = 0.0
+    assert any("invalid us" in e for e in check_latency(LAT, fresh))
+
+
+def test_serving_contract():
+    fresh = copy.deepcopy(SRV)
+    fresh["rows"][1]["identical"] = False
+    errs = check_serving(SRV, fresh)
+    assert any("bitwise" in e and "continuous" in e for e in errs)
+    fresh = {"rows": [SRV["rows"][0]]}      # dropped the continuous row
+    assert any("continuous" in e for e in check_serving(SRV, fresh))
+
+
+def test_cli_offline_self_compare_passes(tmp_path):
+    """`check_bench --latency-json --serving-json` on the committed
+    baselines themselves: the gate must accept its own fixed point."""
+    lat = tmp_path / "lat.json"
+    srv = tmp_path / "srv.json"
+    lat.write_text(json.dumps(json.loads(
+        open(os.path.join(ROOT, "BENCH_latency.json")).read())))
+    srv.write_text(json.dumps(json.loads(
+        open(os.path.join(ROOT, "BENCH_serving.json")).read())))
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_bench.py"),
+         "--latency-json", str(lat), "--serving-json", str(srv)],
+        capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stderr
+    assert "OK" in r.stdout
+
+
+# ---------------------------------------------------- dropless config --
+def test_dropless_capacity_factor_warns_once():
+    """capacity_factor is advisory for capacity-mode plans only; setting
+    it under dropless=True is dead config — warned once per process, and
+    never for the default value or for capacity-mode specs."""
+    from repro.configs.base import (_reset_dropless_cf_warning,
+                                    MoESpec)
+    spec = dict(num_experts=8, top_k=2, d_ff_expert=256)
+    _reset_dropless_cf_warning()
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            MoESpec(**spec, dropless=True, capacity_factor=3.0)
+            MoESpec(**spec, dropless=True, capacity_factor=3.0)
+        hits = [x for x in w if "dropless" in str(x.message)]
+        assert len(hits) == 1, "one-shot warning fired more than once"
+        assert "no effect" in str(hits[0].message)
+
+        _reset_dropless_cf_warning()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            MoESpec(**spec, dropless=True)              # default cf
+            MoESpec(**spec, capacity_factor=3.0)        # capacity mode
+        assert not [x for x in w if "dropless" in str(x.message)]
+    finally:
+        _reset_dropless_cf_warning()

@@ -22,6 +22,7 @@ from collections import Counter
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp
@@ -229,3 +230,132 @@ def test_decode_cell_ep_matches_local_decode():
     assert rel < 2e-3, (err, rel)
     print("DECODE CELL EP OK", err)
     """, devices=4)
+
+
+# ------------------------------------------------------ dropless plans --
+def _zipf_slot_ids(rng, T, k, slots, alpha=1.2):
+    """Zipf(alpha)-skewed (T, k) slot ids: slot 0 hot, long tail."""
+    p = 1.0 / np.arange(1, slots + 1) ** alpha
+    p /= p.sum()
+    return jnp.asarray(rng.choice(slots, size=(T, k), p=p), jnp.int32)
+
+
+@pytest.mark.smoke
+def test_dropless_plan_zero_drops_under_zipf_skew():
+    """dropless=True: every routed row gets a real slab row (zero drops)
+    under Zipf-1.2 routing that makes the same-shape capacity plan drop;
+    counts stay UNCLIPPED and the buffer is count-proportional."""
+    from repro.core.dispatch import SlotInfo
+    from repro.core.exchange import (buffer_rows, dropped_tokens,
+                                     dropless_slab_rows, make_exchange_plan,
+                                     payload_rows)
+    from repro.core.gate import GateConfig
+
+    rng = np.random.default_rng(0)
+    gc = GateConfig(num_experts=8, top_k=2, capacity_factor=1.0)
+    info = SlotInfo.make(8, 4)
+    T = 512
+    ids = _zipf_slot_ids(rng, T, 2, info.slots)
+    hot = np.bincount(np.asarray(ids).ravel(), minlength=8)
+    assert hot.max() > 3 * hot.mean()                 # the skew bites
+
+    plan = make_exchange_plan(gc, ids, info, phase="train", dropless=True)
+    assert plan.dropless and plan.capacity == 0
+    assert plan.slab_rows == dropless_slab_rows(T, 2, info.local_slots)
+    assert int(dropped_tokens(plan)) == 0             # never drops
+    # every routed row maps to a distinct real row
+    pos = np.asarray(plan.packed_pos).ravel()
+    assert len(set(pos.tolist())) == pos.size
+    assert pos.max() < plan.num_rows
+    # counts unclipped: they sum to the full routed load
+    assert int(np.asarray(plan.counts).sum()) == T * 2
+    assert int(payload_rows(plan)) == T * 2
+    assert buffer_rows(plan) == plan.num_rows
+
+    # the capacity plan under the SAME skew drops tokens
+    cap_plan = make_exchange_plan(gc, ids, info, phase="train")
+    assert int(dropped_tokens(cap_plan)) > 0
+
+
+@pytest.mark.smoke
+def test_dropless_plan_ragged_layout_invariants():
+    """Group offsets are tile-aligned and slab-local; the receive side
+    recomputes the sender's offsets from the exchanged counts alone; the
+    decode flavor aligns groups to the 8-row decode tile."""
+    from repro.core.dispatch import SlotInfo
+    from repro.core.exchange import (DECODE_TILE_M, TILE_M,
+                                     make_exchange_plan,
+                                     recv_group_offsets)
+    from repro.core.gate import GateConfig
+
+    rng = np.random.default_rng(1)
+    gc = GateConfig(num_experts=8, top_k=2, capacity_factor=1.0)
+    info = SlotInfo.make(8, 4)
+    for phase, tile in (("train", TILE_M), ("decode", DECODE_TILE_M)):
+        ids = _zipf_slot_ids(rng, 256, 2, info.slots)
+        plan = make_exchange_plan(gc, ids, info, phase=phase,
+                                  dropless=True)
+        offs = np.asarray(plan.group_offsets)
+        assert (offs % tile == 0).all()               # tile-aligned
+        offs2 = offs.reshape(info.world, info.local_slots)
+        assert (offs2[:, 0] == 0).all()               # reset per slab
+        # sender/receiver agreement: recomputing offsets from the counts
+        # (what the receiver gets) reproduces the sender's layout
+        cnts = np.asarray(plan.counts).reshape(info.world,
+                                               info.local_slots)
+        rec = np.asarray(recv_group_offsets(jnp.asarray(cnts), tile))
+        np.testing.assert_array_equal(rec, offs2)
+        # groups fit the static slab bound
+        aligned = -(-cnts // tile) * tile
+        assert (offs2 + aligned <= plan.slab_rows).all()
+        assert plan.buffer_shape(64) == (info.world, plan.slab_rows, 64)
+        assert plan.staged_slab_shape(64) == plan.buffer_shape(64)
+        with pytest.raises(ValueError):
+            plan.recv_shape(64)
+    # a 1-token decode plan stays tiny: one 8-row tile per routed slot
+    one = make_exchange_plan(gc, jnp.zeros((1, 2), jnp.int32), info,
+                             phase="decode", dropless=True)
+    assert one.slab_rows <= 2 * DECODE_TILE_M
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_group_tile_tables_property(seed):
+    """Property: for arbitrary ragged group boundaries, every tile's
+    owner is the group whose [offset, offset+size) span contains the
+    tile start, and tile_valid marks exactly the tiles holding real
+    rows (the group residue rule the variable-group GEMM walks)."""
+    from repro.kernels.fused_moe.kernel import group_tile_tables
+
+    rng = np.random.default_rng(seed)
+    tile = int(rng.choice([8, 128]))
+    n = int(rng.integers(1, 9))
+    sizes = rng.integers(0, 3 * tile, size=n)
+    aligned = -(-sizes // tile) * tile
+    offsets = np.concatenate([[0], np.cumsum(aligned)[:-1]])
+    num_rows = max(tile, int(np.cumsum(aligned)[-1]) + tile * int(
+        rng.integers(0, 3)))                          # trailing padding
+    te, tv = group_tile_tables(jnp.asarray(offsets, jnp.int32),
+                               jnp.asarray(sizes, jnp.int32),
+                               num_rows, tile)
+    te, tv = np.asarray(te), np.asarray(tv)
+    assert te.shape == tv.shape == (num_rows // tile,)
+    for t in range(num_rows // tile):
+        start = t * tile
+        owner = int(te[t])
+        assert 0 <= owner < n
+        # ownership: start falls in the owner's aligned span (or past
+        # every group -> clipped to the last, and then invalid)
+        in_span = offsets[owner] <= start
+        assert in_span
+        if owner < n - 1:
+            assert start < offsets[owner] + aligned[owner] or \
+                aligned[owner] == 0
+        # validity == group residue covers the tile start
+        expect_valid = offsets[owner] + sizes[owner] > start
+        assert bool(tv[t]) == bool(expect_valid), (t, owner)
+    # every real row is covered by a valid tile of its own group
+    for g in range(n):
+        for r in range(0, int(sizes[g]), tile):
+            t = (int(offsets[g]) + r) // tile
+            assert int(te[t]) == g and bool(tv[t])

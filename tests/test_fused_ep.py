@@ -314,9 +314,21 @@ def test_bench_smoke_emits_per_impl_json(tmp_path):
     local_impls = {row["impl"] for row in rec["local"]}
     assert local_impls == {"packed", "fused", "ref"}
     dist_impls = {row["impl"] for row in rec["distributed"]}
-    assert {"bulk_c1", "pipelined_c2", "rdma_c1", "fused_c1"} <= dist_impls
+    assert {"bulk_c1", "pipelined_c2", "rdma_c1", "fused_c1",
+            "bulk_c1_dropless", "pipelined_c2_dropless",
+            "rdma_c1_dropless", "fused_c1_dropless"} <= dist_impls
     decode_impls = {row["impl"] for row in rec["decode"]}
     assert {"decode_gather", "decode_bulk", "decode_pipelined",
-            "decode_rdma"} <= decode_impls
+            "decode_rdma", "decode_bulk_dropless",
+            "decode_pipelined_dropless",
+            "decode_rdma_dropless"} <= decode_impls
     assert all(row["us"] > 0 for row in
                rec["local"] + rec["distributed"] + rec["decode"])
+    # every EP row carries the plan accounting; dropless rows must be
+    # drop-free and payload can never exceed the static buffer
+    for row in rec["distributed"] + rec["decode"]:
+        if row["impl"] == "decode_gather":
+            continue                     # no exchange, no accounting
+        assert row["payload_bytes"] <= row["buffer_bytes"], row
+        if row["impl"].endswith("_dropless"):
+            assert row["dropped_tokens"] == 0, row

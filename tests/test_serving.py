@@ -299,17 +299,22 @@ def test_engine_bitwise_matches_reference_world4_ep():
             refills[s.slot] = refills.get(s.slot, 0) + 1
         assert max(refills.values()) > 1, (axes, impl)
         print(f"{axes} {impl} OK steps={eng.metrics.decode_steps}")
-    # the EP capacity guard: at capacity_factor=1.0 a 16-slot engine
-    # can drop tokens on a hot expert -> constructor must warn
+    # the EP capacity guard applies to EXPLICITLY capacity-mode engines
+    # only: at capacity_factor=1.0 / dropless=False a 16-slot engine can
+    # drop tokens on a hot expert -> constructor must warn. The dropless
+    # spec (mixtral default) builds dropless decode plans, so the guard
+    # is structurally unreachable -> no warning, any slot count.
     import warnings, dataclasses
+    assert cfg.moe.dropless
     cfg_low = dataclasses.replace(
-        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0,
+                                     dropless=False))
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         ServingEngine(cfg_low, params, slots=16, seq_budget=budget,
                       pctx=pctx, mesh=mesh)
         ServingEngine(cfg, params, slots=16, seq_budget=budget,
-                      pctx=pctx, mesh=mesh)   # cf=4.0: no warning
+                      pctx=pctx, mesh=mesh)   # dropless: no warning
     msgs = [str(x.message) for x in w]
     assert any("can drop tokens" in m for m in msgs), msgs
     assert sum("can drop tokens" in m for m in msgs) == 1, msgs

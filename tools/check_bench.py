@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""Bench-drift gate: diff fresh ``--smoke`` bench JSON against the
+committed ``BENCH_latency.json`` / ``BENCH_serving.json`` baselines.
+
+Absolute smoke wall-times are meaningless (tiny shapes, few iters, CPU
+interpret mode), so the gate checks the RELATIVE shape of the record,
+not absolute speed:
+
+  * coverage — every impl with a committed row still produces a fresh
+    row (a silently dropped bench section is a regression);
+  * ratios — within each section, the per-impl median ``us`` normalized
+    to the section's reference impl must not exceed ``--threshold``
+    (default 2x) times the committed ratio (catches an impl suddenly
+    becoming pathologically slow relative to its peers);
+  * structure — every ``us`` finite and positive; every ``*_dropless``
+    row carries ``dropped_tokens == 0`` (the dropless invariant, wired
+    through the plan accounting in bench_latency); wherever exchange
+    accounting is present, ``payload_bytes <= buffer_bytes``;
+  * serving — both scheduler modes present and every fresh row still
+    reports ``identical: true`` (the bitwise greedy-stream contract)
+    with positive throughput.
+
+Usage::
+
+    python tools/check_bench.py
+    python tools/check_bench.py --latency-json fresh_lat.json \
+        --serving-json fresh_srv.json
+
+With no ``--*-json`` arguments the smoke benches are run to produce the
+fresh records (same commands as ``make bench-smoke``); with them, the
+gate runs offline on pre-generated files (that is how the unit tests
+drive it). Exits 1 listing every failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# per-section normalization anchor: ratios are taken vs this impl. The
+# decode anchor is the bulk EP path, not the local gather baseline —
+# EP decode rows are exchange-overhead-dominated while gather scales
+# with batch, so a gather anchor would make the ratio swing with the
+# smoke-vs-full shape gap instead of with real regressions.
+REFERENCE = {"local": "packed", "distributed": "bulk_c1",
+             "decode": "decode_bulk"}
+
+
+def _median_us_by_impl(rows):
+    agg: dict[str, list[float]] = {}
+    for r in rows:
+        agg.setdefault(r["impl"], []).append(float(r["us"]))
+    return {i: sorted(v)[len(v) // 2] for i, v in agg.items()}
+
+
+def check_latency(committed: dict, fresh: dict,
+                  threshold: float = 2.0) -> list[str]:
+    """Failure strings for a fresh bench_latency record vs the baseline."""
+    errs = []
+    for section, ref in REFERENCE.items():
+        old = _median_us_by_impl(committed.get(section, []))
+        new = _median_us_by_impl(fresh.get(section, []))
+        for impl in sorted(set(old) - set(new)):
+            errs.append(f"latency/{section}: impl '{impl}' has committed "
+                        "rows but no fresh row (bench coverage lost)")
+        if ref not in old or ref not in new:
+            if old or new:
+                errs.append(f"latency/{section}: reference impl '{ref}' "
+                            "missing; cannot normalize ratios")
+            continue
+        if not (old[ref] > 0 and new[ref] > 0):
+            continue        # the structural pass below flags the bad us
+        for impl in sorted(set(old) & set(new) - {ref}):
+            r_old = old[impl] / old[ref]
+            r_new = new[impl] / new[ref]
+            if r_new > threshold * r_old:
+                errs.append(
+                    f"latency/{section}: '{impl}' regressed vs '{ref}': "
+                    f"ratio {r_new:.2f}x (baseline {r_old:.2f}x, "
+                    f"threshold {threshold:g}x)")
+    for section in ("local", "distributed", "decode"):
+        for r in fresh.get(section, []):
+            us = float(r.get("us", -1.0))
+            if not (math.isfinite(us) and us > 0):
+                errs.append(f"latency/{section}: row '{r.get('impl')}' "
+                            f"has invalid us={r.get('us')!r}")
+            if r["impl"].endswith("_dropless") \
+                    and r.get("dropped_tokens") != 0:
+                errs.append(
+                    f"latency/{section}: dropless row '{r['impl']}' "
+                    f"reports dropped_tokens="
+                    f"{r.get('dropped_tokens')!r} (must be 0)")
+            if "payload_bytes" in r and "buffer_bytes" in r \
+                    and r["payload_bytes"] > r["buffer_bytes"]:
+                errs.append(
+                    f"latency/{section}: row '{r['impl']}' ships fewer "
+                    f"buffer bytes ({r['buffer_bytes']}) than its "
+                    f"payload ({r['payload_bytes']})")
+    return errs
+
+
+def check_serving(committed: dict, fresh: dict) -> list[str]:
+    """Failure strings for a fresh bench_serving record vs the baseline."""
+    errs = []
+    old_modes = {r["mode"] for r in committed.get("rows", [])}
+    new_modes = {r["mode"] for r in fresh.get("rows", [])}
+    for mode in sorted(old_modes - new_modes):
+        errs.append(f"serving: mode '{mode}' has a committed row but no "
+                    "fresh row")
+    for r in fresh.get("rows", []):
+        if r.get("identical") is not True:
+            errs.append(f"serving: mode '{r.get('mode')}' lost the "
+                        "bitwise fixed-batch equivalence "
+                        f"(identical={r.get('identical')!r})")
+        if not float(r.get("tok_s", 0)) > 0:
+            errs.append(f"serving: mode '{r.get('mode')}' has invalid "
+                        f"tok_s={r.get('tok_s')!r}")
+    return errs
+
+
+def _run_smoke(module: str, out: Path) -> None:
+    cmd = [sys.executable, "-m", module, "--smoke", str(out)]
+    r = subprocess.run(cmd, cwd=REPO, text=True, capture_output=True,
+                       env={**__import__("os").environ,
+                            "PYTHONPATH": str(REPO / "src")})
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"{' '.join(cmd)} failed ({r.returncode}):\n{r.stderr}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="max allowed fresh/committed ratio blow-up")
+    ap.add_argument("--latency-json", default=None,
+                    help="pre-generated fresh bench_latency record "
+                         "(skips running the smoke bench)")
+    ap.add_argument("--serving-json", default=None,
+                    help="pre-generated fresh bench_serving record")
+    args = ap.parse_args(argv)
+
+    errs = []
+    with tempfile.TemporaryDirectory() as td:
+        jobs = [("BENCH_latency.json", args.latency_json,
+                 "benchmarks.bench_latency", check_latency,
+                 {"threshold": args.threshold}),
+                ("BENCH_serving.json", args.serving_json,
+                 "benchmarks.bench_serving", check_serving, {})]
+        for committed_name, fresh_path, module, checker, kw in jobs:
+            committed_file = REPO / committed_name
+            if not committed_file.is_file():
+                errs.append(f"missing committed baseline {committed_name}")
+                continue
+            committed = json.loads(committed_file.read_text())
+            if fresh_path is None:
+                fresh_path = Path(td) / f"fresh_{committed_name}"
+                print(f"check_bench: running {module} --smoke ...",
+                      file=sys.stderr)
+                _run_smoke(module, fresh_path)
+            fresh = json.loads(Path(fresh_path).read_text())
+            errs.extend(checker(committed, fresh, **kw))
+
+    if errs:
+        print("\n".join(errs), file=sys.stderr)
+        print(f"check_bench: {len(errs)} failure(s)", file=sys.stderr)
+        return 1
+    print("check_bench: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
