@@ -10,7 +10,14 @@ served twice through the SAME slot count:
   * **continuous** — ``serving.ServingEngine``: freed slots refill from
     the queue between decode steps.
 
-Both rows record decode steps, slot occupancy and an ``identical`` flag:
+A third row, **continuous_paged**, serves a heterogeneous-prompt-length
+workload through the engine's paged KV cache on a page pool smaller
+than the monolithic ``slots x seq_budget`` reservation, with chunked
+prompt admission — its ``memory_per_request`` / ``kv_bytes`` fields are
+the paging win, and ``identical`` (vs per-length fixed-batch reference
+groups) certifies the bitwise contract survives paging.
+
+All rows record decode steps, slot occupancy and an ``identical`` flag:
 per-request greedy token streams must be bitwise-identical to a one-shot
 fixed-batch reference holding ALL requests (row-independence of the
 decode math — the property tests/test_serving.py enforces). Fewer
@@ -38,7 +45,9 @@ import numpy as np
 import jax
 
 from repro.launch.serve import build_serving_setup, poisson_arrivals
-from repro.serving import (BatchedServer, run_continuous_workload,
+from repro.models.serve import cache_len_for, supports_paging
+from repro.serving import (BatchedServer, grouped_reference_streams,
+                           pages_for_len, run_continuous_workload,
                            run_static_workload)
 
 
@@ -100,7 +109,69 @@ def run_benchmark(args):
         rows.append(row)
         print(f"{mode:11s} steps={steps:4d} tokens={tokens:4d} "
               f"identical={row['identical']}", file=sys.stderr)
+    if supports_paging(cfg):
+        rows.append(run_paged_row(args, cfg, mesh, pctx, params))
     return rows
+
+
+def run_paged_row(args, cfg, mesh, pctx, params):
+    """The memory-per-request row: a HETEROGENEOUS-length workload on a
+    page pool deliberately smaller than the monolithic
+    ``slots x seq_budget`` reservation, with chunked prompt admission.
+    The reference is per-length fixed batches
+    (``grouped_reference_streams``) — ``identical`` certifies the paged
+    + chunked engine reproduces every stream bitwise while using less
+    KV memory than the old worst-case cache."""
+    rng = np.random.default_rng(args.seed + 1)
+    plens = rng.integers(args.hetero_lo, args.hetero_hi + 1,
+                         args.requests)
+    prompts = [rng.integers(0, cfg.vocab, (int(L),)).astype(np.int32)
+               for L in plens]
+    max_new = rng.integers(args.max_new_lo, args.max_new_hi + 1,
+                           args.requests).astype(int)
+    arrivals = poisson_arrivals(rng, args.requests, args.arrival_rate)
+    seq_budget = int(max(plens)) + int(max(max_new))
+    C = cache_len_for(cfg, seq_budget)
+    ps = args.page_size
+    per_slot = pages_for_len(C, ps)
+    per_req = pages_for_len(min(seq_budget, C), ps)
+    # 3/4 of memory parity (floored at one worst-case request) + scratch
+    kv_pages = args.kv_pages or \
+        max(per_req, 3 * args.slots * per_slot // 4) + 1
+    expected = grouped_reference_streams(
+        cfg, params, pctx, mesh, prompts, max_new,
+        seq_budget=seq_budget, eos=args.eos)
+    outs, steps, dt, summary = run_continuous_workload(
+        cfg, params, pctx, mesh, prompts, max_new, arrivals,
+        slots=args.slots, seq_budget=seq_budget, eos=args.eos,
+        page_size=ps, kv_pages=kv_pages,
+        prefill_chunk=args.prefill_chunk)
+    tokens = sum(len(o) for o in outs)
+    kv = summary["kv"]
+    row = {
+        "mode": "continuous_paged", "requests": args.requests,
+        "slots": args.slots, "decode_steps": int(steps),
+        "prefill_steps": summary["prefill_steps"],
+        "tokens": int(tokens),
+        "identical": outs == expected,
+        "wall_s": round(dt, 3),
+        "tok_s": round(tokens / dt, 1) if dt > 0 else 0.0,
+        "slot_occupancy": summary["slot_occupancy"],
+        "prompt_lens": [int(L) for L in plens],
+        "page_size": kv["page_size"], "kv_pages": kv["kv_pages"],
+        "page_occupancy": kv["page_occupancy"],
+        "kv_bytes": kv["kv_bytes"],
+        "kv_bytes_monolithic": kv["kv_bytes_monolithic"],
+        "memory_per_request": round(kv["kv_bytes"] / args.requests, 1),
+    }
+    if args.ep > 1:
+        row["ep"] = args.ep
+        row["dist_impl"] = args.dist_impl
+    print(f"{'cont_paged':11s} steps={steps:4d} tokens={tokens:4d} "
+          f"identical={row['identical']} "
+          f"kv={kv['kv_bytes']}/{kv['kv_bytes_monolithic']}B",
+          file=sys.stderr)
+    return row
 
 
 def main(argv=None):
@@ -125,11 +196,25 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ep", type=int, default=1)
     ap.add_argument("--dist-impl", default="pipelined")
+    ap.add_argument("--hetero-lo", type=int, default=4,
+                    help="min prompt length of the paged row's "
+                         "heterogeneous workload")
+    ap.add_argument("--hetero-hi", type=int, default=28)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="page pool for the paged row (0: 3/4 of the "
+                         "monolithic reservation, to show the saving)")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     args = ap.parse_args(argv)
     args.reduced = not args.full    # build_serving_setup's knob
     if args.smoke:
         args.requests, args.slots = 6, 2
         args.prompt_len, args.max_new_lo, args.max_new_hi = 8, 2, 6
+        args.hetero_lo, args.hetero_hi = 4, 12
+        # small pages so the pool (scratch included) still undercuts the
+        # tiny monolithic cache; chunk == page_size exercises the
+        # chunk-boundary == page-boundary case
+        args.page_size, args.prefill_chunk = 4, 4
 
     rows = run_benchmark(args)
     rec = {

@@ -46,7 +46,7 @@ from repro.launch.steps import make_pctx
 from repro.models.model import init_params
 # BatchedServer lives in repro.serving.static now; re-exported here for
 # the old import path.
-from repro.serving import (BatchedServer, ServingEngine,
+from repro.serving import (BatchedServer, DEFAULT_PAGE_SIZE, ServingEngine,
                            run_continuous_workload, run_static_workload,
                            write_json)
 
@@ -110,6 +110,16 @@ def main(argv=None):
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals per decode step on the "
                          "virtual clock (0: all requests arrive at once)")
+    ap.add_argument("--page-size", type=int, default=DEFAULT_PAGE_SIZE,
+                    help="KV page size in cache rows (paged archs only)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="total KV pages in the shared pool, scratch "
+                         "included (0: memory parity with the monolithic "
+                         "slots x seq_budget cache)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="split prompts longer than this into chunked "
+                         "admissions so decode keeps stepping during a "
+                         "long prefill (0: one-shot prefill)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--static", action="store_true",
                     help="run the fixed-batch baseline instead of the "
@@ -144,7 +154,9 @@ def main(argv=None):
     else:
         outs, _, dt, stats = run_continuous_workload(
             cfg, params, pctx, mesh, prompts, max_new, arrivals,
-            slots=slots, seq_budget=seq_budget, eos=args.eos)
+            slots=slots, seq_budget=seq_budget, eos=args.eos,
+            page_size=args.page_size, kv_pages=args.kv_pages,
+            prefill_chunk=args.prefill_chunk)
         summary = {"mode": "continuous", **stats}
     total = sum(len(o) for o in outs)
     print(f"served {args.requests} requests ({summary['mode']}, "
@@ -155,6 +167,13 @@ def main(argv=None):
         print(f"occupancy {summary['slot_occupancy']:.0%}, "
               f"mean TTFT {summary['ttft_s']['mean'] * 1e3:.0f}ms, "
               f"mean TPOT {summary['tpot_s']['mean'] * 1e3:.1f}ms")
+    if summary.get("kv", {}).get("paged"):
+        kvs = summary["kv"]
+        print(f"paged KV: {kvs['kv_pages']} pages x {kvs['page_size']} "
+              f"rows, peak {kvs['peak_pages']} "
+              f"({kvs['page_occupancy']:.0%} of pool), "
+              f"{kvs['kv_bytes']} B vs {kvs['kv_bytes_monolithic']} B "
+              "monolithic")
     print("sample:", outs[0][:8])
     if args.metrics_out:
         write_json(args.metrics_out, summary)

@@ -170,19 +170,11 @@ def _cv_bwd(causal, q_offset, kv_chunk, Skv, Sq, res, dout):
 _chunked_attn_cv.defvjp(_cv_fwd, _cv_bwd)
 
 
-def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                      causal: bool = True, window: int = 0,
-                      q_offset: int = 0, kv_chunk: int = 1024,
-                      scale: Optional[float] = None) -> jax.Array:
-    """Flash-style attention over KV chunks (no S x S materialization),
-    with a FlashAttention-2 custom VJP (recompute-in-backward) so training
-    memory stays O(S * kv_chunk) per layer.
-
-    q: (B, Sq, nq, hd); k/v: (B, Skv, nkv, hd); nq % nkv == 0.
-    ``window`` > 0 enables sliding-window masking (Mistral/gemma3-local);
-    it may be a traced per-layer value (local:global interleave).
-    ``q_offset`` is the absolute position of q[0] (prefill continuation).
-    """
+def _chunk_prep(q, k, v, kv_chunk: int, scale):
+    """Shared pre-processing for the chunked forwards: scale q, pad KV to
+    a chunk multiple, split into scan-ordered chunks. Kept in ONE place
+    so the grad (`chunked_attention`) and forward-only
+    (`chunked_attention_nograd`) entry points stay bitwise-identical."""
     B, Sq, nq, hd = q.shape
     Skv, nkv = k.shape[1], k.shape[2]
     dv = v.shape[-1]  # may differ from hd (MLA: k=192, v=128)
@@ -202,9 +194,50 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, Sq, nkv, g, hd)
     kc = k.reshape(B, n_chunks, kv_chunk, nkv, hd).swapaxes(0, 1)
     vc = v.reshape(B, n_chunks, kv_chunk, nkv, dv).swapaxes(0, 1)
+    return qf, kc, vc, kv_chunk, Skv
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      q_offset: int = 0, kv_chunk: int = 1024,
+                      scale: Optional[float] = None) -> jax.Array:
+    """Flash-style attention over KV chunks (no S x S materialization),
+    with a FlashAttention-2 custom VJP (recompute-in-backward) so training
+    memory stays O(S * kv_chunk) per layer.
+
+    q: (B, Sq, nq, hd); k/v: (B, Skv, nkv, hd); nq % nkv == 0.
+    ``window`` > 0 enables sliding-window masking (Mistral/gemma3-local);
+    it may be a traced per-layer value (local:global interleave).
+    ``q_offset`` is the absolute position of q[0] (prefill continuation);
+    STATIC here (it sits in the custom_vjp's nondiff_argnums) — use
+    ``chunked_attention_nograd`` when it must be traced.
+    """
+    B, Sq, nq, _ = q.shape
+    dv = v.shape[-1]
+    qf, kc, vc, kv_chunk, Skv = _chunk_prep(q, k, v, kv_chunk, scale)
     window_arg = jnp.asarray(window, jnp.int32)
     out = _chunked_attn_cv(qf, kc, vc, window_arg, causal, q_offset,
                            kv_chunk, Skv, Sq)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, nq, dv)
+
+
+def chunked_attention_nograd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             causal: bool = True, window: int = 0,
+                             q_offset=0, kv_chunk: int = 1024,
+                             scale: Optional[float] = None) -> jax.Array:
+    """Forward-only `chunked_attention` whose ``q_offset`` may be a
+    TRACED scalar. Chunked prefill attends each prompt chunk at a
+    runtime offset into the same C-length cache; routing around the
+    custom_vjp (where q_offset is static) lets one compiled program
+    serve every chunk position. Bitwise-identical forward math: both
+    entry points share `_chunk_prep` + `_chunked_attn_fwd`.
+    """
+    B, Sq, nq, _ = q.shape
+    dv = v.shape[-1]
+    qf, kc, vc, kv_chunk, Skv = _chunk_prep(q, k, v, kv_chunk, scale)
+    out, _ = _chunked_attn_fwd(qf, kc, vc, jnp.asarray(window, jnp.int32),
+                               causal=causal, q_offset=q_offset,
+                               kv_chunk=kv_chunk, Skv=Skv, Sq=Sq)
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, nq, dv)
 
 

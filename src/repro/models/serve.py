@@ -22,7 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.attention import (chunked_attention, decode_attention,
+from repro.models.attention import (chunked_attention,
+                                    chunked_attention_nograd,
+                                    decode_attention, mla_expand_kv,
                                     rope_any, _project_qkv)
 from repro.models.layers import apply_rope, rms_norm
 from repro.models.model import (LOCAL, ParallelContext, _apply_ffn, _embed,
@@ -37,6 +39,30 @@ def cache_len_for(cfg: ArchConfig, seq_budget: int) -> int:
     if cfg.window > 0 and cfg.local_global_ratio == 0:
         return min(cfg.window, seq_budget)
     return seq_budget
+
+
+# cache leaves indexed by sequence position — the ones a paged cache
+# moves into the shared page pool (SSM/conv/token-shift state is O(1)
+# per slot and stays slot-indexed)
+SEQ_CACHE_KEYS = ("k", "v", "ckv", "kr")
+
+
+def supports_paging(cfg: ArchConfig) -> bool:
+    """Paged KV applies to sequence-indexed caches. RWKV has none, and
+    whisper's cross K/V is encoder-shaped (not grown per token)."""
+    return not (cfg.attention_free or cfg.enc_dec)
+
+
+def supports_chunked_prefill(cfg: ArchConfig, prompt_len: int,
+                             seq_budget: int) -> bool:
+    """Chunked admission is valid when per-chunk math reproduces the
+    one-shot padded prefill bitwise: the cache must cover the whole
+    prompt (no SWA ring rewrite mid-prompt), state must be per-token
+    independent (no SSM/recurrent carry across chunks), and there must
+    be no encoder coupling."""
+    if cfg.attention_free or cfg.enc_dec or cfg.hybrid_parallel:
+        return False
+    return prompt_len <= cache_len_for(cfg, seq_budget)
 
 
 def _layer_cache_spec(cfg: ArchConfig, batch: int, C: int, dtype):
@@ -91,7 +117,62 @@ def init_cache(cfg: ArchConfig, batch: int, seq_budget: int,
     return cache
 
 
+def init_paged_cache(cfg: ArchConfig, slots: int, seq_budget: int,
+                     dtype=jnp.float32, *, num_pages: int, page_size: int):
+    """Paged decode cache: sequence leaves become ONE shared
+    (num_pages, page_size, ...) pool per layer instead of per-slot
+    (slots, C, ...) reservations; ``cache["pages"]`` is the rectangular
+    (slots, ceil(C / page_size)) page table (0 = the scratch page) the
+    decode path gathers through. Slot-state leaves (SSM state etc.) and
+    ``pos`` stay slot-indexed exactly as in the monolithic cache."""
+    C = cache_len_for(cfg, seq_budget)
+    n_front = cfg.moe.first_k_dense if cfg.moe else 0
+    n_scan = cfg.n_layers - n_front
+    max_pages = -(-C // page_size)
+
+    def make(key, shape_dtype, lead):
+        shape, dt = shape_dtype
+        if key in SEQ_CACHE_KEYS:
+            shape = (num_pages, page_size) + tuple(shape[2:])
+        full = (lead, *shape) if lead else shape
+        return jnp.zeros(full, dt)
+
+    layer_spec = _layer_cache_spec(cfg, slots, C, dtype)
+    return {
+        "pos": jnp.zeros((slots,), jnp.int32),
+        "pages": jnp.zeros((slots, max_pages), jnp.int32),
+        "layers": {k: make(k, v, n_scan) for k, v in layer_spec.items()},
+        "front": [{k: make(k, v, 0) for k, v in layer_spec.items()}
+                  for _ in range(n_front)],
+    }
+
+
 # ------------------------------------------------------------- decode ----
+def _paged_view(pool, pages, C: int):
+    """Gather a slot-major (B, C, ...) cache view out of the page pool.
+
+    pool: (P, ps, ...); pages: (B, max_pages) table, scratch-padded.
+    The view has EXACTLY the monolithic cache's shape, so the decode
+    attention that runs on it is the same program with the same
+    reduction length — the property the bitwise contract needs."""
+    ps = pool.shape[1]
+    B, mp = pages.shape
+    flat = pool.reshape((pool.shape[0] * ps,) + pool.shape[2:])
+    idx = (pages[:, :, None] * ps
+           + jnp.arange(ps, dtype=pages.dtype)[None, None, :])
+    return flat[idx.reshape(B, mp * ps)[:, :C]]
+
+
+def _paged_scatter_row(pool, pages, slot_pos, row):
+    """Persist one decode row per slot into its page:
+    pool[pages[b, slot_pos // ps], slot_pos % ps] <- row[b].
+    Rows of slots whose page table entry is scratch (free slots, chunked
+    admissions in flight) land in page 0 and are never read unmasked."""
+    ps = pool.shape[1]
+    pid = jnp.take_along_axis(pages, (slot_pos // ps)[:, None], axis=1)[:, 0]
+    flat = pool.reshape((pool.shape[0] * ps,) + pool.shape[2:])
+    flat = flat.at[pid * ps + slot_pos % ps].set(row.astype(pool.dtype))
+    return flat.reshape(pool.shape)
 def _row_update(cache_row, update_row, start):
     """One sequence's cache update: (C, ...) <- (1, ...) at ``start``.
     vmapped over the batch so every slot writes at its OWN position —
@@ -102,9 +183,18 @@ def _row_update(cache_row, update_row, start):
 
 
 def _attn_decode(cfg: ArchConfig, p_layer, h, cache_l, pos, is_global,
-                 pctx: ParallelContext):
+                 pctx: ParallelContext, pages=None, view_len=None):
     """h: (B, 1, H); pos: (B,) per-row positions.
-    Returns (attn_out (B,1,H), new cache slices)."""
+    Returns (attn_out (B,1,H), new cache slices).
+
+    With ``pages``/``view_len`` set, ``cache_l``'s sequence leaves are
+    page pools: the slot-major view is gathered (`_paged_view`), the new
+    row is spliced into the view with the SAME vmapped `_row_update` the
+    monolithic path uses, and attention runs on that view — identical
+    shapes, identical operand values at every unmasked position, so the
+    paged engine's streams stay bitwise-equal to the monolithic
+    fixed-batch reference. Persistence is a separate per-row scatter
+    into the pool."""
     B = h.shape[0]
     theta, window = _layer_theta_window(cfg, is_global)
     new = {}
@@ -123,10 +213,20 @@ def _attn_decode(cfg: ArchConfig, p_layer, h, cache_l, pos, is_global,
         kr = jnp.einsum("bsh,hr->bsr", h, p_layer["attn"]["w_kr"],
                         preferred_element_type=jnp.float32).astype(h.dtype)
         kr = apply_rope(kr[:, :, None, :], pos_b, cfg.rope_theta)[:, :, 0]
-        ckv_c = jax.vmap(_row_update)(cache_l["ckv"], ckv, pos)
-        kr_c = jax.vmap(_row_update)(cache_l["kr"], kr, pos)
-        new["ckv"], new["kr"] = ckv_c, kr_c
-        from repro.models.attention import mla_expand_kv
+        if pages is None:
+            ckv_c = jax.vmap(_row_update)(cache_l["ckv"], ckv, pos)
+            kr_c = jax.vmap(_row_update)(cache_l["kr"], kr, pos)
+            new["ckv"], new["kr"] = ckv_c, kr_c
+        else:
+            slot = pos % view_len    # == pos for MLA (no SWA), ring-safe
+            ckv_c = jax.vmap(_row_update)(
+                _paged_view(cache_l["ckv"], pages, view_len), ckv, slot)
+            kr_c = jax.vmap(_row_update)(
+                _paged_view(cache_l["kr"], pages, view_len), kr, slot)
+            new["ckv"] = _paged_scatter_row(cache_l["ckv"], pages, slot,
+                                            ckv[:, 0])
+            new["kr"] = _paged_scatter_row(cache_l["kr"], pages, slot,
+                                           kr[:, 0])
         k, v = mla_expand_kv(p_layer["attn"], ckv_c, kr_c, cfg.n_heads,
                              m.qk_nope, m.v_head)
         o = decode_attention(q, k, v, kv_len=pos + 1,
@@ -140,11 +240,23 @@ def _attn_decode(cfg: ArchConfig, p_layer, h, cache_l, pos, is_global,
         if cfg.pos_emb == "rope":
             q = rope_any(q, pos_b, theta)
             k = rope_any(k, pos_b, theta)
-        C = cache_l["k"].shape[1]
-        slot = pos % C  # ring buffer when C < seq budget (uniform SWA)
-        k_c = jax.vmap(_row_update)(cache_l["k"], k, slot)
-        v_c = jax.vmap(_row_update)(cache_l["v"], v, slot)
-        new["k"], new["v"] = k_c, v_c
+        if pages is None:
+            C = cache_l["k"].shape[1]
+            slot = pos % C  # ring buffer when C < seq budget (uniform SWA)
+            k_c = jax.vmap(_row_update)(cache_l["k"], k, slot)
+            v_c = jax.vmap(_row_update)(cache_l["v"], v, slot)
+            new["k"], new["v"] = k_c, v_c
+        else:
+            C = view_len
+            slot = pos % C
+            k_c = jax.vmap(_row_update)(
+                _paged_view(cache_l["k"], pages, C), k, slot)
+            v_c = jax.vmap(_row_update)(
+                _paged_view(cache_l["v"], pages, C), v, slot)
+            new["k"] = _paged_scatter_row(cache_l["k"], pages, slot,
+                                          k[:, 0])
+            new["v"] = _paged_scatter_row(cache_l["v"], pages, slot,
+                                          v[:, 0])
         kv_len = jnp.minimum(pos + 1, C)
         win = jnp.where(jnp.asarray(C) == cfg.window, 0, window)
         o = decode_attention(q[:, 0], k_c, v_c, kv_len=kv_len, window=win)
@@ -156,7 +268,7 @@ def _attn_decode(cfg: ArchConfig, p_layer, h, cache_l, pos, is_global,
 
 def _block_decode(cfg: ArchConfig, p_layer, x, cache_l, pos, is_global,
                   pctx: ParallelContext, p_cross=None, p_cnorm=None,
-                  cross_kv=None):
+                  cross_kv=None, pages=None, view_len=None):
     """x: (B, 1, H) -> (x, new cache slices)."""
     B = x.shape[0]
     new: Dict[str, Any] = {}
@@ -175,7 +287,8 @@ def _block_decode(cfg: ArchConfig, p_layer, x, cache_l, pos, is_global,
 
     h = _norm(cfg, p_layer["norm1"], x)
     attn_out, new_attn = _attn_decode(cfg, p_layer, h, cache_l, pos,
-                                      is_global, pctx)
+                                      is_global, pctx, pages=pages,
+                                      view_len=view_len)
     new.update(new_attn)
     if cfg.hybrid_parallel:
         ssm_out, ssm_state, conv_state = mamba_mixer(
@@ -201,7 +314,8 @@ def _block_decode(cfg: ArchConfig, p_layer, x, cache_l, pos, is_global,
 
 
 def decode_step(cfg: ArchConfig, params, cache, tokens: jax.Array,
-                pctx: ParallelContext = LOCAL):
+                pctx: ParallelContext = LOCAL,
+                view_len: Optional[int] = None):
     """One token for every sequence. tokens: (B,). Returns (logits, cache).
 
     ``cache["pos"]`` is either a scalar (every sequence at the same
@@ -209,9 +323,15 @@ def decode_step(cfg: ArchConfig, params, cache, tokens: jax.Array,
     positions (the continuous-batching engine: slots admitted at
     different steps decode together). The scalar form is broadcast, so
     both run the identical vectorized program.
+
+    A cache carrying ``"pages"`` (from ``init_paged_cache``) decodes
+    through per-slot page tables; ``view_len`` must then be the static
+    monolithic cache length C = ``cache_len_for(cfg, seq_budget)`` the
+    gathered view is sliced to.
     """
     B = tokens.shape[0]
     stored = cache["pos"]
+    pages = cache.get("pages")
     pos = jnp.broadcast_to(jnp.reshape(stored, (-1,)), (B,))
     x = params["embed"][tokens][:, None, :]  # (B, 1, H)
     if cfg.pos_emb == "sinusoidal":
@@ -220,7 +340,7 @@ def decode_step(cfg: ArchConfig, params, cache, tokens: jax.Array,
     new_front = []
     for p_layer, c_l in zip(params.get("front", []), cache["front"]):
         x, nc = _block_decode(cfg, p_layer, x, c_l, pos, jnp.asarray(False),
-                              pctx)
+                              pctx, pages=pages, view_len=view_len)
         new_front.append(nc)
 
     n_front = len(new_front)
@@ -234,7 +354,8 @@ def decode_step(cfg: ArchConfig, params, cache, tokens: jax.Array,
                                   pctx, p_cross, p_cnorm, (ck, cv))
         else:
             p_layer, c_l, is_global = xs
-            x, nc = _block_decode(cfg, p_layer, x, c_l, pos, is_global, pctx)
+            x, nc = _block_decode(cfg, p_layer, x, c_l, pos, is_global,
+                                  pctx, pages=pages, view_len=view_len)
         return x, nc
 
     xs = (params["layers"], cache["layers"], flags)
@@ -359,8 +480,33 @@ def _block_prefill(cfg: ArchConfig, p_layer, x, is_global, pctx,
             ckv, ((0, 0), (0, C - S), (0, 0))).astype(dtype)
         new["kr"] = kr[:, -C:].astype(dtype) if S >= C else jnp.pad(
             kr, ((0, 0), (0, C - S), (0, 0))).astype(dtype)
-        from repro.models.model import _attn_branch
-        attn_out = _attn_branch(cfg, p_layer, h, is_global, pctx)
+        from repro.models.model import heads_tp_mode, sp_constrain
+        if S <= C:
+            # Attend through the C-length latent cache slice (q built
+            # exactly as mla_attention builds it): one-shot prefill and
+            # chunked admission then read bitwise-identical operands of
+            # identical shape — the causal mask hides the zero tail.
+            q = jnp.einsum("bsh,hd->bsd", h,
+                           p_layer["attn"]["wq"]).astype(h.dtype)
+            q = q.reshape(B, S, cfg.n_heads, m.qk_nope + m.qk_rope)
+            q_n, q_r = q[..., :m.qk_nope], q[..., m.qk_nope:]
+            q_r = apply_rope(q_r, jnp.arange(S)[None], cfg.rope_theta)
+            q = jnp.concatenate([q_n, q_r], axis=-1)
+            k, v = mla_expand_kv(p_layer["attn"], new["ckv"], new["kr"],
+                                 cfg.n_heads, m.qk_nope, m.v_head)
+            heads_tp = heads_tp_mode(cfg, pctx)
+            if not heads_tp:
+                q = sp_constrain(q, pctx)
+            o = chunked_attention_nograd(
+                q, k, v, causal=True, kv_chunk=pctx.kv_chunk,
+                scale=(m.qk_nope + m.qk_rope) ** -0.5)
+            if not heads_tp:
+                o = sp_constrain(o, pctx)
+            o = o.reshape(B, S, cfg.n_heads * m.v_head).astype(x.dtype)
+            attn_out = jnp.einsum("bsd,dh->bsh", o, p_layer["attn"]["wo"])
+        else:
+            from repro.models.model import _attn_branch
+            attn_out = _attn_branch(cfg, p_layer, h, is_global, pctx)
     else:
         q, k, v = _project_qkv(p_layer["attn"], h, cfg.n_heads,
                                cfg.n_kv_heads, cfg.head_dim_,
@@ -371,13 +517,22 @@ def _block_prefill(cfg: ArchConfig, p_layer, x, is_global, pctx,
             k = rope_any(k, pos, theta)
         new["k"], new["v"] = collect_kv(k, v)  # cache keeps n_kv heads
         from repro.models.model import heads_tp_mode, sp_constrain
+        if S <= C:
+            # attend the C-padded cache-layout K/V (cast to the cache
+            # dtype): the exact operands and reduction shape the chunked
+            # admission path reads back, making N-chunk prefill bitwise
+            # == one-shot (the causal mask hides the padded tail)
+            k_att, v_att = new["k"], new["v"]
+        else:
+            k_att, v_att = k, v      # SWA ring: attend the full prompt
         if heads_tp_mode(cfg, pctx) and cfg.n_heads != cfg.n_kv_heads:
             g = cfg.n_heads // cfg.n_kv_heads
-            k, v = jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2)
+            k_att = jnp.repeat(k_att, g, axis=2)
+            v_att = jnp.repeat(v_att, g, axis=2)
         elif not heads_tp_mode(cfg, pctx):
             q = sp_constrain(q, pctx)
-        o = chunked_attention(q, k, v, causal=True, window=window,
-                              kv_chunk=pctx.kv_chunk)
+        o = chunked_attention_nograd(q, k_att, v_att, causal=True,
+                                     window=window, kv_chunk=pctx.kv_chunk)
         o = o.reshape(B, S, cfg.n_heads * cfg.head_dim_).astype(x.dtype)
         attn_out = jnp.einsum("bsd,dh->bsh", o, p_layer["attn"]["wo"],
                               preferred_element_type=jnp.float32
@@ -403,3 +558,131 @@ def _block_prefill(cfg: ArchConfig, p_layer, x, is_global, pctx,
     h = _norm(cfg, p_layer["norm2"], x)
     y, _ = _apply_ffn(cfg, p_layer, h, pctx, decode=False)
     return x + y, new
+
+
+# ----------------------------------------------------- chunked prefill ----
+def _block_prefill_chunk(cfg: ArchConfig, p_layer, x, c_l, offset,
+                         is_global, pctx):
+    """One layer of chunked prefill: write the chunk's K/V into the
+    C-length cache at ``offset`` (traced), attend the chunk's queries
+    against the FULL cache. Not-yet-written rows are zeros — exactly
+    the padded tail one-shot prefill attends — and the causal mask
+    hides them, so every chunk reproduces the one-shot rows bitwise."""
+    B, Q, H = x.shape
+    theta, window = _layer_theta_window(cfg, is_global)
+    new: Dict[str, Any] = {}
+    h = _norm(cfg, p_layer["norm1"], x)
+    positions = offset + jnp.arange(Q)[None]
+    from repro.models.model import heads_tp_mode, sp_constrain
+    if cfg.mla is not None:
+        m = cfg.mla
+        ckv = jnp.einsum("bsh,hc->bsc", h, p_layer["attn"]["w_dkv"],
+                         preferred_element_type=jnp.float32).astype(h.dtype)
+        ckv = rms_norm(ckv, p_layer["attn"]["ckv_norm"])
+        kr = jnp.einsum("bsh,hr->bsr", h, p_layer["attn"]["w_kr"],
+                        preferred_element_type=jnp.float32).astype(h.dtype)
+        kr = apply_rope(kr[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            c_l["ckv"], ckv.astype(c_l["ckv"].dtype), offset, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            c_l["kr"], kr.astype(c_l["kr"].dtype), offset, axis=1)
+        new["ckv"], new["kr"] = ckv_c, kr_c
+        q = jnp.einsum("bsh,hd->bsd", h,
+                       p_layer["attn"]["wq"]).astype(h.dtype)
+        q = q.reshape(B, Q, cfg.n_heads, m.qk_nope + m.qk_rope)
+        q_n, q_r = q[..., :m.qk_nope], q[..., m.qk_nope:]
+        q_r = apply_rope(q_r, positions, cfg.rope_theta)
+        q = jnp.concatenate([q_n, q_r], axis=-1)
+        k, v = mla_expand_kv(p_layer["attn"], ckv_c, kr_c, cfg.n_heads,
+                             m.qk_nope, m.v_head)
+        heads_tp = heads_tp_mode(cfg, pctx)
+        if not heads_tp:
+            q = sp_constrain(q, pctx)
+        o = chunked_attention_nograd(
+            q, k, v, causal=True, q_offset=offset, kv_chunk=pctx.kv_chunk,
+            scale=(m.qk_nope + m.qk_rope) ** -0.5)
+        if not heads_tp:
+            o = sp_constrain(o, pctx)
+        o = o.reshape(B, Q, cfg.n_heads * m.v_head).astype(x.dtype)
+        attn_out = jnp.einsum("bsd,dh->bsh", o, p_layer["attn"]["wo"])
+    else:
+        q, k, v = _project_qkv(p_layer["attn"], h, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim_,
+                               qk_norm=cfg.qk_norm, use_rope=False)
+        if cfg.pos_emb == "rope":
+            q = rope_any(q, positions, theta)
+            k = rope_any(k, positions, theta)
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            c_l["k"], k.astype(c_l["k"].dtype), offset, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            c_l["v"], v.astype(c_l["v"].dtype), offset, axis=1)
+        new["k"], new["v"] = k_c, v_c
+        k_att, v_att = k_c, v_c
+        if heads_tp_mode(cfg, pctx) and cfg.n_heads != cfg.n_kv_heads:
+            g = cfg.n_heads // cfg.n_kv_heads
+            k_att = jnp.repeat(k_att, g, axis=2)
+            v_att = jnp.repeat(v_att, g, axis=2)
+        elif not heads_tp_mode(cfg, pctx):
+            q = sp_constrain(q, pctx)
+        o = chunked_attention_nograd(q, k_att, v_att, causal=True,
+                                     window=window, q_offset=offset,
+                                     kv_chunk=pctx.kv_chunk)
+        o = o.reshape(B, Q, cfg.n_heads * cfg.head_dim_).astype(x.dtype)
+        attn_out = jnp.einsum("bsd,dh->bsh", o, p_layer["attn"]["wo"],
+                              preferred_element_type=jnp.float32
+                              ).astype(x.dtype)
+    x = x + attn_out
+    h = _norm(cfg, p_layer["norm2"], x)
+    y, _ = _apply_ffn(cfg, p_layer, h, pctx, decode=False)
+    return x + y, new
+
+
+def prefill_chunk(cfg: ArchConfig, params, cache,
+                  tokens: jax.Array, offset, pctx: ParallelContext = LOCAL):
+    """Advance a batch-1 monolithic prefill cache by one prompt chunk.
+
+    ``cache``: C-shaped cache from ``init_cache`` (scalar ``pos``);
+    ``tokens``: (B, Q) chunk; ``offset``: absolute position of
+    tokens[:, 0] — a TRACED scalar, so ONE compiled program serves every
+    chunk position (shapes retrace only per distinct chunk length).
+    Returns (logits (B, Q, V) for the chunk rows, updated cache). Gate
+    with ``supports_chunked_prefill``; after the final chunk the cache
+    and last-row logits are bitwise-identical to one-shot ``prefill`` of
+    the full prompt (see the padded-C attention path there).
+    """
+    tokens = jnp.asarray(tokens, jnp.int32)
+    B, Q = tokens.shape
+    offset = jnp.asarray(offset, jnp.int32)
+    x = params["embed"][tokens]
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_pos(offset + jnp.arange(Q),
+                               cfg.d_model)[None].astype(x.dtype)
+
+    new_front = []
+    for p_layer, c_l in zip(params.get("front", []), cache["front"]):
+        x, nc = _block_prefill_chunk(cfg, p_layer, x, c_l, offset,
+                                     jnp.asarray(False), pctx)
+        new_front.append(nc)
+
+    n_front = len(new_front)
+    n_scan = cfg.n_layers - n_front
+    flags = _layer_flags(cfg, n_scan, n_front)
+
+    def body(x, xs):
+        from repro.models.model import sp_constrain
+        x = sp_constrain(x, pctx)
+        p_layer, c_l, is_global = xs
+        x, nc = _block_prefill_chunk(cfg, p_layer, x, c_l, offset,
+                                     is_global, pctx)
+        return x, nc
+
+    x, new_layers = jax.lax.scan(
+        body, x, (params["layers"], cache["layers"], flags))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    out = dict(cache)
+    out["layers"] = new_layers
+    out["front"] = new_front
+    out["pos"] = (offset + Q).astype(jnp.int32)
+    return logits, out

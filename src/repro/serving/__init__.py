@@ -1,23 +1,31 @@
 """Continuous-batching serving subsystem.
 
-Dataflow: requests → ``FCFSScheduler`` (admission queue) →
-``SlotKVManager`` (one fixed (slots, seq_budget) cache, per-slot
-positions, jitted prefill splicing) → ``ServingEngine`` step loop
-(batched ``decode_step`` over the slot set, EP-mesh aware) →
-``ServingMetrics`` (TTFT / TPOT / occupancy, JSON export).
+Dataflow: requests → ``FCFSScheduler`` (admission queue, page-gated) →
+``SlotKVManager`` (paged KV: one shared ``PagePool`` + per-slot
+``PageTables``, jitted prefill splicing; monolithic (slots, seq_budget)
+cache for attention-free / enc-dec archs) → ``ServingEngine`` step loop
+(chunked prompt admission + batched ``decode_step`` gathering K/V
+through the page tables, EP-mesh aware) → ``ServingMetrics``
+(TTFT / TPOT / occupancy / paging stats, JSON export).
 ``serving.static.BatchedServer`` is the fixed-batch baseline and
-bitwise reference.
+bitwise reference (``grouped_reference_streams`` for heterogeneous
+prompt lengths).
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.metrics import ServingMetrics, write_json
+from repro.serving.paging import (DEFAULT_PAGE_SIZE, PagePool, PageTables,
+                                  page_bytes, pages_for_budget,
+                                  pages_for_len, paging_stats)
 from repro.serving.requests import Request, RequestState
 from repro.serving.runners import (run_continuous_workload,
                                    run_static_workload)
 from repro.serving.scheduler import FCFSScheduler
 from repro.serving.slots import SlotKVManager
-from repro.serving.static import BatchedServer
+from repro.serving.static import BatchedServer, grouped_reference_streams
 
 __all__ = ["ServingEngine", "ServingMetrics", "write_json", "Request",
            "RequestState", "FCFSScheduler", "SlotKVManager",
-           "BatchedServer", "run_static_workload",
-           "run_continuous_workload"]
+           "BatchedServer", "grouped_reference_streams",
+           "run_static_workload", "run_continuous_workload",
+           "PagePool", "PageTables", "DEFAULT_PAGE_SIZE", "page_bytes",
+           "pages_for_budget", "pages_for_len", "paging_stats"]

@@ -3,19 +3,31 @@
 The step loop FlashMoE's host side wants — no idle slots, no retraces,
 one host sync:
 
-  1. **Admissions** — while a slot is free and the FCFS head has
-     arrived, prefill that request alone (batch 1) and splice its cache
-     into the freed slot (``SlotKVManager.insert_prefill``: jitted,
-     donated, traces once). The prefill's argmax IS the request's first
-     token (TTFT stops here).
+  1. **Admissions** — while a slot is free, the FCFS head has arrived
+     and (paged mode) its worst-case page count fits the pool's free
+     reservation, admit it. Short prompts prefill alone (batch 1) and
+     splice their cache into the freed slot
+     (``SlotKVManager.insert_prefill``: jitted, donated, traces once);
+     the prefill's argmax IS the request's first token. Long prompts
+     (``prefill_chunk`` > 0) instead become *inflight* admissions: each
+     engine step advances them one fixed-size chunk
+     (``models/serve.prefill_chunk`` splices the chunk's K/V into a
+     private batch-1 cache at a traced offset) while the decode batch
+     keeps stepping — a long admission no longer stalls every running
+     stream. The final chunk's argmax is the first token, and only then
+     does the cache splice into the slot.
   2. **Decode** — ONE batched ``decode_step`` over the whole fixed slot
-     set. Occupied slots advance their request; free slots carry
-     garbage rows that cost a row of compute but keep the batch shape
-     constant, so the decode executable never retraces across the whole
-     serving run. Per-row decode math is independent of batch
-     composition (row-independence), which is why a request's greedy
-     stream is bitwise-identical to the fixed-batch
-     ``serving.static.BatchedServer`` reference.
+     set. Occupied slots advance their request; free and mid-admission
+     slots carry garbage rows that cost a row of compute but keep the
+     batch shape constant, so the decode executable never retraces
+     across the whole serving run. In paged mode the step first grows
+     page tables for this step's write positions
+     (``ensure_position`` — reservation-backed, cannot fail) and syncs
+     the host table to device; garbage rows write to the scratch page.
+     Per-row decode math is independent of batch composition
+     (row-independence), which is why a request's greedy stream is
+     bitwise-identical to the fixed-batch ``serving.static``
+     reference.
   3. **Bookkeeping** — one device→host sync per step (the PR-4 rule):
      pull the argmax token vector once, then EOS / max_new / refill
      decisions are all host-side numpy.
@@ -26,13 +38,16 @@ EP-mesh aware: ``mesh`` is entered around every device call
 
 Time is a virtual clock in decode-step units (deterministic: tests and
 benches compare step counts, not wall times); wall timestamps ride
-along for TTFT/throughput metrics.
+along for TTFT/throughput metrics. ``FCFSScheduler.mark_ready`` stamps
+the wall time each request's arrival is first covered by the clock, so
+TTFT excludes idle-period clock fast-forwards.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 import warnings
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -40,32 +55,55 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.models.serve import decode_step, prefill
+from repro.models.serve import (decode_step, init_cache, prefill,
+                                prefill_chunk as model_prefill_chunk,
+                                supports_chunked_prefill)
 from repro.serving.metrics import ServingMetrics
+from repro.serving.paging import DEFAULT_PAGE_SIZE
 from repro.serving.requests import RUNNING, Request, RequestState
 from repro.serving.scheduler import FCFSScheduler
 from repro.serving.slots import SlotKVManager
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """A chunked admission in progress: the request holds its slot but
+    streams its prompt into a private batch-1 cache chunk by chunk."""
+    st: RequestState
+    cache: Any
+    offset: int = 0
 
 
 class ServingEngine:
     """Continuous-batching inference engine over the model zoo."""
 
     def __init__(self, cfg, params, *, slots: int, seq_budget: int,
-                 pctx, dtype=jnp.float32, mesh=None, eos: int = -1):
+                 pctx, dtype=jnp.float32, mesh=None, eos: int = -1,
+                 page_size: int = DEFAULT_PAGE_SIZE, kv_pages: int = 0,
+                 prefill_chunk: int = 0):
         self.cfg, self.params, self.pctx = cfg, params, pctx
         self.dtype = dtype
         self.mesh = mesh
         self.default_eos = eos
+        self.seq_budget = seq_budget
         self.scheduler = FCFSScheduler(seq_budget)
-        self.kv = SlotKVManager(cfg, slots, seq_budget, dtype)
+        self.kv = SlotKVManager(cfg, slots, seq_budget, dtype,
+                                page_size=page_size, kv_pages=kv_pages)
         self.metrics = ServingMetrics(slots)
         self.clock = 0                         # virtual time, decode steps
+        self.prefill_chunk = int(prefill_chunk)
+        self._inflight: Dict[int, _Inflight] = {}
         self._next_rid = 0
         self._last_tok = np.zeros((slots,), np.int32)
         self._prefill = jax.jit(
             lambda p, b: prefill(cfg, p, b, seq_budget, pctx, dtype=dtype))
         self._decode = jax.jit(
-            lambda p, c, t: decode_step(cfg, p, c, t, pctx),
+            lambda p, c, t: decode_step(cfg, p, c, t, pctx,
+                                        view_len=self.kv.view_len),
+            donate_argnums=(1,))
+        self._chunk = jax.jit(
+            lambda p, c, tk, off: model_prefill_chunk(cfg, p, c, tk, off,
+                                                      pctx),
             donate_argnums=(1,))
         self._warn_if_capacity_can_drop(slots)
 
@@ -117,19 +155,36 @@ class ServingEngine:
         req = Request(rid=rid, prompt=prompt, max_new=max_new,
                       arrival=arrival,
                       eos=self.default_eos if eos is None else eos)
+        if (self.kv.paged and self.kv.pages_needed(req.seq_need)
+                > self.kv.pool.num_pages - 1):
+            raise ValueError(
+                f"request {rid}: needs {self.kv.pages_needed(req.seq_need)}"
+                f" pages but the pool only has {self.kv.pool.num_pages - 1}"
+                " allocatable pages — raise kv_pages")
         return self.scheduler.submit(req, t_submit=time.perf_counter())
 
     # ------------------------------------------------------- admission --
     def _admit_one(self, st: RequestState) -> None:
-        slot = self.kv.alloc(st)
+        req = st.request
+        slot = self.kv.alloc(st, req.seq_need)
         st.slot, st.status, st.admit_step = slot, RUNNING, self.clock
-        batch = {"tokens": jnp.asarray(st.request.prompt[None, :],
-                                       jnp.int32)}
+        if st.t_ready is None:                 # arrival <= clock at admit
+            st.t_ready = time.perf_counter()
+        if (self.prefill_chunk > 0
+                and req.prompt_len > self.prefill_chunk
+                and supports_chunked_prefill(self.cfg, req.prompt_len,
+                                             self.seq_budget)):
+            # chunked admission: first chunk runs in this step's chunk
+            # pass, so a long prompt never blocks this step's decode
+            self._inflight[slot] = _Inflight(
+                st, init_cache(self.cfg, 1, self.seq_budget, self.dtype))
+            return
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
         if self.cfg.enc_dec:
             batch["frames"] = jnp.zeros(
                 (1, self.cfg.enc_seq, self.cfg.d_model), self.dtype)
         logits, pcache = self._prefill(self.params, batch)
-        self.kv.insert_prefill(slot, pcache)
+        self.kv.insert_prefill(slot, pcache, req.prompt_len)
         # the prefill's argmax is the request's FIRST generated token
         tok0 = int(np.asarray(jnp.argmax(logits[0], -1)))
         if st.record(tok0, step=self.clock, now=time.perf_counter()):
@@ -140,29 +195,73 @@ class ServingEngine:
     def _admit(self) -> int:
         n = 0
         while self.kv.free_slots:
-            st = self.scheduler.admit(self.clock)
-            if st is None:
+            head = self.scheduler.head(self.clock)
+            if head is None:
                 break
+            if not self.kv.can_admit(head.request.seq_need):
+                break                          # strict FCFS: no lookahead
+            st = self.scheduler.admit(self.clock)
             self._admit_one(st)
             n += 1
         return n
 
+    def _advance_chunk(self, slot: int) -> None:
+        """Run ONE prompt chunk for an inflight admission; on the final
+        chunk, splice the finished cache into the slot and record the
+        first token (prefill argmax semantics, bitwise-equal to the
+        one-shot path by models/serve's chunked-prefill contract)."""
+        inf = self._inflight[slot]
+        req = inf.st.request
+        q = min(self.prefill_chunk, req.prompt_len - inf.offset)
+        toks = jnp.asarray(req.prompt[None, inf.offset:inf.offset + q],
+                           jnp.int32)
+        logits, inf.cache = self._chunk(self.params, inf.cache, toks,
+                                        jnp.asarray(inf.offset, jnp.int32))
+        inf.offset += q
+        if inf.offset < req.prompt_len:
+            return
+        del self._inflight[slot]
+        self.kv.insert_prefill(slot, inf.cache, req.prompt_len)
+        tok0 = int(np.asarray(jnp.argmax(logits[0, q - 1], -1)))
+        if inf.st.record(tok0, step=self.clock, now=time.perf_counter()):
+            self.kv.release(slot)
+        else:
+            self._last_tok[slot] = tok0
+
     # ------------------------------------------------------- step loop --
     def step(self) -> bool:
-        """Admissions + one batched decode across the slot set.
-        Returns True while the engine still has (or awaits) work."""
+        """Admissions + inflight prompt chunks + one batched decode
+        across the slot set. Returns True while the engine still has
+        (or awaits) work."""
         with compat.with_mesh(self.mesh):
+            self.scheduler.mark_ready(self.clock, time.perf_counter())
             self._admit()
-            if not self.kv.owner:
+            for slot in list(self._inflight):
+                self._advance_chunk(slot)
+            active = {s: st for s, st in self.kv.owner.items()
+                      if s not in self._inflight}
+            if not active:
+                if self._inflight:
+                    # chunk-only step: admissions progressed, no decode
+                    self.clock += 1
+                    self.metrics.record_prefill_step()
+                    return True
                 nxt = self.scheduler.next_arrival()
                 if nxt is None:
                     return False               # drained
                 # idle: fast-forward the virtual clock to the next
-                # arrival instead of ticking empty decode steps
+                # arrival instead of ticking empty decode steps; stamp
+                # t_ready NOW so the skipped span never counts as TTFT
                 skip = max(1, nxt - self.clock)
                 self.clock += skip
                 self.metrics.record_idle(skip)
+                self.scheduler.mark_ready(self.clock, time.perf_counter())
                 return True
+            if self.kv.paged:
+                for slot, st in active.items():
+                    pos = st.request.prompt_len + len(st.tokens) - 1
+                    self.kv.ensure_position(slot, pos)
+                self.kv.sync_tables()
             tok = jnp.asarray(self._last_tok)
             logits, self.kv.cache = self._decode(self.params,
                                                  self.kv.cache, tok)
@@ -172,10 +271,11 @@ class ServingEngine:
         self.clock += 1
         now = time.perf_counter()
         self._last_tok = np.array(tok_np)
-        for slot, st in list(self.kv.owner.items()):
+        for slot, st in active.items():
             if st.record(int(tok_np[slot]), step=self.clock, now=now):
                 self.kv.release(slot)          # refilled next _admit()
-        return bool(self.kv.owner or self.scheduler.pending)
+        return bool(self.kv.owner or self.scheduler.pending
+                    or self._inflight)
 
     def run(self) -> List[RequestState]:
         """Drive the step loop until every submitted request finishes;

@@ -31,23 +31,32 @@ class ServingMetrics:
         self.slots = slots
         self.decode_steps = 0
         self.idle_steps = 0
+        self.prefill_steps = 0              # chunked-prefill-only steps
         self._occ: List[int] = []           # occupied slots per decode step
 
     def record_decode_step(self, occupied: int) -> None:
         self.decode_steps += 1
         self._occ.append(occupied)
 
+    def record_prefill_step(self) -> None:
+        self.prefill_steps += 1
+
     def record_idle(self, steps: int = 1) -> None:
         self.idle_steps += steps
 
-    def summary(self, states, *, wall_s: Optional[float] = None
-                ) -> Dict[str, Any]:
+    def summary(self, states, *, wall_s: Optional[float] = None,
+                kv: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         """Aggregate over RequestStates (finished or not) + the step
-        trace. TTFT per request = first-token wall time minus submit
-        wall time; steps-to-first-token = admit step minus arrival."""
+        trace. TTFT per request = first-token wall time minus the wall
+        time the request became servable (``t_ready``: virtual clock
+        reached its arrival — falls back to submit time), so idle-period
+        clock fast-forwards don't inflate it; steps-to-first-token =
+        admit step minus arrival."""
         done = [s for s in states if s.t_finish is not None]
-        ttft = sorted((s.t_first - s.t_submit) for s in done
-                      if s.t_first is not None)
+        ttft = sorted(
+            (s.t_first - (s.t_ready if s.t_ready is not None
+                          else s.t_submit))
+            for s in done if s.t_first is not None)
         wait_steps = sorted(float(s.admit_step - s.request.arrival)
                             for s in done if s.admit_step >= 0)
         tpot = sorted(
@@ -62,6 +71,7 @@ class ServingMetrics:
             "tokens": n_tokens,
             "decode_steps": self.decode_steps,
             "idle_steps": self.idle_steps,
+            "prefill_steps": self.prefill_steps,
             "slot_occupancy": round(occ, 4),
             "ttft_s": {"mean": _mean(ttft), "p50": _pct(ttft, 0.50),
                        "p95": _pct(ttft, 0.95)},
@@ -72,6 +82,8 @@ class ServingMetrics:
         if wall_s is not None:
             rec["wall_s"] = round(wall_s, 3)
             rec["tok_s"] = round(n_tokens / wall_s, 1) if wall_s > 0 else 0.0
+        if kv is not None:
+            rec["kv"] = kv
         return rec
 
 

@@ -1,0 +1,203 @@
+"""Paged KV bookkeeping: a fixed page pool + per-slot page tables.
+
+This is the host side of the paged cache (flashinfer-style
+``page_indptr`` / ``page_indices`` layout): per-request KV grows in
+fixed-size pages drawn from ONE pool sized by an HBM byte budget, so
+slot count decouples from ``seq_budget`` — a heterogeneous-length
+workload reserves what it uses, not ``slots x seq_budget`` worst case.
+
+Conventions the device side (models/serve paged decode) relies on:
+
+  * **Page 0 is scratch**, never allocated. A slot's rectangular table
+    row is padded with 0s past its allocated pages, so garbage decode
+    writes from free / mid-prefill slots land in the scratch page and
+    can never corrupt another request's KV.
+  * Pages are allocated **in slot-position order** (page ``j`` backs
+    slot-local rows ``[j*page_size, (j+1)*page_size)``), so the device
+    lookup is ``table[slot, (pos % C) // page_size]``.
+  * **Reservations** make admission deadlock-free: the engine reserves
+    a request's worst-case page count up front (``can_reserve`` gate),
+    and every later alloc/grow draws that reservation down — a request
+    that was admitted can always grow to its budget.
+
+Pure host logic (numpy + lists): this module is what the hypothesis
+property suite in tests/test_paging.py drives.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List
+
+import numpy as np
+
+# one decode tile (core/exchange.DECODE_TILE_M) per page by default
+DEFAULT_PAGE_SIZE = 8
+SCRATCH_PAGE = 0
+
+
+class PagePool:
+    """Free-list allocator over ``num_pages`` fixed-size pages.
+
+    Page ``SCRATCH_PAGE`` is reserved at construction and never handed
+    out. ``reserve``/``draw`` implement admission-time reservations:
+    ``reserved`` pages are still physically free but promised to
+    already-admitted requests, so ``can_reserve`` is the only admission
+    gate the engine needs (growth can then never fail mid-stream).
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if num_pages < 2:
+            raise ValueError(
+                f"need >= 2 pages (page 0 is scratch), got {num_pages}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list, low ids first out; page 0 excluded (scratch)
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.reserved = 0
+        self.peak = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated_pages(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    def can_reserve(self, n: int) -> bool:
+        """True when ``n`` more pages can be promised on top of every
+        outstanding reservation."""
+        return n <= len(self._free) - self.reserved
+
+    def reserve(self, n: int) -> None:
+        if not self.can_reserve(n):
+            raise RuntimeError(
+                f"cannot reserve {n} pages: {len(self._free)} free, "
+                f"{self.reserved} already reserved")
+        self.reserved += n
+
+    def unreserve(self, n: int) -> None:
+        if n > self.reserved:
+            raise RuntimeError(
+                f"unreserve({n}) exceeds outstanding reservation "
+                f"{self.reserved}")
+        self.reserved -= n
+
+    def alloc(self, n: int = 1, *, draw_reservation: bool = True
+              ) -> List[int]:
+        """Pop ``n`` pages. With ``draw_reservation`` (the engine path)
+        the pages come out of a prior ``reserve`` promise."""
+        if draw_reservation and n > self.reserved:
+            raise RuntimeError(
+                f"alloc({n}) draws more than the outstanding "
+                f"reservation {self.reserved}")
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)}")
+        ids = [self._free.pop() for _ in range(n)]
+        if draw_reservation:
+            self.reserved -= n
+        self.peak = max(self.peak, self.allocated_pages)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        for pid in ids:
+            if not (0 < pid < self.num_pages):
+                raise ValueError(f"bad page id {pid}")
+            if pid in self._free:
+                raise RuntimeError(f"double free of page {pid}")
+            self._free.append(pid)
+
+
+class PageTables:
+    """Per-slot page-id lists + the rectangular device view.
+
+    ``table`` is the (slots, max_pages) int32 array the paged decode
+    gathers through — rows padded with the scratch page id. The ragged
+    flashinfer-style view (``page_indptr`` exclusive cumsum +
+    ``page_indices`` concat) is derived for tooling and the property
+    suite.
+    """
+
+    def __init__(self, slots: int, max_pages: int):
+        self.slots = slots
+        self.max_pages = max_pages
+        self._pages: List[List[int]] = [[] for _ in range(slots)]
+        self.table = np.full((slots, max_pages), SCRATCH_PAGE, np.int32)
+
+    def npages(self, slot: int) -> int:
+        return len(self._pages[slot])
+
+    def assign(self, slot: int, ids: List[int]) -> None:
+        row = self._pages[slot]
+        if len(row) + len(ids) > self.max_pages:
+            raise RuntimeError(
+                f"slot {slot}: {len(row)} + {len(ids)} pages exceeds "
+                f"table width {self.max_pages}")
+        for pid in ids:
+            self.table[slot, len(row)] = pid
+            row.append(pid)
+
+    def clear(self, slot: int) -> List[int]:
+        """Release the slot's pages; returns the freed ids and resets
+        the device row to all-scratch."""
+        ids, self._pages[slot] = self._pages[slot], []
+        self.table[slot, :] = SCRATCH_PAGE
+        return ids
+
+    def pages(self, slot: int) -> List[int]:
+        return list(self._pages[slot])
+
+    @property
+    def page_indptr(self) -> np.ndarray:
+        """(slots + 1,) exclusive cumsum of per-slot page counts."""
+        counts = [len(p) for p in self._pages]
+        return np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+
+    @property
+    def page_indices(self) -> np.ndarray:
+        """Concatenation of every slot's pages (indptr-indexed)."""
+        flat = [pid for p in self._pages for pid in p]
+        return np.asarray(flat, np.int32)
+
+
+def pages_for_len(n_rows: int, page_size: int) -> int:
+    """Pages needed to back ``n_rows`` cache rows."""
+    return max(1, math.ceil(n_rows / page_size))
+
+
+def page_bytes(cfg, page_size: int, dtype_bytes: int = 4) -> int:
+    """Bytes one page occupies across every sequence-indexed cache leaf
+    of every layer (k/v or ckv/kr; SSM state leaves are per-slot O(1)
+    and stay monolithic)."""
+    per_row = 0
+    if cfg.attention_free:
+        return 0
+    if cfg.mla is not None:
+        per_row = cfg.mla.kv_lora + cfg.mla.qk_rope
+    else:
+        per_row = 2 * cfg.n_kv_heads * cfg.head_dim_
+    return per_row * page_size * cfg.n_layers * dtype_bytes
+
+
+def pages_for_budget(cfg, hbm_bytes: int, page_size: int,
+                     dtype_bytes: int = 4) -> int:
+    """Page count (scratch included) an HBM byte budget affords."""
+    pb = page_bytes(cfg, page_size, dtype_bytes)
+    if pb == 0:
+        return 2
+    return max(2, hbm_bytes // pb)
+
+
+def paging_stats(pool: PagePool, tables: PageTables) -> Dict[str, Any]:
+    """JSON-friendly snapshot for metrics/benches."""
+    return {
+        "num_pages": pool.num_pages,
+        "page_size": pool.page_size,
+        "allocated_pages": pool.allocated_pages,
+        "reserved_pages": pool.reserved,
+        "peak_pages": pool.peak,
+        "page_indptr": tables.page_indptr.tolist(),
+    }

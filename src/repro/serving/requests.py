@@ -65,6 +65,12 @@ class RequestState:
     finish_step: int = -1
     # wall clock (time.perf_counter seconds)
     t_submit: float = 0.0
+    # wall time when the virtual clock first reached ``arrival`` — the
+    # earliest moment the engine COULD have served this request. TTFT
+    # measures from here, so virtual-clock idle fast-forwards (which
+    # cost no wall time but used to sit inside t_first - t_submit for
+    # future-dated arrivals) don't inflate it.
+    t_ready: Optional[float] = None
     t_first: Optional[float] = None
     t_finish: Optional[float] = None
 

@@ -16,6 +16,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.serving.engine import ServingEngine
+from repro.serving.paging import DEFAULT_PAGE_SIZE
 from repro.serving.static import BatchedServer
 
 
@@ -40,14 +41,19 @@ def run_static_workload(cfg, params, pctx, mesh, prompts, max_new, *,
 
 def run_continuous_workload(cfg, params, pctx, mesh, prompts, max_new,
                             arrivals, *, slots: int, seq_budget: int,
-                            eos: int = -1
+                            eos: int = -1,
+                            page_size: int = DEFAULT_PAGE_SIZE,
+                            kv_pages: int = 0, prefill_chunk: int = 0
                             ) -> Tuple[list, int, float, dict]:
-    """The continuous-batching engine over the same request set; the
-    returned summary is ``ServingMetrics.summary`` (wall_s included)."""
+    """The continuous-batching engine over the same request set
+    (``prompts`` may be ragged — a list of per-request arrays); the
+    returned summary is ``ServingMetrics.summary`` with the KV manager's
+    paging stats attached under ``"kv"``."""
     max_new = np.asarray(max_new, int)
     engine = ServingEngine(cfg, params, slots=slots,
                            seq_budget=seq_budget, pctx=pctx, mesh=mesh,
-                           eos=eos)
+                           eos=eos, page_size=page_size, kv_pages=kv_pages,
+                           prefill_chunk=prefill_chunk)
     t0 = time.perf_counter()
     for i in range(len(prompts)):
         engine.submit(prompts[i], int(max_new[i]),
@@ -56,4 +62,4 @@ def run_continuous_workload(cfg, params, pctx, mesh, prompts, max_new,
     dt = time.perf_counter() - t0
     outs = [engine.outputs[s.rid] for s in states]
     return outs, engine.metrics.decode_steps, dt, \
-        engine.metrics.summary(states, wall_s=dt)
+        engine.metrics.summary(states, wall_s=dt, kv=engine.kv.stats())

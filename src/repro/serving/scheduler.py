@@ -45,6 +45,23 @@ class FCFSScheduler:
             return self._queue.popleft()
         return None
 
+    def head(self, now: int) -> Optional[RequestState]:
+        """Peek the head request that would be admitted at ``now``
+        without popping it — lets the engine gate admission on KV page
+        availability while keeping strict FCFS order."""
+        if self._queue and self._queue[0].request.arrival <= now:
+            return self._queue[0]
+        return None
+
+    def mark_ready(self, now: int, wall: float) -> None:
+        """Stamp ``t_ready`` (wall time the virtual clock first covered
+        the request's arrival) on every queued request that has arrived
+        by ``now``. Scans the whole queue: arrivals need not be sorted
+        in submission order."""
+        for st in self._queue:
+            if st.request.arrival <= now and st.t_ready is None:
+                st.t_ready = wall
+
     @property
     def pending(self) -> int:
         return len(self._queue)

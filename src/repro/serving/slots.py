@@ -1,28 +1,43 @@
-"""Per-slot KV management over ONE fixed (slots, seq_budget) cache.
+"""Per-slot KV management: paged page-pool cache (default) or the
+legacy monolithic (slots, seq_budget) cache.
 
-The engine never reshapes or reallocates its decode cache: it is built
-once by ``models/serve.init_cache`` with batch = ``slots`` and lives on
-device for the engine's whole life, with ``cache["pos"]`` widened to a
-(slots,) vector — each slot decodes at its own position (the form
-``decode_step`` broadcasts scalars into anyway, so the math is the
-one program either way).
+Monolithic mode (and the fallback for attention-free / enc-dec archs,
+whose caches are not sequence-indexed): the engine never reshapes or
+reallocates its decode cache — it is built once by
+``models/serve.init_cache`` with batch = ``slots``, ``cache["pos"]``
+widened to a (slots,) vector, and admissions are a jitted,
+buffer-donated ``dynamic_update_slice`` surgery per leaf.
 
-Admissions are a jitted, buffer-donated surgery: ``insert_prefill``
-writes a freshly prefilled batch-1 cache into one slot of the big cache
-with ``dynamic_update_slice`` per leaf. Because every prefill cache has
-the same (1, C, ...) leaf shapes regardless of prompt length (prefill
-pads to the budget), the insert traces exactly ONCE — and because the
-big cache's shape never changes, the decode step never retraces on
+Paged mode: sequence-indexed leaves (k/v or ckv/kr) live in ONE shared
+(num_pages, page_size, ...) pool per layer; each slot owns a list of
+pages recorded in a rectangular (slots, pages_per_slot) device table
+(``cache["pages"]``, scratch page 0 padding). Decode gathers a
+monolithic-shaped view through the table, so the attention program —
+and therefore the bitwise stream contract — is unchanged; what changes
+is that HBM is reserved per page actually used, not
+``slots x seq_budget`` worst case. Admission reserves a request's
+worst-case page count up front (``can_admit``), so growth via
+``ensure_position`` can never fail mid-stream.
+
+Both inserts trace exactly ONCE (every prefill cache has the same
+(1, C, ...) leaf shapes regardless of prompt length) and the big
+cache's shapes never change, so the decode step never retraces on
 admission. That is the property that makes slot refill free.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List, Optional
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-from repro.models.serve import init_cache
+from repro.models.serve import (_layer_cache_spec, cache_len_for,
+                                init_cache, init_paged_cache,
+                                supports_paging, SEQ_CACHE_KEYS)
+from repro.serving.paging import (DEFAULT_PAGE_SIZE, PagePool, PageTables,
+                                  pages_for_len)
 
 
 def _insert(big, slot, small):
@@ -48,24 +63,98 @@ def _insert(big, slot, small):
     return out
 
 
+def _insert_paged(big, slot, table_row, small, page_size: int):
+    """Write a batch-1 prefill cache into ``slot`` of a paged cache.
+
+    Sequence leaves scatter the prompt's (C, ...) rows into the shared
+    pool at the positions ``table_row`` maps them to; rows past the
+    slot's allocated pages land in the scratch page (harmless — they
+    are zero padding beyond the prompt anyway). Slot-state leaves use
+    the same dynamic_update_slice surgery as the monolithic insert."""
+    ps = page_size
+
+    def seq_rows(rows, pool):
+        # rows: (C, ...) prompt cache; pool: (P, ps, ...)
+        mp = table_row.shape[0]
+        idx = (table_row[:, None] * ps
+               + jnp.arange(ps, dtype=table_row.dtype)[None, :]).reshape(-1)
+        pad = mp * ps - rows.shape[0]
+        rows = jnp.pad(rows, [(0, pad)] + [(0, 0)] * (rows.ndim - 1))
+        flat = pool.reshape((pool.shape[0] * ps,) + pool.shape[2:])
+        flat = flat.at[idx].set(rows.astype(pool.dtype))
+        return flat.reshape(pool.shape)
+
+    out: Dict[str, Any] = dict(big)
+    out["pos"] = big["pos"].at[slot].set(small["pos"].astype(jnp.int32))
+    out["pages"] = big["pages"].at[slot].set(table_row)
+    layers = {}
+    for key, b in big["layers"].items():
+        s = small["layers"][key]
+        if key in SEQ_CACHE_KEYS:
+            # lead axis = scanned layers: vmap the scatter over it
+            layers[key] = jax.vmap(seq_rows)(s[:, 0], b)
+        else:
+            layers[key] = jax.lax.dynamic_update_slice_in_dim(
+                b, s.astype(b.dtype), slot, axis=1)
+    out["layers"] = layers
+    front = []
+    for bf, sf in zip(big["front"], small["front"]):
+        fl = {}
+        for key, b in bf.items():
+            if key in SEQ_CACHE_KEYS:
+                fl[key] = seq_rows(sf[key][0], b)
+            else:
+                fl[key] = jax.lax.dynamic_update_slice_in_dim(
+                    b, sf[key].astype(b.dtype), slot, axis=0)
+        front.append(fl)
+    out["front"] = front
+    return out
+
+
 class SlotKVManager:
-    """Owns the engine's fixed-shape decode cache + slot free list."""
+    """Owns the engine's fixed-shape decode cache + slot free list and,
+    in paged mode, the page pool + per-slot page tables."""
 
     def __init__(self, cfg, slots: int, seq_budget: int,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, *, page_size: int = DEFAULT_PAGE_SIZE,
+                 kv_pages: int = 0):
         if slots < 1:
             raise ValueError(f"need at least one slot, got {slots}")
         self.cfg = cfg
         self.slots = slots
         self.seq_budget = seq_budget
-        cache = init_cache(cfg, slots, seq_budget, dtype)
-        # scalar -> per-slot positions (decode_step handles both forms)
-        cache["pos"] = jnp.zeros((slots,), jnp.int32)
-        self.cache = cache
+        self.dtype = dtype
+        self.paged = supports_paging(cfg)
         self._free: List[int] = list(range(slots - 1, -1, -1))
         self.owner: Dict[int, Any] = {}       # slot -> RequestState
-        # donate the big cache: admission updates it in place on device
-        self._insert = jax.jit(_insert, donate_argnums=(0,))
+        C = cache_len_for(cfg, seq_budget)
+        if not self.paged:
+            self.view_len: Optional[int] = None
+            self.page_size = 0
+            cache = init_cache(cfg, slots, seq_budget, dtype)
+            # scalar -> per-slot positions (decode_step takes both forms)
+            cache["pos"] = jnp.zeros((slots,), jnp.int32)
+            self.cache = cache
+            # donate the big cache: admission updates it on device
+            self._insert = jax.jit(_insert, donate_argnums=(0,))
+            return
+        self.view_len = C
+        self.page_size = page_size
+        self.pages_per_slot = -(-C // page_size)
+        # default = memory parity with the monolithic cache (+ scratch);
+        # a smaller kv_pages is where paging actually saves HBM
+        self.num_pages = (int(kv_pages) if kv_pages
+                          else slots * self.pages_per_slot + 1)
+        self.pool = PagePool(self.num_pages, page_size)
+        self.tables = PageTables(slots, self.pages_per_slot)
+        self.cache = init_paged_cache(cfg, slots, seq_budget, dtype,
+                                      num_pages=self.num_pages,
+                                      page_size=page_size)
+        self._reserved_by_slot: Dict[int, int] = {}
+        self._dirty = False
+        self._insert = jax.jit(
+            lambda b, s, r, sm: _insert_paged(b, s, r, sm, page_size),
+            donate_argnums=(0,))
 
     @property
     def free_slots(self) -> int:
@@ -75,17 +164,101 @@ class SlotKVManager:
     def occupancy(self) -> int:
         return self.slots - len(self._free)
 
-    def alloc(self, state) -> int:
+    # ------------------------------------------------------ admission ----
+    def pages_needed(self, seq_need: int) -> int:
+        """Worst-case page count a request reserves at admission."""
+        return pages_for_len(min(seq_need, self.view_len), self.page_size)
+
+    def can_admit(self, seq_need: int) -> bool:
+        if not self.paged:
+            return bool(self._free)
+        return bool(self._free) and self.pool.can_reserve(
+            self.pages_needed(seq_need))
+
+    def alloc(self, state, seq_need: int = 0) -> int:
         slot = self._free.pop()
         self.owner[slot] = state
+        if self.paged:
+            n = self.pages_needed(seq_need)
+            self.pool.reserve(n)
+            self._reserved_by_slot[slot] = n
         return slot
 
     def release(self, slot: int) -> None:
         del self.owner[slot]
         self._free.append(slot)
+        if self.paged:
+            leftover = (self._reserved_by_slot.pop(slot)
+                        - self.tables.npages(slot))
+            if leftover > 0:
+                self.pool.unreserve(leftover)
+            self.pool.free(self.tables.clear(slot))
+            self._dirty = True
 
-    def insert_prefill(self, slot: int, prefill_cache) -> None:
+    def insert_prefill(self, slot: int, prefill_cache,
+                       prompt_len: int = 0) -> None:
         """Write one prefilled sequence into ``slot`` (jitted, big cache
-        donated — no host round-trip, no decode retrace)."""
-        self.cache = self._insert(self.cache, jnp.int32(slot),
+        donated — no host round-trip, no decode retrace). Paged mode
+        draws the prompt's pages from the slot's admission reservation
+        first."""
+        if not self.paged:
+            self.cache = self._insert(self.cache, jnp.int32(slot),
+                                      prefill_cache)
+            return
+        n = pages_for_len(min(prompt_len, self.view_len), self.page_size)
+        self.tables.assign(slot, self.pool.alloc(n))
+        row = jnp.asarray(self.tables.table[slot])
+        self.cache = self._insert(self.cache, jnp.int32(slot), row,
                                   prefill_cache)
+
+    # --------------------------------------------------------- growth ----
+    def ensure_position(self, slot: int, pos: int) -> None:
+        """Grow the slot's table so the decode write at ``pos`` has a
+        real page (windowed caches wrap, so the page may already
+        exist). Must run BEFORE the decode step that writes ``pos``."""
+        if not self.paged:
+            return
+        page_idx = (pos % self.view_len) // self.page_size
+        while self.tables.npages(slot) <= page_idx:
+            self.tables.assign(slot, self.pool.alloc(1))
+        self._dirty = True
+
+    def sync_tables(self) -> None:
+        """Push the host page table to the device before a decode step.
+        Also re-scratches rows of released slots so their garbage decode
+        writes can never land in a recycled page."""
+        if self.paged and self._dirty:
+            self.cache["pages"] = jnp.asarray(self.tables.table)
+            self._dirty = False
+
+    # ---------------------------------------------------------- stats ----
+    def _seq_leaf_bytes(self, rows: int) -> int:
+        """Bytes of ``rows`` sequence positions across every seq cache
+        leaf of every layer."""
+        spec = _layer_cache_spec(self.cfg, 1, 1, self.dtype)
+        per_row = 0
+        for key, (shape, dt) in spec.items():
+            if key in SEQ_CACHE_KEYS:
+                per_row += (int(np.prod(shape[2:]))
+                            * np.dtype(dt).itemsize)
+        return per_row * rows * self.cfg.n_layers
+
+    def stats(self) -> Dict[str, Any]:
+        C = cache_len_for(self.cfg, self.seq_budget)
+        rec: Dict[str, Any] = {
+            "paged": self.paged,
+            "slots": self.slots,
+            "kv_bytes_monolithic": self._seq_leaf_bytes(self.slots * C),
+        }
+        if not self.paged:
+            rec["kv_bytes"] = rec["kv_bytes_monolithic"]
+            return rec
+        rec.update(
+            page_size=self.page_size,
+            kv_pages=self.num_pages,
+            pages_per_slot=self.pages_per_slot,
+            peak_pages=self.pool.peak,
+            page_occupancy=self.pool.peak / max(1, self.num_pages - 1),
+            kv_bytes=self._seq_leaf_bytes(self.num_pages * self.page_size),
+        )
+        return rec

@@ -72,3 +72,30 @@ class BatchedServer:
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
                 self.steps_used += 1
         return [[int(t[i]) for t, e in steps if e[i]] for i in range(n)]
+
+
+def grouped_reference_streams(cfg, params, pctx, mesh, prompts, max_news,
+                              *, seq_budget: int, eos: int = -1):
+    """Fixed-batch reference streams for HETEROGENEOUS prompt lengths.
+
+    ``BatchedServer.run`` wants a rectangular (n, plen) prompt array, so
+    requests are grouped by prompt length and each group runs as one
+    fixed batch at the group's max budget. Per-row decode math is
+    independent of batch composition, so every request's greedy stream
+    is the same as in any other batch — these are THE streams a paged /
+    chunked-admission engine must reproduce bitwise. Returned truncated
+    to each request's own ``max_new``, in submission order.
+    """
+    by_len = {}
+    for i, p in enumerate(prompts):
+        by_len.setdefault(len(p), []).append(i)
+    outs = [None] * len(prompts)
+    for plen, idxs in by_len.items():
+        batch = np.stack([np.asarray(prompts[i], np.int32) for i in idxs])
+        hi = int(max(max_news[i] for i in idxs))
+        server = BatchedServer(cfg, params, slots=len(idxs),
+                               seq_budget=seq_budget, pctx=pctx, mesh=mesh)
+        streams = server.run(batch, hi, eos=eos)
+        for j, i in enumerate(idxs):
+            outs[i] = streams[j][:int(max_news[i])]
+    return outs

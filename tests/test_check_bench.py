@@ -38,7 +38,11 @@ LAT = {
 }
 SRV = {"rows": [
     {"mode": "static", "identical": True, "tok_s": 50.0},
-    {"mode": "continuous", "identical": True, "tok_s": 45.0}]}
+    {"mode": "continuous", "identical": True, "tok_s": 45.0},
+    {"mode": "continuous_paged", "identical": True, "tok_s": 40.0,
+     "kv_bytes": 16384, "kv_bytes_monolithic": 18432,
+     "memory_per_request": 2730.7, "page_occupancy": 0.86,
+     "page_size": 4, "kv_pages": 8}]}
 
 
 def test_identical_records_pass():
@@ -101,8 +105,35 @@ def test_serving_contract():
     fresh["rows"][1]["identical"] = False
     errs = check_serving(SRV, fresh)
     assert any("bitwise" in e and "continuous" in e for e in errs)
-    fresh = {"rows": [SRV["rows"][0]]}      # dropped the continuous row
-    assert any("continuous" in e for e in check_serving(SRV, fresh))
+    fresh = {"rows": SRV["rows"][:1]}       # dropped two modes
+    errs = check_serving(SRV, fresh)
+    assert any("'continuous'" in e for e in errs)
+    assert any("'continuous_paged'" in e for e in errs)
+
+
+def test_serving_paged_row_invariants():
+    """The memory row's gates: paged bytes must not exceed the
+    monolithic reservation, memory_per_request must be present and
+    positive, page_occupancy in (0, 1] — and a row that silently loses
+    one of those fields fails coverage."""
+    fresh = copy.deepcopy(SRV)
+    assert check_serving(SRV, fresh) == []
+    fresh["rows"][2]["kv_bytes"] = 99999           # > monolithic
+    errs = check_serving(SRV, fresh)
+    assert any("MORE KV bytes" in e for e in errs)
+    fresh = copy.deepcopy(SRV)
+    fresh["rows"][2]["page_occupancy"] = 1.5
+    assert any("page_occupancy" in e for e in check_serving(SRV, fresh))
+    fresh["rows"][2]["page_occupancy"] = 0.0
+    assert any("page_occupancy" in e for e in check_serving(SRV, fresh))
+    fresh = copy.deepcopy(SRV)
+    fresh["rows"][2]["memory_per_request"] = 0
+    assert any("memory_per_request" in e
+               for e in check_serving(SRV, fresh))
+    fresh = copy.deepcopy(SRV)
+    del fresh["rows"][2]["kv_bytes_monolithic"]
+    errs = check_serving(SRV, fresh)
+    assert any("lost its 'kv_bytes_monolithic'" in e for e in errs)
 
 
 def test_cli_offline_self_compare_passes(tmp_path):

@@ -1,0 +1,183 @@
+"""Paged-KV host bookkeeping (src/repro/serving/paging.py):
+
+  * deterministic unit tests: scratch-page convention, LIFO reuse,
+    reservation accounting, exhaustion/double-free/overflow errors,
+    byte-budget sizing;
+  * a hypothesis-driven model-based property suite (the PR-6
+    group-boundary pattern from test_exchange.py): arbitrary
+    interleaved reserve/alloc/grow/free sequences against a reference
+    model must never leak, double-allocate, or cross-link pages, and
+    ``page_indptr``/``page_indices`` must stay an exclusive cumsum
+    consistent with every slot's page list.
+
+All host logic — no jax, everything smoke.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.paging import (DEFAULT_PAGE_SIZE, PagePool, PageTables,
+                                  SCRATCH_PAGE, page_bytes,
+                                  pages_for_budget, pages_for_len,
+                                  paging_stats)
+
+
+@pytest.mark.smoke
+def test_pool_scratch_is_never_allocated():
+    pool = PagePool(num_pages=5, page_size=4)
+    ids = pool.alloc(4, draw_reservation=False)
+    assert sorted(ids) == [1, 2, 3, 4]        # every page but scratch
+    assert SCRATCH_PAGE not in ids
+    assert pool.free_pages == 0 and pool.allocated_pages == 4
+    with pytest.raises(RuntimeError):         # exhausted
+        pool.alloc(1, draw_reservation=False)
+    pool.free([2])
+    assert pool.alloc(1, draw_reservation=False) == [2]   # LIFO reuse
+    with pytest.raises(RuntimeError):
+        pool.free([2, 2])                     # double free
+    with pytest.raises(ValueError):
+        pool.free([0])                        # scratch is not freeable
+    with pytest.raises(ValueError):
+        pool.free([99])
+
+
+@pytest.mark.smoke
+def test_pool_reservations_gate_admission_and_back_allocs():
+    pool = PagePool(num_pages=8, page_size=4)     # 7 allocatable
+    assert pool.can_reserve(7) and not pool.can_reserve(8)
+    pool.reserve(5)
+    assert pool.reserved == 5
+    # a second admission sees only the unpromised remainder
+    assert pool.can_reserve(2) and not pool.can_reserve(3)
+    with pytest.raises(RuntimeError):
+        pool.reserve(3)
+    # engine-path allocs draw the promise down
+    pool.alloc(3)
+    assert pool.reserved == 2 and pool.allocated_pages == 3
+    with pytest.raises(RuntimeError):             # over-draw the promise
+        pool.alloc(3)
+    pool.unreserve(2)                             # EOS before full growth
+    assert pool.reserved == 0
+    with pytest.raises(RuntimeError):
+        pool.unreserve(1)
+    assert pool.peak == 3                         # high-water mark
+
+
+@pytest.mark.smoke
+def test_tables_rows_pad_with_scratch_and_clear_frees():
+    t = PageTables(slots=3, max_pages=4)
+    assert (t.table == SCRATCH_PAGE).all()
+    t.assign(1, [5, 7])
+    assert t.table[1].tolist() == [5, 7, 0, 0]
+    assert t.table[0].tolist() == [0, 0, 0, 0]
+    t.assign(1, [2])
+    assert t.pages(1) == [5, 7, 2] and t.npages(1) == 3
+    with pytest.raises(RuntimeError):             # table-width overflow
+        t.assign(1, [9, 11])
+    assert t.page_indptr.tolist() == [0, 0, 3, 3]
+    assert t.page_indices.tolist() == [5, 7, 2]
+    assert t.clear(1) == [5, 7, 2]
+    assert (t.table[1] == SCRATCH_PAGE).all() and t.npages(1) == 0
+
+
+@pytest.mark.smoke
+def test_sizing_helpers():
+    from repro.configs import get_config
+
+    assert pages_for_len(1, 8) == 1 and pages_for_len(8, 8) == 1
+    assert pages_for_len(9, 8) == 2 and pages_for_len(0, 8) == 1
+    cfg = get_config("mixtral-8x7b").reduced()
+    pb = page_bytes(cfg, DEFAULT_PAGE_SIZE)
+    assert pb == (2 * cfg.n_kv_heads * cfg.head_dim_
+                  * DEFAULT_PAGE_SIZE * cfg.n_layers * 4)
+    assert pages_for_budget(cfg, 10 * pb, DEFAULT_PAGE_SIZE) == 10
+    mla = get_config("deepseek-v2-lite-16b").reduced()
+    assert page_bytes(mla, 8) == ((mla.mla.kv_lora + mla.mla.qk_rope)
+                                  * 8 * mla.n_layers * 4)
+    rwkv = get_config("rwkv6-7b").reduced()
+    assert page_bytes(rwkv, 8) == 0               # no seq-indexed cache
+    assert pages_for_budget(rwkv, 1 << 30, 8) == 2
+    with pytest.raises(ValueError):
+        PagePool(num_pages=1, page_size=8)        # scratch needs a peer
+    with pytest.raises(ValueError):
+        PagePool(num_pages=4, page_size=0)
+
+
+@pytest.mark.smoke
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_pool_tables_model_property(seed):
+    """Model-based property: random interleaved reserve / admit /
+    grow / release sequences keep the pool + tables consistent with a
+    reference dict model — pages are never leaked, double-allocated,
+    or shared between slots; ``page_indptr`` stays the exclusive cumsum
+    of per-slot page counts and ``page_indices`` their concatenation;
+    free + allocated always partition the non-scratch pages."""
+    rng = np.random.default_rng(seed)
+    slots = int(rng.integers(1, 5))
+    max_pages = int(rng.integers(1, 5))
+    num_pages = int(rng.integers(2, 2 + slots * max_pages + 3))
+    pool = PagePool(num_pages, page_size=4)
+    tables = PageTables(slots, max_pages)
+    model: dict = {}            # slot -> {"pages": [...], "reserved": n}
+
+    for _ in range(60):
+        op = rng.integers(0, 3)
+        if op == 0:                                   # admit a free slot
+            free = [s for s in range(slots) if s not in model]
+            if not free:
+                continue
+            want = int(rng.integers(1, max_pages + 1))
+            if not pool.can_reserve(want):
+                # the gate must be exact: reserving anyway raises
+                with pytest.raises(RuntimeError):
+                    pool.reserve(want)
+                continue
+            slot = free[int(rng.choice(len(free)))]
+            pool.reserve(want)
+            model[slot] = {"pages": [], "reserved": want}
+        elif op == 1:                                 # grow an owner
+            owners = [s for s in model
+                      if model[s]["reserved"] > len(model[s]["pages"])]
+            if not owners:
+                continue
+            slot = owners[int(rng.choice(len(owners)))]
+            got = pool.alloc(1)
+            tables.assign(slot, got)
+            model[slot]["pages"] += got
+        else:                                         # release an owner
+            if not model:
+                continue
+            slot = list(model)[int(rng.choice(len(model)))]
+            rec = model.pop(slot)
+            leftover = rec["reserved"] - len(rec["pages"])
+            if leftover:
+                pool.unreserve(leftover)
+            freed = tables.clear(slot)
+            assert freed == rec["pages"]
+            pool.free(freed)
+
+        # ---- invariants after EVERY op ----
+        allocated = [p for s in model for p in model[s]["pages"]]
+        assert len(set(allocated)) == len(allocated)      # no cross-link
+        assert SCRATCH_PAGE not in allocated
+        assert pool.allocated_pages == len(allocated)     # no leak
+        assert pool.free_pages == num_pages - 1 - len(allocated)
+        assert pool.reserved == sum(
+            m["reserved"] - len(m["pages"]) for m in model.values())
+        assert pool.reserved <= pool.free_pages
+        indptr = tables.page_indptr
+        counts = [tables.npages(s) for s in range(slots)]
+        assert indptr.tolist() == \
+            np.concatenate([[0], np.cumsum(counts)]).tolist()
+        flat = tables.page_indices
+        for s in range(slots):
+            seg = flat[indptr[s]:indptr[s + 1]].tolist()
+            assert seg == tables.pages(s)
+            assert seg == (model[s]["pages"] if s in model else [])
+            # device row: allocated ids then scratch padding
+            row = tables.table[s].tolist()
+            assert row == seg + [SCRATCH_PAGE] * (max_pages - len(seg))
+        stats = paging_stats(pool, tables)
+        assert stats["allocated_pages"] == len(allocated)
+        assert stats["peak_pages"] >= stats["allocated_pages"]

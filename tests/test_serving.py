@@ -2,17 +2,23 @@
 
   * scheduler: strict FCFS with arrival gating + seq-budget validation
     (pure host logic, smoke);
-  * slot manager: one fixed cache, per-slot positions, jitted prefill
-    splicing (smoke);
-  * metrics: summary shape + JSON round-trip (smoke);
-  * THE contract: continuous-batching output is per-request
-    bitwise-identical to a one-shot fixed-batch ``BatchedServer``
-    reference, with staggered arrivals that force mid-stream slot
-    refills — locally, and at world 4 on an EP mesh for dist_impl in
-    {bulk, pipelined, rdma} (subprocess, like every multi-device test);
+  * slot manager: paged KV (shared page pool + per-slot page tables,
+    reservation-gated admission) with the monolithic fallback for
+    attention-free archs (smoke; the allocator property suite lives in
+    test_paging.py);
+  * metrics: summary shape + JSON round-trip (smoke), and the TTFT
+    idle-fast-forward regression (t_ready excludes virtual-clock gaps);
+  * chunked prefill: N-chunk admission == one-shot prefill bitwise,
+    including the chunk-boundary == page-boundary case;
+  * THE contract: paged + chunked continuous-batching output is
+    per-request bitwise-identical to fixed-batch references, with
+    staggered arrivals forcing mid-stream refills and heterogeneous
+    prompt lengths — locally, and at world 4 on an EP mesh for
+    dist_impl in {bulk, pipelined, rdma} on a dropless spec
+    (subprocess, like every multi-device test);
   * the serve CLI threads --eos through (the old dead-EOS bug);
-  * bench_serving --smoke emits valid JSON rows for both modes, with
-    the continuous row finishing in fewer decode steps.
+  * bench_serving --smoke emits valid JSON rows for all three modes,
+    incl. the paged row's memory-per-request fields.
 """
 import json
 import subprocess
@@ -111,35 +117,86 @@ def test_metrics_summary_json_roundtrip():
 
 @pytest.mark.smoke
 def test_slot_manager_insert_and_per_slot_pos():
-    """insert_prefill splices a batch-1 prefill cache into one slot of
-    the big cache (every leaf row + its pos entry) without touching the
-    other slots."""
+    """Paged mode: insert_prefill draws the prompt's pages from the
+    slot's admission reservation, scatters the batch-1 prefill cache
+    into the shared pool, and the page-table gather reconstructs
+    exactly the monolithic view — other slots' rows stay scratch."""
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.models.serve import _paged_view, prefill
+    from repro.serving import SlotKVManager
+
+    cfg = get_config("qwen2-7b").reduced()
+    pctx = make_pctx(cfg, None, train=False)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    kv = SlotKVManager(cfg, slots=3, seq_budget=12, dtype=jnp.float32,
+                       page_size=4)
+    assert kv.paged and kv.view_len == 12 and kv.pages_per_slot == 3
+    assert kv.num_pages == 3 * 3 + 1          # memory parity + scratch
+    assert kv.cache["pos"].shape == (3,) and kv.free_slots == 3
+    assert kv.cache["pages"].shape == (3, 3)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    _, pc = jax.jit(lambda p, b: prefill(cfg, p, b, 12, pctx,
+                                         dtype=jnp.float32))(
+        params, {"tokens": toks})
+    st = object()
+    slot = kv.alloc(st, seq_need=10)          # reserves ceil(10/4) = 3
+    assert slot == 0 and kv.pool.reserved == 3
+    kv.insert_prefill(slot, pc, prompt_len=8)     # draws ceil(8/4) = 2
+    assert kv.tables.npages(slot) == 2 and kv.pool.reserved == 1
+    assert np.asarray(kv.cache["pos"]).tolist() == [8, 0, 0]
+    pages = np.asarray(kv.cache["pages"])
+    assert pages[slot].tolist() == kv.tables.pages(slot) + [0]
+    assert (pages[[1, 2]] == 0).all()
+    for key, pool_leaf in kv.cache["layers"].items():
+        small = np.asarray(pc["layers"][key])
+        view = np.asarray(jax.vmap(
+            lambda pl: _paged_view(pl, kv.cache["pages"], kv.view_len)
+        )(pool_leaf))
+        # the slot's gathered rows == the prefill rows it covers (two
+        # 4-row pages back the 8 prompt rows; rows 8..11 map to scratch)
+        np.testing.assert_array_equal(view[:, slot, :8], small[:, 0, :8])
+    # growth draws the last reserved page, then release returns it all
+    kv.ensure_position(slot, 8)
+    assert kv.tables.npages(slot) == 3 and kv.pool.reserved == 0
+    kv.sync_tables()
+    assert np.asarray(kv.cache["pages"])[slot].tolist() == \
+        kv.tables.pages(slot)
+    kv.release(slot)
+    assert kv.free_slots == 3 and kv.owner == {}
+    assert kv.pool.allocated_pages == 0 and kv.pool.reserved == 0
+    stats = kv.stats()
+    assert stats["paged"] and stats["kv_bytes"] > 0
+    assert stats["peak_pages"] == 3
+
+
+@pytest.mark.smoke
+def test_slot_manager_monolithic_fallback_for_attention_free():
+    """RWKV has no sequence-indexed cache: the manager stays monolithic
+    (view_len None) and insert_prefill splices whole slot rows."""
     from repro.configs import get_config
     from repro.launch.steps import make_pctx
     from repro.models.model import init_params
     from repro.models.serve import prefill
     from repro.serving import SlotKVManager
 
-    cfg = get_config("qwen2-7b").reduced()
+    cfg = get_config("rwkv6-7b").reduced()
     pctx = make_pctx(cfg, None, train=False)
     params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
-    kv = SlotKVManager(cfg, slots=3, seq_budget=12, dtype=jnp.float32)
-    assert kv.cache["pos"].shape == (3,) and kv.free_slots == 3
-    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
-    _, pc = jax.jit(lambda p, b: prefill(cfg, p, b, 12, pctx,
+    kv = SlotKVManager(cfg, slots=2, seq_budget=20, dtype=jnp.float32)
+    assert not kv.paged and kv.view_len is None
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab)
+    _, pc = jax.jit(lambda p, b: prefill(cfg, p, b, 20, pctx,
                                          dtype=jnp.float32))(
         params, {"tokens": toks})
-    before = jax.tree.map(np.asarray, kv.cache["layers"])
     kv.insert_prefill(1, pc)
-    assert np.asarray(kv.cache["pos"]).tolist() == [0, 8, 0]
+    assert np.asarray(kv.cache["pos"]).tolist() == [0, 16]
     for key, leaf in kv.cache["layers"].items():
-        got, small = np.asarray(leaf), np.asarray(pc["layers"][key])
-        np.testing.assert_array_equal(got[:, 1], small[:, 0])
-        np.testing.assert_array_equal(got[:, 0], np.asarray(before[key])[:, 0])
-    st = object()
-    assert kv.alloc(st) == 0 and kv.occupancy == 1
-    kv.release(0)
-    assert kv.free_slots == 3 and kv.owner == {}
+        np.testing.assert_array_equal(np.asarray(leaf)[:, 1],
+                                      np.asarray(pc["layers"][key])[:, 0])
+    assert kv.stats() == {"paged": False, "slots": 2,
+                          "kv_bytes_monolithic": 0, "kv_bytes": 0}
 
 
 @pytest.mark.smoke
@@ -253,11 +310,85 @@ def test_engine_eos_stops_and_cli_threads_eos():
     assert outs == expected           # same seed/shapes as above
 
 
+def test_chunked_prefill_bitwise_equals_one_shot_local():
+    """A prompt split across N admission chunks yields a bitwise
+    identical first token and stream vs one-shot prefill — for a ragged
+    last chunk AND the chunk-boundary == page-boundary case — and the
+    engine really spent chunk-only steps on the long admission."""
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.serving import ServingEngine
+
+    cfg = get_config("mixtral-8x7b").reduced()
+    pctx = make_pctx(cfg, None, train=False)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    rng = np.random.default_rng(3)
+    plen, max_new, budget = 21, 5, 28
+    prompt = rng.integers(0, cfg.vocab, plen).astype(np.int32)
+    page = 4
+
+    def serve(chunk):
+        eng = ServingEngine(cfg, params, slots=1, seq_budget=budget,
+                            pctx=pctx, page_size=page,
+                            prefill_chunk=chunk)
+        eng.submit(prompt, max_new)
+        eng.run()
+        return eng.outputs[0], eng.metrics.prefill_steps
+
+    one_shot, ps0 = serve(0)
+    assert ps0 == 0 and len(one_shot) == max_new
+    # ragged last chunk (21 = 8+8+5) and chunk == page_size (21 = 4*5+1)
+    for chunk in (8, page):
+        got, psteps = serve(chunk)
+        assert got == one_shot, chunk
+        assert psteps >= plen // chunk - 1, chunk
+
+
+def test_ttft_excludes_idle_fast_forward():
+    """Regression (satellite 4): a request arriving after a long idle
+    gap must not be charged the engine's wall-clock wait in TTFT. The
+    virtual clock fast-forwards over the gap; t_ready stamps the wall
+    moment the clock covers the arrival, and TTFT measures from there
+    — while t_first - t_submit still contains the real sleep."""
+    import time as _time
+
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.serving import ServingEngine
+
+    cfg = get_config("qwen2-7b").reduced()
+    pctx = make_pctx(cfg, None, train=False)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    eng = ServingEngine(cfg, params, slots=1, seq_budget=12, pctx=pctx)
+    # warm-up request with the SAME shapes: compiles prefill + decode so
+    # the late request's admission is pure cached execution
+    warm = eng.submit(np.zeros(4, np.int32), 2, arrival=0)
+    st = eng.submit(np.ones(4, np.int32), 2, arrival=500)
+    _time.sleep(0.3)                   # wall time before stepping at all
+    eng.run()
+    assert st.t_first is not None and st.t_ready is not None
+    naive = st.t_first - st.t_submit
+    ttft = st.t_first - st.t_ready
+    assert naive >= 0.3                # the sleep IS in the naive span
+    assert ttft < 0.25                 # ...but not in the reported TTFT
+    summary = eng.metrics.summary([warm, st])
+    assert summary["idle_steps"] >= 490
+    # the summary aggregates the t_ready-based definition
+    warm_ttft = warm.t_first - warm.t_ready
+    assert summary["ttft_s"]["mean"] == pytest.approx(
+        (warm_ttft + ttft) / 2)
+
+
 def test_engine_bitwise_matches_reference_world4_ep():
-    """World-4 EP: continuous batching with staggered arrivals ==
-    fixed-batch reference, bitwise, for every decode-runnable strategy.
-    The pure-EP (4,) mesh lets the one-sided rdma kernels execute under
-    interpret; (1, 4) exercises the serve CLI's mesh shape."""
+    """World-4 EP bitwise matrix: the PAGED + chunked-admission engine
+    under forced mid-stream refills with HETEROGENEOUS prompt lengths
+    == the fixed-batch reference, for every decode-runnable strategy on
+    a dropless spec (mixtral's default). The pure-EP (4,) mesh lets the
+    one-sided rdma kernels execute under interpret; (1, 4) exercises
+    the serve CLI's mesh shape. The page pool is deliberately smaller
+    than the monolithic slots x seq_budget reservation."""
     run_sub("""
     import numpy as np, jax, jax.numpy as jnp
     from repro.configs import get_config
@@ -265,13 +396,18 @@ def test_engine_bitwise_matches_reference_world4_ep():
     from repro.models.model import init_params
     from repro.compat import make_mesh
     from repro.distributed import sharding as shd
-    from repro.serving import BatchedServer, ServingEngine
+    from repro.serving import (BatchedServer, ServingEngine,
+                               grouped_reference_streams)
     cfg = get_config("mixtral-8x7b").reduced()
+    assert cfg.moe.dropless            # the matrix runs on a dropless spec
     rng = np.random.default_rng(0)
-    n, plen = 4, 8
-    prompts = rng.integers(0, cfg.vocab, (n, plen)).astype(np.int32)
-    max_news = [3, 5, 2, 4]
-    budget = plen + max(max_news)
+    # heterogeneous (incl. a repeat); every length a multiple of the EP
+    # world so the sharded prefill's row count divides the mesh
+    plens = [8, 4, 12, 8, 4]
+    prompts = [rng.integers(0, cfg.vocab, L).astype(np.int32)
+               for L in plens]
+    max_news = [3, 5, 2, 4, 3]
+    budget = max(plens) + max(max_news)
     cases = [(("data", "model"), (1, 4), "bulk"),
              (("model",), (4,), "pipelined"),
              (("model",), (4,), "rdma")]
@@ -283,21 +419,24 @@ def test_engine_bitwise_matches_reference_world4_ep():
                              dtype=jnp.float32, ep_world=4)
         params = jax.device_put(params, shd.params_shardings(
             cfg, mesh, params, serve=False))
-        ref = BatchedServer(cfg, params, slots=n, seq_budget=budget,
-                            pctx=pctx, mesh=mesh)
-        ref_out = ref.run(prompts, max(max_news))
-        expected = [ref_out[i][:max_news[i]] for i in range(n)]
+        expected = grouped_reference_streams(
+            cfg, params, pctx, mesh, prompts, max_news,
+            seq_budget=budget)
+        # pool < monolithic: 2 slots x ceil(17/4)=5 pages, give 8+scratch
         eng = ServingEngine(cfg, params, slots=2, seq_budget=budget,
-                            pctx=pctx, mesh=mesh)
-        for i in range(n):
+                            pctx=pctx, mesh=mesh, page_size=4,
+                            kv_pages=9, prefill_chunk=4)
+        assert eng.kv.paged
+        for i in range(len(prompts)):
             eng.submit(prompts[i], max_news[i], arrival=i)
         states = eng.run()
-        got = [eng.outputs[i] for i in range(n)]
+        got = [eng.outputs[i] for i in range(len(prompts))]
         assert got == expected, (axes, impl)
         refills = {}
         for s in states:
             refills[s.slot] = refills.get(s.slot, 0) + 1
         assert max(refills.values()) > 1, (axes, impl)
+        assert eng.metrics.prefill_steps > 0, (axes, impl)  # chunks ran
         print(f"{axes} {impl} OK steps={eng.metrics.decode_steps}")
     # the EP capacity guard applies to EXPLICITLY capacity-mode engines
     # only: at capacity_factor=1.0 / dropless=False a 16-slot engine can
@@ -324,9 +463,10 @@ def test_engine_bitwise_matches_reference_world4_ep():
 
 # ------------------------------------------------------------ benchmark --
 def test_bench_serving_smoke_emits_valid_rows(tmp_path):
-    """bench_serving --smoke: valid JSON, both modes present + identical
-    to the reference, continuous strictly fewer decode steps (the
-    continuous-batching win under staggered arrivals)."""
+    """bench_serving --smoke: valid JSON, all three modes present +
+    identical to their references, continuous strictly fewer decode
+    steps than static, and the paged row's pool genuinely undercuts the
+    monolithic reservation (the memory-per-request win)."""
     out = tmp_path / "bench_serving.json"
     r = subprocess.run(
         [sys.executable, "-m", "benchmarks.bench_serving", "--smoke",
@@ -338,10 +478,15 @@ def test_bench_serving_smoke_emits_valid_rows(tmp_path):
     rec = json.loads(out.read_text())
     assert rec["meta"]["bench"] == "bench_serving"
     rows = {row["mode"]: row for row in rec["rows"]}
-    assert set(rows) == {"static", "continuous"}
+    assert set(rows) == {"static", "continuous", "continuous_paged"}
     for row in rows.values():
         assert row["identical"] is True
         assert row["decode_steps"] > 0 and row["tokens"] > 0
     assert rows["continuous"]["decode_steps"] < \
         rows["static"]["decode_steps"]
     assert rows["continuous"]["tokens"] == rows["static"]["tokens"]
+    paged = rows["continuous_paged"]
+    assert paged["kv_bytes"] <= paged["kv_bytes_monolithic"]
+    assert paged["memory_per_request"] > 0
+    assert 0 < paged["page_occupancy"] <= 1
+    assert len(set(paged["prompt_lens"])) > 1     # heterogeneous lengths

@@ -120,6 +120,35 @@ def check_serving(committed: dict, fresh: dict) -> list[str]:
         if not float(r.get("tok_s", 0)) > 0:
             errs.append(f"serving: mode '{r.get('mode')}' has invalid "
                         f"tok_s={r.get('tok_s')!r}")
+        if r.get("mode") == "continuous_paged":
+            errs.extend(_check_paged_row(r))
+    return errs
+
+
+def _check_paged_row(r: dict) -> list[str]:
+    """Invariants of the paged-KV memory row: the page pool must be a
+    real saving (paged <= monolithic bytes), memory_per_request must be
+    reported and positive, and peak page occupancy must be a sane
+    fraction of the pool."""
+    errs = []
+    for field in ("kv_bytes", "kv_bytes_monolithic", "memory_per_request",
+                  "page_occupancy", "page_size", "kv_pages"):
+        if field not in r:
+            errs.append(f"serving: continuous_paged row lost its "
+                        f"'{field}' field")
+    if errs:
+        return errs
+    if r["kv_bytes"] > r["kv_bytes_monolithic"]:
+        errs.append(
+            f"serving: paged pool uses MORE KV bytes ({r['kv_bytes']}) "
+            f"than the monolithic reservation "
+            f"({r['kv_bytes_monolithic']}) — paging saves nothing")
+    if not float(r["memory_per_request"]) > 0:
+        errs.append(f"serving: invalid memory_per_request="
+                    f"{r['memory_per_request']!r}")
+    if not 0 < float(r["page_occupancy"]) <= 1:
+        errs.append(f"serving: page_occupancy={r['page_occupancy']!r} "
+                    "outside (0, 1]")
     return errs
 
 
