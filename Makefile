@@ -1,7 +1,7 @@
 # FlashMoE repro — common entry points. Pure-Python JAX project: no
 # build step, PYTHONPATH=src is the only setup (see README.md).
 
-.PHONY: test smoke check-docs check-bench bench bench-smoke bench-serving serve-smoke dryrun
+.PHONY: test smoke check-docs check-bench bench bench-smoke bench-serving serve-smoke chaos-smoke dryrun
 
 # tier-1 verify: the whole suite (multi-device cases spawn subprocesses)
 test:
@@ -39,6 +39,15 @@ serve-smoke:
 	PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
 		--reduced --requests 4 --slots 2 --prompt-len 8 --max-new 6 \
 		--arrival-rate 0.5 --eos 7
+
+# fault-injection sanity run: a mid-decode EP rank loss at world 4 plus
+# a transient step error — the CLI replays the request set clean AND
+# faulted and exits nonzero unless every recovered stream is
+# bitwise-identical to the clean reference (serving/faults.py)
+chaos-smoke:
+	PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+		--reduced --ep 4 --dist-impl pipelined --requests 4 --slots 2 \
+		--prompt-len 8 --max-new 6 --faults rank_down@4:1,transient@2
 
 # lower+compile one production cell on the host-placeholder mesh
 dryrun:

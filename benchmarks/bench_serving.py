@@ -17,6 +17,16 @@ prompt admission — its ``memory_per_request`` / ``kv_bytes`` fields are
 the paging win, and ``identical`` (vs per-length fixed-batch reference
 groups) certifies the bitwise contract survives paging.
 
+A fourth row, **continuous_faulted**, re-serves the SAME workload as
+the continuous row under a deterministic fault schedule
+(``serving.faults``: a transient step error + a KV page-pool squeeze;
+plus a mid-run rank loss when ``--ep`` > 1) — its ``recovery_steps``
+(faulted minus clean decode steps), ``replayed_tokens`` and
+``lost_tokens`` fields quantify the recovery cost, and ``identical`` /
+``lost_tokens == 0`` certify that every recovered stream is
+bitwise-identical to the clean reference (tools/check_bench.py gates
+this).
+
 All rows record decode steps, slot occupancy and an ``identical`` flag:
 per-request greedy token streams must be bitwise-identical to a one-shot
 fixed-batch reference holding ALL requests (row-independence of the
@@ -109,9 +119,59 @@ def run_benchmark(args):
         rows.append(row)
         print(f"{mode:11s} steps={steps:4d} tokens={tokens:4d} "
               f"identical={row['identical']}", file=sys.stderr)
+        if mode == "continuous":
+            cont_steps = int(steps)
+    rows.append(run_faulted_row(args, cfg, mesh, pctx, params,
+                                prompts, max_new, arrivals, expected,
+                                seq_budget, cont_steps))
     if supports_paging(cfg):
         rows.append(run_paged_row(args, cfg, mesh, pctx, params))
     return rows
+
+
+def run_faulted_row(args, cfg, mesh, pctx, params, prompts, max_new,
+                    arrivals, expected, seq_budget, cont_steps):
+    """The recovery-cost row: the continuous row's workload under a
+    deterministic fault schedule (serving/faults.py). ``lost_tokens``
+    counts reference tokens missing from the recovered streams — the
+    recovery contract is that it is ALWAYS 0 and every stream is
+    bitwise-identical to the clean reference; ``recovery_steps`` (extra
+    decode steps vs the clean run) and ``replayed_tokens`` are the price
+    paid for that."""
+    from repro.serving import (FaultInjector, pool_pressure, rank_down,
+                               transient_step_error)
+    schedule = [transient_step_error(2), pool_pressure(3, 2, duration=2)]
+    if args.ep > 1:
+        schedule.append(rank_down(4, 1))   # mid-decode EP rank loss
+    inj = FaultInjector(schedule, seed=args.seed)
+    outs, steps, dt, summary = run_continuous_workload(
+        cfg, params, pctx, mesh, prompts, max_new, arrivals,
+        slots=args.slots, seq_budget=seq_budget, eos=args.eos,
+        injector=inj)
+    tokens = sum(len(o) for o in outs)
+    lost = sum(max(0, len(e) - len(o)) for e, o in zip(expected, outs))
+    row = {
+        "mode": "continuous_faulted", "requests": args.requests,
+        "slots": args.slots, "decode_steps": int(steps),
+        "tokens": int(tokens),
+        "identical": outs == expected,
+        "wall_s": round(dt, 3),
+        "tok_s": round(tokens / dt, 1) if dt > 0 else 0.0,
+        "slot_occupancy": summary["slot_occupancy"],
+        "faults": [f"{s}: {d}" for s, d in inj.log],
+        "recovery_steps": int(steps) - cont_steps,
+        "recoveries": summary["recoveries"],
+        "transient_errors": summary["transient_errors"],
+        "replayed_tokens": summary["replayed_tokens"],
+        "lost_tokens": int(lost),
+    }
+    if args.ep > 1:
+        row["ep"] = args.ep
+        row["dist_impl"] = args.dist_impl
+    print(f"{'cont_fault':11s} steps={steps:4d} tokens={tokens:4d} "
+          f"identical={row['identical']} lost={lost} "
+          f"recovery_steps={row['recovery_steps']}", file=sys.stderr)
+    return row
 
 
 def run_paged_row(args, cfg, mesh, pctx, params):

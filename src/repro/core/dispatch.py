@@ -506,19 +506,27 @@ def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
 
 def distributed_moe(params: dict, x: jax.Array, cfg: MoEConfig,
                     mesh: jax.sharding.Mesh, *, ep_axis: str = "model",
-                    dp_axes=("data",), rng: Optional[jax.Array] = None):
+                    dp_axes=("data",), rng: Optional[jax.Array] = None,
+                    expert_placement=None):
     """Expert-parallel MoE over activations x (B, S, H).
 
     x enters and leaves in the resident layout — batch over dp_axes,
     sequence over the EP ('model') axis — so the MoE boundary adds NO
     collectives beyond its own AllToAll (§Perf iteration 2). Expert
-    weights must already be slot-major (SlotInfo.expand_expert_weights).
+    weights must already be slot-major (SlotInfo.expand_expert_weights;
+    placed layouts per ``expert_placement`` — an expert->slot map, e.g.
+    a post-rank-loss ``rebuild_placement`` — with zero rows in empty
+    slots).
     """
     from jax.sharding import PartitionSpec as P
 
     from repro import compat
 
-    info = SlotInfo.make(cfg.gate.num_experts, mesh.shape[ep_axis])
+    if expert_placement is not None:
+        info = SlotInfo.make_placed(cfg.gate.num_experts,
+                                    mesh.shape[ep_axis], expert_placement)
+    else:
+        info = SlotInfo.make(cfg.gate.num_experts, mesh.shape[ep_axis])
     dp = tuple(a for a in dp_axes if a in mesh.shape)
     tok_spec = P(dp, ep_axis, None)
     w_spec_e = P(ep_axis, None, None)
@@ -612,7 +620,8 @@ def _ep_decode_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
 def distributed_moe_decode(params: dict, x: jax.Array, cfg: MoEConfig,
                            mesh: jax.sharding.Mesh, *,
                            ep_axis: str = "model",
-                           rng: Optional[jax.Array] = None):
+                           rng: Optional[jax.Array] = None,
+                           expert_placement=None):
     """Latency-oriented expert-parallel MoE over decode tokens x (B, H).
 
     The decode counterpart of :func:`distributed_moe`: same strategy
@@ -633,13 +642,21 @@ def distributed_moe_decode(params: dict, x: jax.Array, cfg: MoEConfig,
     so the replicated in_specs resolve without a weight gather.
 
     Expert weights must already be slot-major
-    (SlotInfo.expand_expert_weights). Returns (y (B, H), aux dict).
+    (SlotInfo.expand_expert_weights). ``expert_placement`` (expert ->
+    slot map, e.g. a post-rank-loss ``rebuild_placement``) routes
+    against the CURRENT placed layout instead of the static slot-major
+    one — weights must match it (empty slots carry zero rows). Returns
+    (y (B, H), aux dict).
     """
     from jax.sharding import PartitionSpec as P
 
     from repro import compat
 
-    info = SlotInfo.make(cfg.gate.num_experts, mesh.shape[ep_axis])
+    if expert_placement is not None:
+        info = SlotInfo.make_placed(cfg.gate.num_experts,
+                                    mesh.shape[ep_axis], expert_placement)
+    else:
+        info = SlotInfo.make(cfg.gate.num_experts, mesh.shape[ep_axis])
     # decode plans stay below the kernel tile; the jnp gate avoids the
     # pallas gate kernel's own 128-row tiling on tiny token counts.
     cfg = dataclasses.replace(cfg, expert_compute="einsum",

@@ -73,12 +73,21 @@ class SlotInfo:
     experts; DeepSeek-v3 style) and each source deterministically picks
     replica (rank mod R), which balances load. Expert weights are stored
     slot-major — (slots, H, F) — so the local slice is always contiguous
-    and P-divisible."""
+    and P-divisible.
+
+    ``placement`` (optional, expert -> slot) overrides the static
+    slot-major layout: rank r owns slots [r*local_slots, (r+1)*local_slots)
+    and an expert lives wherever the map says — slots past the last
+    placed expert stay EMPTY (zero counts, zero weight rows, never
+    referenced by any packed_pos), which is what lets a survivor world
+    that does not divide E still host every expert after a rank loss
+    (see :func:`rebuild_placement`)."""
     num_experts: int
     world: int            # EP world size P (model-axis size)
-    slots: int            # max(E, P)
+    slots: int            # max(E, P); world*ceil(E/world) when placed
     replicas: int         # P // E if E < P else 1
     local_slots: int      # slots // P
+    placement: Optional[Tuple[int, ...]] = None  # expert -> slot map
 
     @staticmethod
     def make(num_experts: int, world: int) -> "SlotInfo":
@@ -90,8 +99,34 @@ class SlotInfo:
         return SlotInfo(num_experts, world, world,
                         world // num_experts, 1)
 
+    @staticmethod
+    def make_placed(num_experts: int, world: int,
+                    placement) -> "SlotInfo":
+        """Explicit expert->slot topology (replica-free: E >= P only).
+
+        ``slots = world * ceil(E/world)`` — the smallest slot-major
+        layout every survivor world can host; slots the map does not
+        target stay empty. The identity map on a divisible world
+        normalizes to the plain :meth:`make` layout so default plans
+        stay BITWISE-identical to the pre-placement planner."""
+        placement = tuple(int(p) for p in placement)
+        assert num_experts >= world >= 1, (num_experts, world)
+        assert len(placement) == num_experts, (len(placement), num_experts)
+        local_slots = -(-num_experts // world)
+        slots = world * local_slots
+        assert len(set(placement)) == num_experts, "duplicate slot in map"
+        assert all(0 <= p < slots for p in placement), (placement, slots)
+        if slots == num_experts and placement == tuple(range(num_experts)):
+            return SlotInfo.make(num_experts, world)
+        return SlotInfo(num_experts, world, slots, 1, local_slots,
+                        placement)
+
     def expand_expert_weights(self, w: jax.Array) -> jax.Array:
-        """(E, ...) -> slot-major (slots, ...) with replication if E < P."""
+        """(E, ...) -> slot-major (slots, ...): replication if E < P,
+        placement scatter (zero rows for empty slots) if placed."""
+        if self.placement is not None:
+            out = jnp.zeros((self.slots,) + w.shape[1:], w.dtype)
+            return out.at[jnp.asarray(self.placement)].set(w)
         if self.replicas == 1:
             return w
         return jnp.repeat(w, self.replicas, axis=0)
@@ -100,12 +135,68 @@ class SlotInfo:
                        src_rank: jax.Array) -> jax.Array:
         """Slot of ``expert_idx`` as selected by source ``src_rank``
         (rank-balanced over the R bit-identical replicas when E < P;
-        identity when E >= P). ``src_rank`` may be a scalar rank or a
-        broadcastable array — the local decode path balances over token
-        index instead of rank (same modular mirror)."""
+        identity when E >= P; the placement map when placed).
+        ``src_rank`` may be a scalar rank or a broadcastable array — the
+        local decode path balances over token index instead of rank
+        (same modular mirror)."""
+        if self.placement is not None:
+            return jnp.asarray(self.placement, jnp.int32)[expert_idx]
         if self.replicas == 1:
             return expert_idx
         return expert_idx * self.replicas + (src_rank % self.replicas)
+
+    def owner_of_expert(self, expert: int) -> int:
+        """Host-side: rank owning ``expert`` under this layout."""
+        slot = (self.placement[expert] if self.placement is not None
+                else (expert * self.replicas if self.replicas > 1
+                      else expert))
+        return slot // self.local_slots
+
+    def slot_to_expert(self) -> Tuple[int, ...]:
+        """Host-side inverse map: slot -> expert, -1 for empty slots."""
+        inv = [-1] * self.slots
+        for e in range(self.num_experts):
+            s = (self.placement[e] if self.placement is not None
+                 else (e * self.replicas if self.replicas > 1 else e))
+            inv[s] = e
+        return tuple(inv)
+
+
+def rebuild_placement(info: SlotInfo, survivors) -> SlotInfo:
+    """Survivor re-placement after rank loss: the placement-rebuild arm
+    of the serving recovery path (detect -> quiesce -> REBUILD -> replay).
+
+    ``survivors`` are the surviving rank ids of ``info``'s world, in any
+    order. Experts owned by a survivor STAY with that survivor (renumbered
+    into sorted-survivor order, packed into its slot block in old-slot
+    order); experts of lost ranks are dealt one at a time to the
+    least-loaded survivor (ties -> lowest new rank). Deterministic, and
+    max load never exceeds the new ``ceil(E/world')`` because kept loads
+    are <= the old per-rank slot count <= the new one.
+    """
+    survivors = sorted(set(int(r) for r in survivors))
+    assert survivors and all(0 <= r < info.world for r in survivors), (
+        survivors, info.world)
+    assert info.replicas == 1, "replicated (E < P) layouts re-place by make()"
+    world = len(survivors)
+    assert info.num_experts >= world, (info.num_experts, world)
+    inv = info.slot_to_expert()
+    owned = {r: [e for e in inv[r * info.local_slots:
+                                (r + 1) * info.local_slots] if e >= 0]
+             for r in range(info.world)}
+    local_slots = -(-info.num_experts // world)
+    loads = [len(owned[r]) for r in survivors]
+    placement = [0] * info.num_experts
+    for new_rank, old_rank in enumerate(survivors):
+        for i, e in enumerate(owned[old_rank]):
+            placement[e] = new_rank * local_slots + i
+    lost = [e for r in range(info.world) if r not in survivors
+            for e in owned[r]]
+    for e in lost:
+        new_rank = min(range(world), key=lambda r: loads[r])
+        placement[e] = new_rank * local_slots + loads[new_rank]
+        loads[new_rank] += 1
+    return SlotInfo.make_placed(info.num_experts, world, placement)
 
 
 def phase_tile_m(phase: str) -> int:
@@ -309,7 +400,8 @@ def make_exchange_plan(gate_cfg: GateConfig, slot_ids: jax.Array,
                        num_chunks: int = 1, axis: str = "model",
                        mesh_axes=None,
                        tile_m: Optional[int] = None,
-                       dropless: bool = False) -> ExchangePlan:
+                       dropless: bool = False,
+                       expert_placement=None) -> ExchangePlan:
     """Phase-aware planner: placement + layouts for one routed batch.
 
     ``slot_ids``: (T, k) slot per (token, choice), already replica-
@@ -319,7 +411,18 @@ def make_exchange_plan(gate_cfg: GateConfig, slot_ids: jax.Array,
     ``dropless=True`` replaces the capacity layout with ragged
     count-sized groups (the same ``phase`` tile still sets the group
     alignment): ``capacity_factor`` is ignored and no token ever drops.
+
+    ``expert_placement`` (optional, expert -> slot): ``slot_ids`` are
+    EXPERT ids and are mapped through the placement here; ``info`` must
+    carry the matching placed topology (:meth:`SlotInfo.make_placed`).
+    ``None`` (the default) is today's static slot-major layout — the
+    plan is bitwise-identical to the pre-placement planner.
     """
+    if expert_placement is not None:
+        placed = tuple(int(p) for p in expert_placement)
+        assert info.placement in (None, placed), \
+            "expert_placement disagrees with info.placement"
+        slot_ids = jnp.asarray(placed, jnp.int32)[slot_ids]
     tile = phase_tile_m(phase) if tile_m is None else tile_m
     T = slot_ids.shape[0]
     if dropless:

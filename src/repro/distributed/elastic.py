@@ -52,3 +52,25 @@ def make_elastic_mesh(devices: Optional[List] = None,
     import numpy as np
     arr = np.array(devices).reshape(d, m)
     return compat.mesh_from_devices(arr, ("data", "model"))
+
+
+def survivor_mesh(mesh: Mesh, axis: str, down_rank: int) -> Optional[Mesh]:
+    """EP-only degradation: the SAME mesh minus ``down_rank`` on ``axis``.
+
+    The serving recovery path uses this for a single-rank loss — every
+    other axis keeps its devices and coordinates, so non-EP shardings
+    stay valid and only the expert placement needs a rebuild
+    (:func:`repro.core.exchange.rebuild_placement`). Returns None when
+    the surviving axis would be degenerate (size < 2) — the engine then
+    degrades to the local (mesh-free) path instead of an EP mesh.
+    """
+    import numpy as np
+    names = tuple(mesh.axis_names)
+    assert axis in names, (axis, names)
+    ax = names.index(axis)
+    devs = np.asarray(mesh.devices)
+    assert 0 <= down_rank < devs.shape[ax], (down_rank, devs.shape)
+    if devs.shape[ax] - 1 < 2:
+        return None
+    return compat.mesh_from_devices(np.delete(devs, down_rank, axis=ax),
+                                    names)

@@ -25,7 +25,8 @@ import json
 import os
 import threading
 import time
-from typing import Callable, List, Optional
+from collections import deque
+from typing import Callable, Deque, List, Optional
 
 
 @dataclasses.dataclass
@@ -36,19 +37,26 @@ class StragglerStats:
 
 
 class StragglerTracker:
-    """Rolling per-step wall-times; the paper's Table 2 delay metric."""
+    """Rolling per-step wall-times; the paper's Table 2 delay metric.
+
+    ``times`` is a bounded deque of the last ``window`` step times, so a
+    months-long serving run records in O(window) memory and ``stats()``
+    describes the SAME window the straggler threshold is computed from
+    (it used to aggregate every step since process start)."""
 
     def __init__(self, window: int = 200, k_sigma: float = 3.0):
         self.window = window
         self.k_sigma = k_sigma
-        self.times: List[float] = []
+        self.times: Deque[float] = deque(maxlen=window)
         self.flagged: List[int] = []
         self._step = 0
 
     def record(self, seconds: float) -> bool:
-        """Record a step time; returns True if it is a straggler."""
+        """Record a step time; returns True if it is a straggler (vs the
+        threshold over the PREVIOUS window, so one outlier cannot raise
+        the bar it is judged against)."""
         self._step += 1
-        hist = self.times[-self.window:]
+        hist = self.times
         is_straggler = False
         if len(hist) >= 10:
             mean = sum(hist) / len(hist)
@@ -57,7 +65,7 @@ class StragglerTracker:
             is_straggler = seconds > thr
         if is_straggler:
             self.flagged.append(self._step)
-        self.times.append(seconds)
+        self.times.append(seconds)   # deque(maxlen=window): self-trimming
         return is_straggler
 
     def stats(self) -> Optional[StragglerStats]:

@@ -22,6 +22,22 @@ with a logged reason):
 ``--static`` runs the fixed-batch baseline (``serving.static``) on the
 same request set instead — the comparison ``benchmarks/bench_serving.py``
 automates.
+
+Chaos mode: ``--faults`` takes a deterministic fault schedule
+(``serving.faults.parse_fault_schedule`` spec — e.g.
+``transient@2,pool@3:2x2`` or ``rank_down@6:1`` under ``--ep 4``), runs
+the SAME request set twice — once clean, once faulted — and exits
+nonzero unless every recovered stream is bitwise-identical to the
+clean reference:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+      --reduced --requests 4 --slots 2 --prompt-len 8 --max-new 6 \
+      --faults transient@2,pool@3:2x2
+
+``--watchdog SECONDS`` arms a per-step deadline (a fire degrades the EP
+exchange one level: fused → rdma → pipelined); ``--heartbeat-file PATH``
+writes a liveness JSON every step; ``--request-ttl N`` cancels any
+request still unfinished N virtual steps after its arrival.
 """
 from __future__ import annotations
 
@@ -46,7 +62,8 @@ from repro.launch.steps import make_pctx
 from repro.models.model import init_params
 # BatchedServer lives in repro.serving.static now; re-exported here for
 # the old import path.
-from repro.serving import (BatchedServer, DEFAULT_PAGE_SIZE, ServingEngine,
+from repro.serving import (BatchedServer, DEFAULT_PAGE_SIZE, FaultInjector,
+                           ServingEngine, parse_fault_schedule,
                            run_continuous_workload, run_static_workload,
                            write_json)
 
@@ -133,6 +150,24 @@ def main(argv=None):
                     choices=list(DIST_IMPLS),
                     help="EP exchange strategy (unrunnable strategies "
                          "downgrade with a logged reason)")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault schedule, e.g. "
+                         "'rank_down@6:1,transient@2,pool@3:2x2' — runs "
+                         "the request set clean AND faulted, exits "
+                         "nonzero unless the recovered streams are "
+                         "bitwise-identical to the clean reference")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for rank_down victim draws (rank=-1)")
+    ap.add_argument("--watchdog", type=float, default=0.0,
+                    help="per-step watchdog deadline floor in seconds "
+                         "(0: off); a fire degrades --dist-impl one "
+                         "level (fused -> rdma -> pipelined)")
+    ap.add_argument("--heartbeat-file", default="",
+                    help="write a liveness JSON (step, queue depth, slot "
+                         "+ page occupancy) here every engine step")
+    ap.add_argument("--request-ttl", type=int, default=0,
+                    help="cancel requests unfinished this many virtual "
+                         "steps after arrival (0: no deadline)")
     args = ap.parse_args(argv)
 
     cfg, mesh, pctx, params = build_serving_setup(args)
@@ -152,12 +187,47 @@ def main(argv=None):
                    "tokens": sum(len(o) for o in outs),
                    "wall_s": round(dt, 3)}
     else:
+        from repro.distributed.fault_tolerance import StepWatchdog
+        wd = (StepWatchdog(min_deadline=args.watchdog)
+              if args.watchdog > 0 else None)
+        extra = dict(watchdog=wd,
+                     heartbeat_file=args.heartbeat_file or None,
+                     request_ttl=args.request_ttl)
+        if args.faults:
+            # chaos mode: the clean run is the oracle for the faulted one
+            ref, _, _, _ = run_continuous_workload(
+                cfg, params, pctx, mesh, prompts, max_new, arrivals,
+                slots=slots, seq_budget=seq_budget, eos=args.eos,
+                page_size=args.page_size, kv_pages=args.kv_pages,
+                prefill_chunk=args.prefill_chunk)
+            inj = FaultInjector(parse_fault_schedule(args.faults),
+                                seed=args.fault_seed)
+            extra["injector"] = inj
         outs, _, dt, stats = run_continuous_workload(
             cfg, params, pctx, mesh, prompts, max_new, arrivals,
             slots=slots, seq_budget=seq_budget, eos=args.eos,
             page_size=args.page_size, kv_pages=args.kv_pages,
-            prefill_chunk=args.prefill_chunk)
+            prefill_chunk=args.prefill_chunk, **extra)
         summary = {"mode": "continuous", **stats}
+        if args.faults:
+            bad = [i for i in range(len(outs)) if outs[i] != ref[i]]
+            summary["mode"] = "continuous_faulted"
+            summary["fault_log"] = [f"{s}: {d}" for s, d in inj.log]
+            summary["streams_identical"] = not bad
+            for step_at, desc in inj.log:
+                print(f"fault @{step_at}: {desc}")
+            if bad:
+                for i in bad[:4]:
+                    print(f"request {i}: faulted {outs[i]} != clean "
+                          f"{ref[i]}")
+                raise SystemExit(
+                    f"chaos run DIVERGED on {len(bad)}/{len(outs)} "
+                    "recovered streams (see above)")
+            print(f"chaos run OK: {len(outs)} streams bitwise-identical "
+                  "to the clean reference "
+                  f"({stats['recoveries']} recoveries, "
+                  f"{stats['transient_errors']} transient errors, "
+                  f"{stats['replayed_tokens']} tokens replayed)")
     total = sum(len(o) for o in outs)
     print(f"served {args.requests} requests ({summary['mode']}, "
           f"{slots} slots), {total} tokens in {dt:.2f}s "

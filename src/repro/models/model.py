@@ -56,6 +56,11 @@ class ParallelContext:
     moe_impl: str = "fused"              # local MoE impl when not EP
     kv_chunk: int = 1024
     ep_world: int = 1                    # slot-major expansion factor
+    # explicit expert -> slot map (hashable tuple; None = static
+    # slot-major). Set by the serving recovery path after a rank loss
+    # (core/exchange.rebuild_placement) so routing follows the CURRENT
+    # survivor layout; weights must be placed to match.
+    expert_placement: Optional[Tuple[int, ...]] = None
     expert_compute: str = "kernel"       # kernel | einsum (dry-run)
     use_pallas_gate: bool = True
     # "megatron": TP weights + seq-resident activations (default).
@@ -226,8 +231,9 @@ def _apply_ffn(cfg: ArchConfig, p_layer, x, pctx: ParallelContext,
             # latency-oriented EP decode: decode-flavor ExchangePlan
             # (8-row capacity tile) over slot-major sharded weights,
             # replicated-hot-expert fast path when E < P.
-            y, aux = distributed_moe_decode(mp, x2d, mcfg_d, pctx.mesh,
-                                            ep_axis=pctx.model_axis)
+            y, aux = distributed_moe_decode(
+                mp, x2d, mcfg_d, pctx.mesh, ep_axis=pctx.model_axis,
+                expert_placement=pctx.expert_placement)
             return y.reshape(shape), aux["aux_loss"] + aux["z_loss"]
         og = run_gate(mp, x2d, mcfg_d)
         info = SlotInfo.make(cfg.moe.num_experts, max(1, pctx.ep_world))
@@ -243,12 +249,31 @@ def _apply_ffn(cfg: ArchConfig, p_layer, x, pctx: ParallelContext,
         if mcfg.d_ff_shared > 0:
             y = y + shared_expert_ffn(mp, x2d, mcfg)
         return y.reshape(shape), og.aux_loss + og.z_loss
-    if pctx.use_ep and pctx.mesh is not None \
-            and pctx.mesh.shape[pctx.model_axis] > 1 and x.ndim == 3:
+    ep_P = (pctx.mesh.shape.get(pctx.model_axis, 1)
+            if (pctx.use_ep and pctx.mesh is not None) else 1)
+    if ep_P > 1 and x.ndim == 3 and shape[1] % ep_P == 0:
         y, aux = distributed_moe(mp, x, mcfg, pctx.mesh,
                                  ep_axis=pctx.model_axis,
-                                 dp_axes=pctx.dp_axes)
+                                 dp_axes=pctx.dp_axes,
+                                 expert_placement=pctx.expert_placement)
         return y, aux["aux_loss"] + aux["z_loss"]
+    if ep_P > 1 and (pctx.expert_placement is not None
+                     or cfg.moe.num_experts < ep_P):
+        # EP weights are resident but the token layout cannot shard over
+        # the model axis (S % P != 0 — e.g. a recovery replay prompt on
+        # a survivor mesh): un-place the slot-major weights back to
+        # expert-major and compute locally. Bitwise-safe — the EP paths
+        # are bitwise-equal to the local oracle (the PR 6 matrix).
+        info = (SlotInfo.make_placed(cfg.moe.num_experts, ep_P,
+                                     pctx.expert_placement)
+                if pctx.expert_placement is not None
+                else SlotInfo.make(cfg.moe.num_experts, ep_P))
+        sel = info.slot_of_expert(
+            jnp.arange(cfg.moe.num_experts), jnp.int32(0))
+        mp = dict(mp)
+        for w in ("w1", "w2", "w3"):
+            if w in mp:
+                mp[w] = mp[w][sel]
     y, aux = moe_layer(mp, x2d, mcfg)
     return y.reshape(shape), aux["aux_loss"] + aux["z_loss"]
 

@@ -9,9 +9,16 @@ through the page tables, EP-mesh aware) → ``ServingMetrics``
 (TTFT / TPOT / occupancy / paging stats, JSON export).
 ``serving.static.BatchedServer`` is the fixed-batch baseline and
 bitwise reference (``grouped_reference_streams`` for heterogeneous
-prompt lengths).
+prompt lengths). ``serving.faults`` drives the failure model: a seeded
+``FaultInjector`` replays declarative rank-loss / transient-error /
+step-delay / pool-pressure schedules through the engine's recovery path
+(detect → quiesce → rebuild → replay; see serving/engine.py).
 """
 from repro.serving.engine import ServingEngine
+from repro.serving.faults import (FaultInjector, InjectedStepError,
+                                  parse_fault_schedule, pool_pressure,
+                                  rank_down, step_delay,
+                                  transient_step_error)
 from repro.serving.metrics import ServingMetrics, write_json
 from repro.serving.paging import (DEFAULT_PAGE_SIZE, PagePool, PageTables,
                                   page_bytes, pages_for_budget,
@@ -28,4 +35,7 @@ __all__ = ["ServingEngine", "ServingMetrics", "write_json", "Request",
            "BatchedServer", "grouped_reference_streams",
            "run_static_workload", "run_continuous_workload",
            "PagePool", "PageTables", "DEFAULT_PAGE_SIZE", "page_bytes",
-           "pages_for_budget", "pages_for_len", "paging_stats"]
+           "pages_for_budget", "pages_for_len", "paging_stats",
+           "FaultInjector", "InjectedStepError", "parse_fault_schedule",
+           "rank_down", "transient_step_error", "step_delay",
+           "pool_pressure"]

@@ -41,9 +41,40 @@ benches compare step counts, not wall times); wall timestamps ride
 along for TTFT/throughput metrics. ``FCFSScheduler.mark_ready`` stamps
 the wall time each request's arrival is first covered by the clock, so
 TTFT excludes idle-period clock fast-forwards.
+
+**Failure model & recovery** (serving/faults.py is the deterministic
+driver; distributed/fault_tolerance.py the primitives):
+
+  * detect — an injected ``rank_down`` signal or a ``StepWatchdog``
+    deadline (opt-in ``watchdog=``; a watchdog fire degrades
+    ``dist_impl`` one level along the PR-3 chain fused→rdma→pipelined,
+    bitwise-safe by the strategy equivalence matrix);
+  * quiesce — in-flight chunked admissions drop their private caches,
+    every RUNNING request is collected in submission order;
+  * rebuild — the EP mesh shrinks to the survivors
+    (``elastic.survivor_mesh`` for an EP-only loss with E >= world';
+    ``elastic.best_mesh_shape`` refactorization when the surviving
+    count can't host every expert; the local mesh-free path when no EP
+    layout exists), expert weights re-place via
+    ``core/exchange.rebuild_placement`` (slot-major with empty slots on
+    non-dividing worlds), params reshard, the KV manager rebuilds from
+    scratch, and the step closures re-jit;
+  * replay — interrupted requests requeue at the FRONT of the FCFS
+    queue (submission order preserved) and re-enter through the normal
+    admission path with effective prompt = prompt + emitted tokens: the
+    replay prefill's argmax IS the next token of the stream, so
+    recovered streams are bitwise-identical to the no-fault reference
+    (the greedy chain depends only on the request's own prefix).
+
+Transient step errors retry through ``fault_tolerance.retry_step`` with
+bounded exponential backoff; injection fires BEFORE the donated decode
+call, so a retried attempt always sees an intact cache. Request
+deadlines (virtual-clock TTL) cancel overdue queued AND running
+requests, releasing their pages (``metrics.timeouts``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 import warnings
@@ -55,6 +86,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.core.exchange import SlotInfo, rebuild_placement
+from repro.distributed.elastic import best_mesh_shape, survivor_mesh
+from repro.distributed.fault_tolerance import (StepWatchdog, retry_step,
+                                               write_heartbeat)
 from repro.models.serve import (decode_step, init_cache, prefill,
                                 prefill_chunk as model_prefill_chunk,
                                 supports_chunked_prefill)
@@ -64,13 +99,21 @@ from repro.serving.requests import RUNNING, Request, RequestState
 from repro.serving.scheduler import FCFSScheduler
 from repro.serving.slots import SlotKVManager
 
+# the PR-3 downgrade chain, reused for watchdog-triggered mid-run
+# degradation: the persistent kernel degrades to the three-kernel rdma
+# path, which degrades to the portable pipelined path.
+from repro.core.dispatch import _FALLBACK_NEXT as DEGRADE_NEXT
+
 
 @dataclasses.dataclass
 class _Inflight:
     """A chunked admission in progress: the request holds its slot but
-    streams its prompt into a private batch-1 cache chunk by chunk."""
+    streams its (effective) prompt into a private batch-1 cache chunk by
+    chunk. ``prompt`` may extend the request's own prompt with
+    already-emitted tokens when this is a recovery replay."""
     st: RequestState
     cache: Any
+    prompt: np.ndarray
     offset: int = 0
 
 
@@ -80,12 +123,19 @@ class ServingEngine:
     def __init__(self, cfg, params, *, slots: int, seq_budget: int,
                  pctx, dtype=jnp.float32, mesh=None, eos: int = -1,
                  page_size: int = DEFAULT_PAGE_SIZE, kv_pages: int = 0,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, injector=None,
+                 watchdog: Optional[StepWatchdog] = None,
+                 heartbeat_file: Optional[str] = None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.0,
+                 request_ttl: int = 0):
         self.cfg, self.params, self.pctx = cfg, params, pctx
         self.dtype = dtype
         self.mesh = mesh
         self.default_eos = eos
         self.seq_budget = seq_budget
+        self.num_slots = slots
+        self.page_size_arg = page_size
+        self.kv_pages_arg = kv_pages
         self.scheduler = FCFSScheduler(seq_budget)
         self.kv = SlotKVManager(cfg, slots, seq_budget, dtype,
                                 page_size=page_size, kv_pages=kv_pages)
@@ -95,6 +145,32 @@ class ServingEngine:
         self._inflight: Dict[int, _Inflight] = {}
         self._next_rid = 0
         self._last_tok = np.zeros((slots,), np.int32)
+        # --------------------------------------------- robustness knobs --
+        self.injector = injector
+        self.heartbeat_file = heartbeat_file
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.request_ttl = int(request_ttl)
+        self._wd = watchdog
+        self._wd_fired = False
+        if self._wd is not None:
+            inner = self._wd.on_timeout
+
+            def _on_timeout(dl, _inner=inner):
+                self._wd_fired = True
+                self.metrics.watchdog_fires += 1
+                _inner(dl)
+            self._wd.on_timeout = _on_timeout
+        self._pressure: List[List[int]] = []   # [pages reserved, steps left]
+        self._build_jits()
+        self._warn_if_capacity_can_drop(slots)
+
+    def _build_jits(self) -> None:
+        """(Re-)jit the step closures against the CURRENT cfg/pctx —
+        called at init and after every recovery rebuild or dist_impl
+        degradation (the closures capture pctx by value)."""
+        cfg, pctx, dtype = self.cfg, self.pctx, self.dtype
+        seq_budget = self.seq_budget
         self._prefill = jax.jit(
             lambda p, b: prefill(cfg, p, b, seq_budget, pctx, dtype=dtype))
         self._decode = jax.jit(
@@ -105,7 +181,6 @@ class ServingEngine:
             lambda p, c, tk, off: model_prefill_chunk(cfg, p, c, tk, off,
                                                       pctx),
             donate_argnums=(1,))
-        self._warn_if_capacity_can_drop(slots)
 
     def _warn_if_capacity_can_drop(self, slots: int) -> None:
         """The bitwise contract needs drop-free routing. Structural
@@ -125,12 +200,11 @@ class ServingEngine:
             return
         if getattr(moe, "dropless", False):
             return                     # dropless plans cannot drop
-        from repro.core.dispatch import SlotInfo
         from repro.core.exchange import DECODE_TILE_M, slot_capacity
         from repro.core.gate import GateConfig
         gc = GateConfig(num_experts=moe.num_experts, top_k=moe.top_k,
                         capacity_factor=moe.capacity_factor)
-        info = SlotInfo.make(moe.num_experts, pctx.ep_world)
+        info = self._cur_info()
         cap = slot_capacity(gc, slots, info.slots, tile_m=DECODE_TILE_M)
         if cap < slots:
             warnings.warn(
@@ -144,17 +218,22 @@ class ServingEngine:
 
     # ------------------------------------------------------ submission --
     def submit(self, prompt, max_new: int, *, arrival: int = 0,
-               eos: Optional[int] = None, rid: Optional[int] = None
-               ) -> RequestState:
+               eos: Optional[int] = None, rid: Optional[int] = None,
+               deadline: Optional[int] = None) -> RequestState:
         """Enqueue one request (EOS defaults to the engine-wide value;
-        per-request overrides win)."""
+        per-request overrides win). ``deadline`` is an absolute
+        virtual-clock step; None with an engine ``request_ttl`` set
+        derives ``arrival + request_ttl``."""
         rid = self._next_rid if rid is None else rid
         if any(s.rid == rid for s in self.scheduler.states):
             raise ValueError(f"duplicate request id {rid}")
         self._next_rid = max(self._next_rid, rid) + 1
+        if deadline is None and self.request_ttl > 0:
+            deadline = arrival + self.request_ttl
         req = Request(rid=rid, prompt=prompt, max_new=max_new,
                       arrival=arrival,
-                      eos=self.default_eos if eos is None else eos)
+                      eos=self.default_eos if eos is None else eos,
+                      deadline=deadline)
         if (self.kv.paged and self.kv.pages_needed(req.seq_need)
                 > self.kv.pool.num_pages - 1):
             raise ValueError(
@@ -164,28 +243,43 @@ class ServingEngine:
         return self.scheduler.submit(req, t_submit=time.perf_counter())
 
     # ------------------------------------------------------- admission --
+    @staticmethod
+    def _effective_prompt(st: RequestState) -> np.ndarray:
+        """The prompt to prefill at admission: the request's own prompt,
+        extended with already-emitted tokens when this is a recovery
+        replay — prefill(prompt + t0..t_{m-1})'s argmax is t_m, so the
+        replay continues the greedy chain exactly where it stopped."""
+        req = st.request
+        if not st.tokens:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(st.tokens, np.int32)])
+
     def _admit_one(self, st: RequestState) -> None:
         req = st.request
         slot = self.kv.alloc(st, req.seq_need)
         st.slot, st.status, st.admit_step = slot, RUNNING, self.clock
         if st.t_ready is None:                 # arrival <= clock at admit
             st.t_ready = time.perf_counter()
+        eff = self._effective_prompt(st)
+        plen = int(eff.size)
         if (self.prefill_chunk > 0
-                and req.prompt_len > self.prefill_chunk
-                and supports_chunked_prefill(self.cfg, req.prompt_len,
+                and plen > self.prefill_chunk
+                and supports_chunked_prefill(self.cfg, plen,
                                              self.seq_budget)):
             # chunked admission: first chunk runs in this step's chunk
             # pass, so a long prompt never blocks this step's decode
             self._inflight[slot] = _Inflight(
-                st, init_cache(self.cfg, 1, self.seq_budget, self.dtype))
+                st, init_cache(self.cfg, 1, self.seq_budget, self.dtype),
+                eff)
             return
-        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        batch = {"tokens": jnp.asarray(eff[None, :], jnp.int32)}
         if self.cfg.enc_dec:
             batch["frames"] = jnp.zeros(
                 (1, self.cfg.enc_seq, self.cfg.d_model), self.dtype)
         logits, pcache = self._prefill(self.params, batch)
-        self.kv.insert_prefill(slot, pcache, req.prompt_len)
-        # the prefill's argmax is the request's FIRST generated token
+        self.kv.insert_prefill(slot, pcache, plen)
+        # the prefill's argmax is the request's NEXT generated token
         tok0 = int(np.asarray(jnp.argmax(logits[0], -1)))
         if st.record(tok0, step=self.clock, now=time.perf_counter()):
             self.kv.release(slot)              # max_new=1 or instant EOS
@@ -211,28 +305,240 @@ class ServingEngine:
         first token (prefill argmax semantics, bitwise-equal to the
         one-shot path by models/serve's chunked-prefill contract)."""
         inf = self._inflight[slot]
-        req = inf.st.request
-        q = min(self.prefill_chunk, req.prompt_len - inf.offset)
-        toks = jnp.asarray(req.prompt[None, inf.offset:inf.offset + q],
+        plen = int(inf.prompt.size)
+        q = min(self.prefill_chunk, plen - inf.offset)
+        toks = jnp.asarray(inf.prompt[None, inf.offset:inf.offset + q],
                            jnp.int32)
         logits, inf.cache = self._chunk(self.params, inf.cache, toks,
                                         jnp.asarray(inf.offset, jnp.int32))
         inf.offset += q
-        if inf.offset < req.prompt_len:
+        if inf.offset < plen:
             return
         del self._inflight[slot]
-        self.kv.insert_prefill(slot, inf.cache, req.prompt_len)
+        self.kv.insert_prefill(slot, inf.cache, plen)
         tok0 = int(np.asarray(jnp.argmax(logits[0, q - 1], -1)))
         if inf.st.record(tok0, step=self.clock, now=time.perf_counter()):
             self.kv.release(slot)
         else:
             self._last_tok[slot] = tok0
 
+    # ----------------------------------------------------- robustness ---
+    def _ep_world(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape.get(self.pctx.model_axis, 1))
+
+    def _cur_info(self) -> SlotInfo:
+        """Current expert->slot topology (None placement = slot-major)."""
+        E, P = self.cfg.moe.num_experts, self._ep_world()
+        if self.pctx.expert_placement is not None:
+            return SlotInfo.make_placed(E, P, self.pctx.expert_placement)
+        return SlotInfo.make(E, P)
+
+    def _expire_deadlines(self) -> None:
+        """Cancel queued AND running requests past their virtual-clock
+        deadline; running ones release their slot + pages."""
+        now = self.clock
+        for st in self.scheduler.expire(now):
+            st.cancel(now)
+            self.metrics.timeouts += 1
+        for slot, st in list(self.kv.owner.items()):
+            if st.past_deadline(now):
+                st.cancel(now)
+                self._inflight.pop(slot, None)
+                self.kv.release(slot)
+                self.metrics.timeouts += 1
+
+    def _apply_pool_pressure(self, events) -> None:
+        """External page-pool squeeze: reserve what the pool can spare
+        (never poisons running requests' reservations) for N steps."""
+        if not self.kv.paged:
+            return
+        for f in events:
+            avail = self.kv.pool.free_pages - self.kv.pool.reserved
+            pages = max(0, min(int(f.pages), avail))
+            if pages:
+                self.kv.pool.reserve(pages)
+            self._pressure.append([pages, int(f.duration)])
+
+    def _release_pressure(self) -> None:
+        keep = []
+        for p in self._pressure:
+            p[1] -= 1
+            if p[1] <= 0:
+                if p[0] and self.kv.paged:
+                    self.kv.pool.unreserve(p[0])
+            else:
+                keep.append(p)
+        self._pressure = keep
+
+    def _restack_expert_weights(self, params_host, old_info: SlotInfo,
+                                new_info: SlotInfo):
+        """Remap the stacked (L, old_slots, ...) slot-major expert
+        weights onto the new layout via the expert-major intermediate
+        (replica 0 rows; empty new slots get zeros)."""
+        E = old_info.num_experts
+        old_slot = np.asarray(
+            old_info.slot_of_expert(jnp.arange(E), jnp.int32(0)))
+        moe_p = params_host["layers"]["moe"]
+        for key in ("w1", "w2", "w3"):
+            if key not in moe_p:
+                continue
+            w = np.asarray(moe_p[key])
+            em = w[:, old_slot]                        # (L, E, ...)
+            out = np.zeros((w.shape[0], new_info.slots) + w.shape[2:],
+                           w.dtype)
+            if new_info.placement is not None:
+                out[:, np.asarray(new_info.placement)] = em
+            elif new_info.replicas > 1:
+                out[:] = np.repeat(em, new_info.replicas, axis=1)
+            else:
+                out[:] = em
+            moe_p[key] = out
+        return params_host
+
+    def _recover_rank_loss(self, down_rank: int) -> None:
+        """The recovery closed loop: quiesce -> rebuild plan/mesh against
+        the survivors -> release+re-reserve KV -> replay interrupted
+        requests from their last emitted token."""
+        world = self._ep_world()
+        if world <= 1 or self.mesh is None:
+            return                      # nothing distributed to lose
+        moe, axis = self.cfg.moe, self.pctx.model_axis
+        # ---- quiesce: collect every interrupted request (submission
+        # order) and drop in-flight chunk caches / pool pressures
+        interrupted = [st for st in self.scheduler.states
+                       if st.status == RUNNING]
+        self._inflight.clear()
+        self._pressure.clear()
+        # ---- choose the survivor topology
+        new_mesh = survivor_mesh(self.mesh, axis, down_rank)
+        placement = None
+        if moe is not None and self.pctx.use_ep:
+            old_info = self._cur_info()
+            survivors = [r for r in range(world) if r != down_rank]
+            if new_mesh is not None \
+                    and moe.num_experts >= len(survivors):
+                # EP-only loss: keep the mesh shape, re-place experts
+                new_info = rebuild_placement(old_info, survivors)
+                placement = new_info.placement
+            else:
+                # can't host every expert one-per-slot-block: re-derive
+                # a whole-mesh factorization from the surviving devices
+                devs = np.delete(np.asarray(self.mesh.devices), down_rank,
+                                 axis=list(self.mesh.axis_names).index(axis))
+                flat = devs.reshape(-1)
+                d, m = best_mesh_shape(flat.size, self.cfg)
+                if m > 1:
+                    new_mesh = compat.mesh_from_devices(
+                        flat.reshape(d, m), ("data", "model"))
+                    new_info = SlotInfo.make(moe.num_experts, m)
+                else:
+                    new_mesh = None
+                    new_info = SlotInfo.make(moe.num_experts, 1)
+            # ---- re-place expert weights for the new layout
+            params_host = jax.device_get(self.params)
+            params_host = self._restack_expert_weights(
+                params_host, old_info,
+                new_info if new_mesh is not None
+                else SlotInfo.make(moe.num_experts, 1))
+            self.params = params_host
+        else:
+            self.params = jax.device_get(self.params)
+        # ---- reshard + rebuild contexts
+        self.mesh = new_mesh
+        ep_world = (int(new_mesh.shape.get(axis, 1))
+                    if new_mesh is not None else 1)
+        self.pctx = dataclasses.replace(
+            self.pctx, mesh=new_mesh, ep_world=ep_world,
+            use_ep=(self.pctx.use_ep and new_mesh is not None),
+            expert_placement=placement if new_mesh is not None else None)
+        if new_mesh is not None:
+            from repro.distributed import sharding as shd
+            rep = moe is not None and moe.num_experts < ep_world
+            self.params = jax.device_put(
+                self.params,
+                shd.params_shardings(self.cfg, new_mesh, self.params,
+                                     serve=False, replicate_experts=rep))
+        else:
+            self.params = jax.device_put(self.params)
+        # ---- release every slot's pages; rebuild the KV manager fresh
+        self.kv = SlotKVManager(self.cfg, self.num_slots, self.seq_budget,
+                                self.dtype, page_size=self.page_size_arg,
+                                kv_pages=self.kv_pages_arg)
+        self._last_tok = np.zeros((self.num_slots,), np.int32)
+        self._build_jits()
+        self._warn_if_capacity_can_drop(self.num_slots)
+        # ---- replay: requeue at the FRONT, preserving submission order
+        self.scheduler.requeue(interrupted)
+        self.metrics.recoveries += 1
+        self.metrics.replayed_requests += len(interrupted)
+        self.metrics.replayed_tokens += sum(
+            len(st.tokens) for st in interrupted)
+
+    def _degrade_dist_impl(self) -> None:
+        """Watchdog-triggered mid-run degradation along the PR-3 chain
+        fused -> rdma -> pipelined (bitwise-safe: the strategies are
+        output-equivalent by the equivalence matrix)."""
+        nxt = DEGRADE_NEXT.get(self.pctx.dist_impl)
+        if nxt is None:
+            return                      # already at the portable floor
+        self.pctx = dataclasses.replace(self.pctx, dist_impl=nxt)
+        self._build_jits()
+        self.metrics.degradations += 1
+
+    def _guarded_decode(self, tok):
+        """The decode device call under bounded retry: an injected
+        transient raises BEFORE the donated call, so every retry sees an
+        intact cache. Backoff is deterministic (base * 2^attempt)."""
+        def fn():
+            if self.injector is not None:
+                self.injector.maybe_raise(self.clock)
+            return self._decode(self.params, self.kv.cache, tok)
+
+        def on_failure(attempt, exc):
+            self.metrics.transient_errors += 1
+            if self.retry_backoff_s > 0:
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+        return retry_step(fn, max_retries=self.max_retries,
+                          on_failure=on_failure)
+
+    def _write_heartbeat(self) -> None:
+        extra = {
+            "queue_depth": self.scheduler.pending,
+            "slots": self.kv.slots,
+            "slots_occupied": self.kv.occupancy,
+            "recoveries": self.metrics.recoveries,
+            "timeouts": self.metrics.timeouts,
+        }
+        if self.kv.paged:
+            extra["pages_total"] = self.kv.pool.num_pages
+            extra["pages_allocated"] = self.kv.pool.allocated_pages
+            extra["pages_reserved"] = self.kv.pool.reserved
+        write_heartbeat(self.heartbeat_file, self.clock, extra=extra)
+
     # ------------------------------------------------------- step loop --
     def step(self) -> bool:
-        """Admissions + inflight prompt chunks + one batched decode
-        across the slot set. Returns True while the engine still has
-        (or awaits) work."""
+        """Fault hooks + admissions + inflight prompt chunks + one
+        batched decode across the slot set. Returns True while the
+        engine still has (or awaits) work."""
+        self._release_pressure()
+        if self.injector is not None:
+            self._apply_pool_pressure(
+                self.injector.pool_pressure_at(self.clock))
+            down = self.injector.rank_down_at(self.clock, self._ep_world())
+            if down is not None:
+                self._recover_rank_loss(down)
+        self._expire_deadlines()
+        alive = self._step_inner()
+        if self._wd_fired:
+            self._wd_fired = False
+            self._degrade_dist_impl()
+        if self.heartbeat_file:
+            self._write_heartbeat()
+        return alive
+
+    def _step_inner(self) -> bool:
         with compat.with_mesh(self.mesh):
             self.scheduler.mark_ready(self.clock, time.perf_counter())
             self._admit()
@@ -245,6 +551,13 @@ class ServingEngine:
                     # chunk-only step: admissions progressed, no decode
                     self.clock += 1
                     self.metrics.record_prefill_step()
+                    return True
+                if self._pressure and (self.scheduler.pending
+                                       or self.kv.owner):
+                    # pool pressure stalled admissions: tick a step so
+                    # the squeeze expires instead of deadlocking
+                    self.clock += 1
+                    self.metrics.record_idle()
                     return True
                 nxt = self.scheduler.next_arrival()
                 if nxt is None:
@@ -263,9 +576,16 @@ class ServingEngine:
                     self.kv.ensure_position(slot, pos)
                 self.kv.sync_tables()
             tok = jnp.asarray(self._last_tok)
-            logits, self.kv.cache = self._decode(self.params,
-                                                 self.kv.cache, tok)
-            tok_new = jnp.argmax(logits, -1).astype(jnp.int32)
+            wd = self._wd.step() if self._wd is not None \
+                else contextlib.nullcontext()
+            with wd:
+                if self.injector is not None:
+                    stall = self.injector.delay_at(self.clock)
+                    if stall > 0:
+                        time.sleep(stall)      # the straggler signal the
+                        #                        watchdog deadline detects
+                logits, self.kv.cache = self._guarded_decode(tok)
+                tok_new = jnp.argmax(logits, -1).astype(jnp.int32)
         tok_np = np.asarray(tok_new)           # THE one device→host sync
         self.metrics.record_decode_step(self.kv.occupancy)
         self.clock += 1

@@ -1,0 +1,189 @@
+"""Deterministic fault injection for the serving engine.
+
+Every failure mode the recovery path handles (detect -> quiesce ->
+rebuild -> replay, see serving/engine.py) is reproducible in CI through
+a declarative, virtual-clock-keyed schedule:
+
+  * :func:`rank_down` — an EP rank dies at a step: the engine rebuilds
+    the plan/mesh against the survivors (placement rebuild via
+    ``core/exchange.rebuild_placement``; whole-mesh shrink or local
+    degradation when the surviving axis is degenerate) and replays
+    interrupted requests from their last emitted token.
+  * :func:`transient_step_error` — the device step raises N times before
+    succeeding: exercised through the ``retry_step``-style bounded
+    backoff around the decode call.
+  * :func:`step_delay` — a host-side stall (sleep) at a step: trips the
+    ``StepWatchdog`` deadline, driving mid-run dist_impl degradation
+    (fused -> rdma -> pipelined).
+  * :func:`pool_pressure` — an external reservation squeezes the KV page
+    pool for a few steps: admissions stall (never deadlock — running
+    requests keep their reservations) and resume when pressure lifts.
+
+The injector is SEEDED: a ``rank_down`` with ``rank=-1`` draws the
+victim rank deterministically from the seed, so chaos runs are exactly
+repeatable. The engine polls the injector at fixed points in its step
+loop — faults fire BEFORE the device call they perturb, which is what
+makes retry safe with a donated decode cache (nothing was consumed
+yet). ``FaultInjector.log`` records every fired event for assertions
+and the chaos-smoke report.
+
+Schedules also parse from a compact CLI spec (``parse_fault_schedule``):
+
+    rank_down@6:1,transient@3,transient@3,delay@4:0.05,pool@5:2x3
+
+fires a rank-1 loss at step 6, two transient errors at step 3, a 50 ms
+stall at step 4 and a 2-page reservation squeeze over steps 5-7.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RankDown:
+    """EP rank ``rank`` is lost at virtual step ``step`` (-1: seeded
+    random victim, drawn from the injector's rng at fire time)."""
+    step: int
+    rank: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class TransientStepError:
+    """The device step at ``step`` raises once (enqueue several for
+    repeated failures — each entry is consumed by one raise)."""
+    step: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StepDelay:
+    """Host-side stall of ``seconds`` before the device call at
+    ``step`` — the straggler/hang signal a StepWatchdog deadline
+    detects."""
+    step: int
+    seconds: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolPressure:
+    """Reserve ``pages`` KV pages at ``step`` and release them
+    ``duration`` steps later (clamped to what the pool can spare, so
+    pressure squeezes admissions without poisoning running requests)."""
+    step: int
+    pages: int
+    duration: int = 1
+
+
+def rank_down(step: int, rank: int = -1) -> RankDown:
+    return RankDown(step, rank)
+
+
+def transient_step_error(step: int) -> TransientStepError:
+    return TransientStepError(step)
+
+
+def step_delay(step: int, seconds: float) -> StepDelay:
+    return StepDelay(step, seconds)
+
+
+def pool_pressure(step: int, pages: int, duration: int = 1) -> PoolPressure:
+    return PoolPressure(step, pages, duration)
+
+
+class InjectedStepError(RuntimeError):
+    """The transient failure class the retry path catches (a RuntimeError,
+    like the real XLA transient it stands in for)."""
+
+
+class FaultInjector:
+    """Seeded, schedule-driven fault source polled by the engine loop.
+
+    Each schedule entry fires AT MOST ONCE, at the first poll whose
+    virtual step is >= its ``step`` (the engine's clock can skip steps
+    when idle; a fault scheduled inside a skipped span still fires).
+    """
+
+    def __init__(self, schedule, seed: int = 0):
+        self.schedule = list(schedule)
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._pending = list(self.schedule)
+        self.log: List[Tuple[int, str]] = []   # (step fired, description)
+
+    def _take(self, kind, now: int) -> List:
+        due = [f for f in self._pending
+               if isinstance(f, kind) and f.step <= now]
+        for f in due:
+            self._pending.remove(f)
+        return due
+
+    # ------------------------------------------------- engine hooks -----
+    def rank_down_at(self, now: int, world: int) -> Optional[int]:
+        """Victim rank if a RankDown is due (at most one per poll)."""
+        due = self._take(RankDown, now)
+        if not due:
+            return None
+        f = due[0]
+        self._pending.extend(due[1:])   # one loss per poll; rest re-queue
+        rank = f.rank if f.rank >= 0 else int(self._rng.integers(world))
+        self.log.append((now, f"rank_down rank={rank}"))
+        return rank
+
+    def delay_at(self, now: int) -> float:
+        """Total injected host stall (seconds) due at this step."""
+        total = sum(f.seconds for f in self._take(StepDelay, now))
+        if total:
+            self.log.append((now, f"step_delay {total}s"))
+        return float(total)
+
+    def maybe_raise(self, now: int) -> None:
+        """Raise one due transient error (consumes one schedule entry
+        per call, so ``n`` queued entries fail ``n`` attempts)."""
+        due = [f for f in self._pending
+               if isinstance(f, TransientStepError) and f.step <= now]
+        if due:
+            self._pending.remove(due[0])
+            self.log.append((now, "transient_step_error"))
+            raise InjectedStepError(
+                f"injected transient step error at step {now}")
+
+    def pool_pressure_at(self, now: int) -> List[PoolPressure]:
+        """PoolPressure entries due at this step."""
+        due = self._take(PoolPressure, now)
+        for f in due:
+            self.log.append((now, f"pool_pressure pages={f.pages} "
+                                  f"duration={f.duration}"))
+        return due
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._pending
+
+
+def parse_fault_schedule(spec: str):
+    """Parse the compact CLI form: comma-separated ``kind@step[:arg]``.
+
+    kinds: ``rank_down@S[:R]`` (R default -1 = seeded random victim),
+    ``transient@S``, ``delay@S:SECONDS``, ``pool@S:PAGESxDURATION``
+    (duration default 1). Returns a schedule list for FaultInjector.
+    """
+    out = []
+    for item in filter(None, (s.strip() for s in spec.split(","))):
+        kind, _, rest = item.partition("@")
+        step_s, _, arg = rest.partition(":")
+        step = int(step_s)
+        if kind == "rank_down":
+            out.append(RankDown(step, int(arg) if arg else -1))
+        elif kind == "transient":
+            out.append(TransientStepError(step))
+        elif kind == "delay":
+            out.append(StepDelay(step, float(arg)))
+        elif kind == "pool":
+            pages, _, dur = arg.partition("x")
+            out.append(PoolPressure(step, int(pages),
+                                    int(dur) if dur else 1))
+        else:
+            raise ValueError(f"unknown fault kind {kind!r} in {item!r}")
+    return out

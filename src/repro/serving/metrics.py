@@ -33,6 +33,14 @@ class ServingMetrics:
         self.idle_steps = 0
         self.prefill_steps = 0              # chunked-prefill-only steps
         self._occ: List[int] = []           # occupied slots per decode step
+        # robustness counters (serving/faults.py + engine recovery)
+        self.timeouts = 0                   # deadline/TTL cancellations
+        self.recoveries = 0                 # rank-loss rebuild+replay cycles
+        self.replayed_requests = 0          # requests requeued by recovery
+        self.replayed_tokens = 0            # already-emitted tokens replayed
+        self.transient_errors = 0           # retried step failures
+        self.degradations = 0               # watchdog dist_impl downgrades
+        self.watchdog_fires = 0
 
     def record_decode_step(self, occupied: int) -> None:
         self.decode_steps += 1
@@ -78,6 +86,13 @@ class ServingMetrics:
             "wait_steps": {"mean": _mean(wait_steps),
                            "p95": _pct(wait_steps, 0.95)},
             "tpot_s": {"mean": _mean(tpot), "p50": _pct(tpot, 0.50)},
+            "timeouts": self.timeouts,
+            "recoveries": self.recoveries,
+            "replayed_requests": self.replayed_requests,
+            "replayed_tokens": self.replayed_tokens,
+            "transient_errors": self.transient_errors,
+            "degradations": self.degradations,
+            "watchdog_fires": self.watchdog_fires,
         }
         if wall_s is not None:
             rec["wall_s"] = round(wall_s, 3)

@@ -17,6 +17,7 @@ import numpy as np
 QUEUED = "queued"
 RUNNING = "running"
 DONE = "done"
+CANCELLED = "cancelled"         # deadline/TTL exceeded; pages released
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,12 +29,19 @@ class Request:
     ``eos`` < 0 disables the EOS stop (then ``max_new`` is the only stop
     condition); the engine records the EOS token itself before stopping,
     mirroring the fixed-batch reference semantics.
+
+    ``deadline`` (virtual-clock step, None = no TTL): at any step with
+    ``step >= deadline`` an unfinished request — queued OR running — is
+    cancelled, its pages released, and ``metrics.timeouts`` counts it.
+    Virtual-clock driven, so deadline behavior is deterministic and
+    testable without sleeping.
     """
     rid: int
     prompt: np.ndarray          # (plen,) int32 token ids
     max_new: int
     arrival: int = 0
     eos: int = -1
+    deadline: Optional[int] = None
 
     def __post_init__(self):
         object.__setattr__(self, "prompt",
@@ -77,6 +85,17 @@ class RequestState:
     @property
     def rid(self) -> int:
         return self.request.rid
+
+    def past_deadline(self, now: int) -> bool:
+        """True when the TTL has expired and the request is unfinished."""
+        dl = self.request.deadline
+        return (dl is not None and now >= dl
+                and self.status in (QUEUED, RUNNING))
+
+    def cancel(self, step: int) -> None:
+        """Deadline cancellation: terminal, keeps any partial tokens."""
+        self.status = CANCELLED
+        self.finish_step = step
 
     def record(self, tok: int, *, step: int, now: float) -> bool:
         """Append one greedy token; returns True when the request is

@@ -43,17 +43,28 @@ def run_continuous_workload(cfg, params, pctx, mesh, prompts, max_new,
                             arrivals, *, slots: int, seq_budget: int,
                             eos: int = -1,
                             page_size: int = DEFAULT_PAGE_SIZE,
-                            kv_pages: int = 0, prefill_chunk: int = 0
+                            kv_pages: int = 0, prefill_chunk: int = 0,
+                            injector=None, watchdog=None,
+                            heartbeat_file=None, max_retries: int = 2,
+                            retry_backoff_s: float = 0.0,
+                            request_ttl: int = 0
                             ) -> Tuple[list, int, float, dict]:
     """The continuous-batching engine over the same request set
     (``prompts`` may be ragged — a list of per-request arrays); the
     returned summary is ``ServingMetrics.summary`` with the KV manager's
-    paging stats attached under ``"kv"``."""
+    paging stats attached under ``"kv"``. The robustness kwargs
+    (``injector``/``watchdog``/``heartbeat_file``/retry/TTL) pass
+    through to the engine so the CLI chaos mode and bench_serving's
+    faulted row exercise the exact same recovery path the tests do."""
     max_new = np.asarray(max_new, int)
     engine = ServingEngine(cfg, params, slots=slots,
                            seq_budget=seq_budget, pctx=pctx, mesh=mesh,
                            eos=eos, page_size=page_size, kv_pages=kv_pages,
-                           prefill_chunk=prefill_chunk)
+                           prefill_chunk=prefill_chunk, injector=injector,
+                           watchdog=watchdog, heartbeat_file=heartbeat_file,
+                           max_retries=max_retries,
+                           retry_backoff_s=retry_backoff_s,
+                           request_ttl=request_ttl)
     t0 = time.perf_counter()
     for i in range(len(prompts)):
         engine.submit(prompts[i], int(max_new[i]),

@@ -13,7 +13,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Deque, List, Optional
 
-from repro.serving.requests import QUEUED, Request, RequestState
+from repro.serving.requests import QUEUED, RUNNING, Request, RequestState
 
 
 class FCFSScheduler:
@@ -52,6 +52,27 @@ class FCFSScheduler:
         if self._queue and self._queue[0].request.arrival <= now:
             return self._queue[0]
         return None
+
+    def requeue(self, states) -> None:
+        """Recovery replay: push interrupted RUNNING requests back to
+        the FRONT of the queue, preserving their relative order. FCFS
+        admits strictly in submission order, so the running set is
+        always the earliest-submitted unfinished prefix — requeueing it
+        ahead of the waiting line restores the exact global admission
+        order, which is what keeps recovered streams deterministic."""
+        for st in reversed(list(states)):
+            assert st.status in (RUNNING, QUEUED), st.status
+            st.status, st.slot = QUEUED, -1
+            self._queue.appendleft(st)
+
+    def expire(self, now: int):
+        """Pop every QUEUED request whose deadline has passed by virtual
+        time ``now`` (cancellation bookkeeping is the engine's job —
+        running requests hold KV pages the scheduler cannot release)."""
+        dead = [st for st in self._queue if st.past_deadline(now)]
+        for st in dead:
+            self._queue.remove(st)
+        return dead
 
     def mark_ready(self, now: int, wall: float) -> None:
         """Stamp ``t_ready`` (wall time the virtual clock first covered

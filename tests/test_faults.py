@@ -1,0 +1,396 @@
+"""Fault tolerance for EP serving (src/repro/serving/faults.py + the
+engine's detect → quiesce → rebuild → replay path):
+
+  * injector: schedule semantics (fire-once at the first poll >= step,
+    seeded rank draws, one transient per maybe_raise call) + the compact
+    CLI spec parser (host logic, smoke);
+  * rebuild_placement: hypothesis property suite — every expert owned
+    by exactly one survivor slot, per-survivor load <= ceil(E/world'),
+    kept experts stay with their survivor, deterministic — plus the
+    bitwise anchor: full-survivor rebuilds and identity placements
+    normalize to the plain slot-major layout, so no-fault plans are
+    bitwise-identical to the pre-placement planner;
+  * StragglerTracker: bounded O(window) memory + window-consistent
+    stats (the unbounded-growth regression);
+  * engine recovery, local: transient errors retried to a bitwise
+    stream, request deadlines/TTL cancel queued AND running requests
+    with pages released, pool pressure stalls admissions without
+    deadlock or divergence, heartbeat files carry the occupancy fields;
+  * engine recovery, world 4 (subprocess, like every multi-device
+    test): a mid-decode rank loss rebuilds onto the world-3 PLACED mesh
+    (9 slots, one empty) and replays every interrupted request to a
+    stream bitwise-identical to the no-fault reference; transient
+    errors and a watchdog-triggered dist_impl degradation
+    (rdma → pipelined) on the EP mesh stay bitwise too.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from conftest import run_sub
+
+
+# ------------------------------------------------------------- injector --
+@pytest.mark.smoke
+def test_fault_injector_schedule_semantics():
+    from repro.serving import (FaultInjector, InjectedStepError,
+                               pool_pressure, rank_down, step_delay,
+                               transient_step_error)
+
+    inj = FaultInjector([rank_down(3, 1), transient_step_error(2),
+                         transient_step_error(2), step_delay(5, 0.25),
+                         pool_pressure(4, 8, duration=2)])
+    assert inj.rank_down_at(0, world=4) is None
+    # the clock can skip past a fault's step: it still fires, once
+    assert inj.rank_down_at(7, world=4) == 1
+    assert inj.rank_down_at(8, world=4) is None
+    # one transient consumed per call -> two queued entries fail twice
+    with pytest.raises(InjectedStepError):
+        inj.maybe_raise(2)
+    with pytest.raises(InjectedStepError):
+        inj.maybe_raise(2)
+    inj.maybe_raise(2)                       # schedule drained: no raise
+    assert inj.delay_at(4) == 0.0 and inj.delay_at(5) == 0.25
+    (pp,) = inj.pool_pressure_at(4)
+    assert (pp.pages, pp.duration) == (8, 2)
+    assert inj.exhausted and len(inj.log) == 5
+
+    # seeded victim draw (rank=-1) is deterministic across injectors
+    draws = [FaultInjector([rank_down(0)], seed=7).rank_down_at(0, 4)
+             for _ in range(3)]
+    assert len(set(draws)) == 1 and 0 <= draws[0] < 4
+
+
+@pytest.mark.smoke
+def test_parse_fault_schedule():
+    from repro.serving import parse_fault_schedule
+    from repro.serving.faults import (PoolPressure, RankDown, StepDelay,
+                                      TransientStepError)
+
+    sched = parse_fault_schedule(
+        "rank_down@6:1, transient@3, delay@4:0.05, pool@5:2x3, rank_down@9")
+    assert sched == [RankDown(6, 1), TransientStepError(3),
+                     StepDelay(4, 0.05), PoolPressure(5, 2, 3),
+                     RankDown(9, -1)]
+    assert parse_fault_schedule("pool@1:4") == [PoolPressure(1, 4, 1)]
+    with pytest.raises(ValueError):
+        parse_fault_schedule("explode@3")
+
+
+# ---------------------------------------------------- placement rebuild --
+def _random_placement(rng, E, world):
+    """A valid expert->slot map: shuffle, deal round-robin to ranks."""
+    local = -(-E // world)
+    order = rng.permutation(E)
+    placement = [0] * E
+    for i, e in enumerate(order):
+        rank, k = i % world, i // world
+        placement[int(e)] = rank * local + k
+    return tuple(placement)
+
+
+@settings(max_examples=60, deadline=None)
+@given(E=st.integers(2, 16), world=st.integers(2, 8),
+       mask=st.integers(1, 255), seed=st.integers(0, 2 ** 16))
+def test_rebuild_placement_invariants(E, world, mask, seed):
+    from repro.core.exchange import SlotInfo, rebuild_placement
+
+    world = min(world, E)                   # replicas == 1 topologies only
+    rng = np.random.default_rng(seed)
+    info = SlotInfo.make_placed(E, world, _random_placement(rng, E, world))
+    survivors = [r for r in range(world) if (mask >> r) & 1] or [0]
+    survivors = survivors[:world]
+    new = rebuild_placement(info, survivors)
+    w2 = len(survivors)
+    assert new.world == w2 and new.local_slots == -(-E // w2)
+    # every expert owned by exactly one survivor slot
+    placement = (new.placement if new.placement is not None
+                 else tuple(range(E)))
+    assert sorted(set(placement)) == sorted(placement)
+    assert all(0 <= s < new.slots for s in placement)
+    # per-survivor load conserved and bounded by the new block size
+    loads = [0] * w2
+    for e in range(E):
+        loads[new.owner_of_expert(e)] += 1
+    assert sum(loads) == E
+    assert max(loads) <= new.local_slots
+    # kept experts stay with their survivor (renumbered by sorted order)
+    for new_rank, old_rank in enumerate(sorted(survivors)):
+        kept = [e for e in range(E)
+                if info.owner_of_expert(e) == old_rank]
+        for e in kept:
+            assert new.owner_of_expert(e) == new_rank
+    # deterministic
+    again = rebuild_placement(info, list(reversed(survivors)))
+    assert again.placement == new.placement
+
+
+@pytest.mark.smoke
+def test_rebuild_full_survivors_and_identity_normalize_to_plain():
+    """No-fault topologies stay bitwise: a rebuild against ALL survivors
+    of the plain slot-major layout IS the plain layout (placement None),
+    and make_placed normalizes an explicit identity the same way."""
+    from repro.core.exchange import SlotInfo, rebuild_placement
+
+    info = SlotInfo.make(8, 4)
+    assert rebuild_placement(info, [0, 1, 2, 3]).placement is None
+    assert SlotInfo.make_placed(8, 4, tuple(range(8))).placement is None
+    # the exp3 anchor: losing rank 1 of 4 with E=8 -> 3 ranks x 3 slots,
+    # rank 1's experts {2,3} dealt to the least-loaded survivors
+    new = rebuild_placement(info, [0, 2, 3])
+    assert new.slots == 9 and new.placement == (0, 1, 2, 5, 3, 4, 6, 7)
+    inv = new.slot_to_expert()
+    # survivor 2 (new rank 1) keeps its experts {4,5} and absorbs lost
+    # expert 3; the last block slot stays empty (-1) — E=8 on 9 slots
+    assert inv[new.local_slots:2 * new.local_slots] == (4, 5, 3)
+    assert inv[2 * new.local_slots:] == (6, 7, -1)
+    assert sorted(e for e in inv if e >= 0) == list(range(8))
+
+
+@pytest.mark.smoke
+def test_exchange_plan_identity_placement_bitwise():
+    """make_exchange_plan with an explicit identity placement produces
+    the SAME plan arrays as the default slot-major path (the pre-PR
+    bitwise guarantee), for capacity and dropless plans."""
+    from repro.core.exchange import SlotInfo, make_exchange_plan
+    from repro.core.gate import GateConfig
+
+    info = SlotInfo.make(8, 4)
+    gc = GateConfig(num_experts=8, top_k=2, capacity_factor=1.25)
+    ids = jax.random.randint(jax.random.PRNGKey(0), (32, 2), 0, 8)
+    for dropless in (False, True):
+        base = make_exchange_plan(gc, ids, info, phase="decode",
+                                  dropless=dropless)
+        placed = make_exchange_plan(gc, ids, info, phase="decode",
+                                    dropless=dropless,
+                                    expert_placement=tuple(range(8)))
+        assert placed.capacity == base.capacity
+        assert placed.slab_rows == base.slab_rows
+        np.testing.assert_array_equal(np.asarray(placed.packed_pos),
+                                      np.asarray(base.packed_pos))
+        np.testing.assert_array_equal(np.asarray(placed.counts),
+                                      np.asarray(base.counts))
+
+
+# ------------------------------------------------------------ straggler --
+@pytest.mark.smoke
+def test_straggler_tracker_bounded_memory_and_window_stats():
+    from repro.distributed.fault_tolerance import StragglerTracker
+
+    tr = StragglerTracker(window=50, k_sigma=3.0)
+    for _ in range(1000):
+        tr.record(0.1)
+    assert len(tr.times) == 50              # O(window), not O(steps)
+    # one huge outlier: flagged against the PREVIOUS window's threshold
+    assert tr.record(10.0) is True
+    # stats describe the current window (which now contains the outlier)
+    s = tr.stats()
+    assert s.median == pytest.approx(0.1)
+    assert s.max_delay_ratio == pytest.approx(100.0)
+    # the outlier rolls out of the window again after `window` records
+    for _ in range(50):
+        tr.record(0.1)
+    assert tr.stats().max_delay_ratio == pytest.approx(1.0)
+
+
+# ------------------------------------------------- engine (local mesh) --
+def _local_setup(seed=0):
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+
+    cfg = get_config("mixtral-8x7b").reduced()
+    pctx = make_pctx(cfg, None, train=False)
+    params = init_params(cfg, jax.random.PRNGKey(seed), dtype=jnp.float32)
+    return cfg, pctx, params
+
+
+def _serve(cfg, params, pctx, prompts, max_news, arrivals, **kw):
+    from repro.serving import ServingEngine
+
+    budget = prompts.shape[1] + max(max_news)
+    eng = ServingEngine(cfg, params, slots=2, seq_budget=budget, pctx=pctx,
+                        **kw)
+    for i in range(len(prompts)):
+        eng.submit(prompts[i], max_news[i], arrival=int(arrivals[i]))
+    eng.run()
+    return eng
+
+
+def test_engine_transient_retry_and_pool_pressure_bitwise(tmp_path):
+    """Two injected transients at one step (retried) plus a pool squeeze
+    leave every stream bitwise-identical to the clean run; the heartbeat
+    file carries the occupancy fields the supervisor needs."""
+    from repro.serving import (FaultInjector, pool_pressure,
+                               transient_step_error)
+
+    cfg, pctx, params = _local_setup()
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (5, 8)).astype(np.int32)
+    max_news, arrivals = [4, 6, 3, 5, 4], [0, 0, 1, 2, 3]
+
+    clean = _serve(cfg, params, pctx, prompts, max_news, arrivals)
+    hb = tmp_path / "heartbeat.json"
+    inj = FaultInjector([transient_step_error(1), transient_step_error(1),
+                         pool_pressure(2, 64, duration=2)])
+    faulted = _serve(cfg, params, pctx, prompts, max_news, arrivals,
+                     injector=inj, heartbeat_file=str(hb))
+    assert faulted.outputs == clean.outputs
+    assert faulted.metrics.transient_errors == 2
+    assert faulted.metrics.recoveries == 0
+    assert inj.exhausted
+    beat = json.loads(hb.read_text())
+    for field in ("step", "time", "queue_depth", "slots",
+                  "slots_occupied", "recoveries", "timeouts"):
+        assert field in beat, field
+    if faulted.kv.paged:
+        assert beat["pages_total"] > 0
+    assert beat["step"] == faulted.clock and beat["queue_depth"] == 0
+
+
+def test_engine_transient_exhausts_retries_and_raises():
+    """More consecutive transients than max_retries allows surface the
+    error instead of looping forever."""
+    from repro.serving import (FaultInjector, InjectedStepError,
+                               transient_step_error)
+
+    cfg, pctx, params = _local_setup()
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (1, 8)).astype(np.int32)
+    inj = FaultInjector([transient_step_error(0)] * 4)
+    from repro.serving import ServingEngine
+    eng = ServingEngine(cfg, params, slots=1, seq_budget=16, pctx=pctx,
+                        injector=inj, max_retries=2)
+    eng.submit(prompts[0], 4)
+    with pytest.raises(InjectedStepError):
+        eng.run()
+    assert eng.metrics.transient_errors == 3   # 1 try + 2 retries
+
+
+def test_engine_request_deadlines_cancel_queued_and_running():
+    """TTL cancels a queued request when the clock passes its deadline
+    (pages never allocated) and an explicit deadline cancels a RUNNING
+    request mid-stream with its slot + pages released; unaffected
+    requests still finish bitwise."""
+    from repro.serving import ServingEngine
+    from repro.serving.requests import CANCELLED, DONE
+
+    cfg, pctx, params = _local_setup()
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (3, 8)).astype(np.int32)
+
+    clean = _serve(cfg, params, pctx, prompts, [6, 6, 6], [0, 0, 0])
+
+    eng = ServingEngine(cfg, params, slots=2, seq_budget=14, pctx=pctx)
+    eng.submit(prompts[0], 6)                       # runs to completion
+    eng.submit(prompts[1], 6, deadline=3)           # cancelled mid-decode
+    eng.submit(prompts[2], 6, deadline=2)           # cancelled while queued
+    states = eng.run()
+    assert states[0].status == DONE
+    assert eng.outputs[0] == clean.outputs[0]       # bitwise, unaffected
+    assert states[1].status == CANCELLED
+    assert 0 < len(states[1].tokens) < 6            # partial stream kept
+    assert states[1].tokens == clean.outputs[1][:len(states[1].tokens)]
+    assert states[2].status == CANCELLED and states[2].tokens == []
+    assert eng.metrics.timeouts == 2
+    assert eng.kv.occupancy == 0                    # every page released
+    if eng.kv.paged:
+        assert eng.kv.pool.allocated_pages == 0
+        assert eng.kv.pool.reserved == 0
+
+
+def test_engine_request_ttl_derives_deadlines():
+    from repro.serving import ServingEngine
+
+    cfg, pctx, params = _local_setup()
+    eng = ServingEngine(cfg, params, slots=1, seq_budget=16, pctx=pctx,
+                        request_ttl=5)
+    st = eng.submit(np.zeros(4, np.int32), 2, arrival=3)
+    assert st.request.deadline == 8                 # arrival + ttl
+    st2 = eng.submit(np.zeros(4, np.int32), 2, deadline=4)
+    assert st2.request.deadline == 4                # explicit wins
+
+
+# --------------------------------------------- engine (world-4 EP mesh) --
+_EP_COMMON = r"""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro import compat
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.distributed import sharding as shd
+    from repro.serving import FaultInjector, ServingEngine
+
+    cfg = get_config("mixtral-8x7b").reduced()
+    mesh = compat.make_mesh((1, 4), ("data", "model"))
+    pctx = make_pctx(cfg, mesh, train=False, dist_impl="{impl}")
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32,
+                         ep_world=4)
+    params = jax.device_put(params, shd.params_shardings(
+        cfg, mesh, params, serve=False))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    max_news, arrivals = [6, 5, 6, 4], [0, 0, 1, 2]
+
+    def serve(injector=None, watchdog=None):
+        eng = ServingEngine(cfg, params, slots=2, seq_budget=16,
+                            pctx=pctx, mesh=mesh, injector=injector,
+                            watchdog=watchdog)
+        for i in range(4):
+            eng.submit(prompts[i], max_news[i], arrival=int(arrivals[i]))
+        eng.run()
+        return eng
+
+    clean = serve()
+"""
+
+
+def test_engine_world4_rank_loss_recovers_bitwise():
+    """The tentpole scenario: rank 1 of 4 dies mid-decode. The engine
+    quiesces, rebuilds onto the world-3 PLACED survivor mesh (E=8 on 9
+    slots, one empty), re-places the expert weights, replays every
+    interrupted request from its last emitted token — and every stream
+    is bitwise-identical to the no-fault reference."""
+    run_sub(_EP_COMMON.format(impl="pipelined") + r"""
+    from repro.serving import rank_down
+    inj = FaultInjector([rank_down(4, 1)])
+    faulted = serve(injector=inj)
+    assert faulted.outputs == clean.outputs, \
+        (faulted.outputs, clean.outputs)
+    assert faulted.metrics.recoveries == 1
+    assert faulted.metrics.replayed_requests > 0
+    assert faulted.metrics.replayed_tokens > 0
+    # the engine now runs the world-3 placed topology
+    assert faulted.mesh.shape["model"] == 3
+    assert faulted.pctx.ep_world == 3
+    assert faulted.pctx.expert_placement == (0, 1, 2, 5, 3, 4, 6, 7)
+    print("RANK LOSS BITWISE OK")
+    """, devices=4)
+
+
+def test_engine_world4_transient_and_watchdog_degradation_bitwise():
+    """On the EP mesh: injected transients retry to a bitwise stream,
+    and an injected stall trips the watchdog deadline, degrading
+    dist_impl rdma -> pipelined mid-run — still bitwise (the strategy
+    equivalence matrix)."""
+    run_sub(_EP_COMMON.format(impl="rdma") + r"""
+    from repro.distributed.fault_tolerance import StepWatchdog
+    from repro.serving import step_delay, transient_step_error
+    inj = FaultInjector([transient_step_error(3), step_delay(4, 0.6)])
+    wd = StepWatchdog(factor=1.0, min_deadline=0.4)
+    faulted = serve(injector=inj, watchdog=wd)
+    assert faulted.outputs == clean.outputs, \
+        (faulted.outputs, clean.outputs)
+    assert faulted.metrics.transient_errors == 1
+    assert faulted.metrics.watchdog_fires >= 1
+    assert faulted.metrics.degradations >= 1
+    assert faulted.pctx.dist_impl == "pipelined"
+    print("WATCHDOG DEGRADATION BITWISE OK")
+    """, devices=4)

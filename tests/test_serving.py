@@ -17,8 +17,10 @@
     dist_impl in {bulk, pipelined, rdma} on a dropless spec
     (subprocess, like every multi-device test);
   * the serve CLI threads --eos through (the old dead-EOS bug);
-  * bench_serving --smoke emits valid JSON rows for all three modes,
-    incl. the paged row's memory-per-request fields.
+  * bench_serving --smoke emits valid JSON rows for all four modes,
+    incl. the paged row's memory-per-request fields and the faulted
+    row's lossless-recovery fields (fault-injection behavior itself is
+    test_faults.py's business).
 """
 import json
 import subprocess
@@ -478,10 +480,16 @@ def test_bench_serving_smoke_emits_valid_rows(tmp_path):
     rec = json.loads(out.read_text())
     assert rec["meta"]["bench"] == "bench_serving"
     rows = {row["mode"]: row for row in rec["rows"]}
-    assert set(rows) == {"static", "continuous", "continuous_paged"}
+    assert set(rows) == {"static", "continuous", "continuous_paged",
+                         "continuous_faulted"}
     for row in rows.values():
         assert row["identical"] is True
         assert row["decode_steps"] > 0 and row["tokens"] > 0
+    faulted = rows["continuous_faulted"]
+    assert faulted["faults"]                      # schedule actually fired
+    assert faulted["lost_tokens"] == 0            # recovery is lossless
+    assert faulted["transient_errors"] >= 1
+    assert faulted["tokens"] == rows["continuous"]["tokens"]
     assert rows["continuous"]["decode_steps"] < \
         rows["static"]["decode_steps"]
     assert rows["continuous"]["tokens"] == rows["static"]["tokens"]

@@ -122,6 +122,32 @@ def check_serving(committed: dict, fresh: dict) -> list[str]:
                         f"tok_s={r.get('tok_s')!r}")
         if r.get("mode") == "continuous_paged":
             errs.extend(_check_paged_row(r))
+        if r.get("mode") == "continuous_faulted":
+            errs.extend(_check_faulted_row(r))
+    return errs
+
+
+def _check_faulted_row(r: dict) -> list[str]:
+    """Invariants of the fault-recovery row: the recovery-cost fields
+    must be reported, faults must actually have fired, and recovery must
+    be LOSSLESS — a single reference token missing from a recovered
+    stream (lost_tokens != 0) fails the gate (bitwise equality itself is
+    the generic ``identical`` check above)."""
+    errs = []
+    for field in ("recovery_steps", "replayed_tokens", "lost_tokens",
+                  "faults", "recoveries", "transient_errors"):
+        if field not in r:
+            errs.append(f"serving: continuous_faulted row lost its "
+                        f"'{field}' field")
+    if errs:
+        return errs
+    if int(r["lost_tokens"]) != 0:
+        errs.append(f"serving: fault recovery LOST {r['lost_tokens']} "
+                    "token(s) — recovery must replay every reference "
+                    "token (lost_tokens == 0)")
+    if not r["faults"]:
+        errs.append("serving: continuous_faulted row fired no faults — "
+                    "the chaos schedule never triggered")
     return errs
 
 
