@@ -1,7 +1,7 @@
 # FlashMoE repro — common entry points. Pure-Python JAX project: no
 # build step, PYTHONPATH=src is the only setup (see README.md).
 
-.PHONY: test smoke check-docs check-bench bench bench-smoke bench-serving serve-smoke chaos-smoke dryrun
+.PHONY: test smoke check-docs check-bench bench bench-smoke bench-decode-smoke bench-serving serve-smoke chaos-smoke dryrun
 
 # tier-1 verify: the whole suite (multi-device cases spawn subprocesses)
 test:
@@ -28,6 +28,14 @@ bench:
 # tiny-shape CI sanity run: every impl row must emit valid JSON
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_latency --smoke /tmp/bench_smoke.json
+
+# decode-path gate: run only the EP decode section (fused persistent
+# kernel included) at smoke shapes, then drift-check it against the
+# committed baseline — incl. the committed decode_fused < decode_rdma
+# headline invariant
+bench-decode-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_latency --smoke --decode-only /tmp/bench_decode_smoke.json
+	PYTHONPATH=src python tools/check_bench.py --latency-json /tmp/bench_decode_smoke.json --sections decode --skip-serving
 
 # refresh the committed serving baseline (static vs continuous batching)
 bench-serving:

@@ -179,10 +179,12 @@ def run_decode(batch_list=(1, 8), E=8, H=256, F=256, warmup=3, iters=10):
     tile, no 128-row floor) vs the local gather baseline.
 
     Times ``distributed_moe_decode`` per dist_impl on a pure-EP host
-    mesh (so the rdma one-sided kernels execute under interpret; a
-    requested ``fused`` would downgrade to rdma through the decode
-    einsum gate, so it is not a distinct row here) and ``moe_ffn_gather``
-    as the no-network baseline. Same CPU-relative caveat as above.
+    mesh (so the one-sided rdma/fused kernels execute under interpret)
+    and ``moe_ffn_gather`` as the no-network baseline. ``decode_fused``
+    rows run the decode-shaped persistent kernel (8-row tiles, in-kernel
+    expert compute — ONE pallas_call per step); the other EP rows
+    compute experts as the cost-equivalent einsum. Same CPU-relative
+    caveat as above.
     """
     from repro.compat import make_mesh, with_mesh
     from repro.core.dispatch import SlotInfo, distributed_moe_decode
@@ -211,12 +213,18 @@ def run_decode(batch_list=(1, 8), E=8, H=256, F=256, warmup=3, iters=10):
         if w in pd:
             pd[w] = info.expand_expert_weights(pd[w])
     for impl, dropless in (("bulk", False), ("pipelined", False),
-                           ("rdma", False), ("bulk", True),
-                           ("pipelined", True), ("rdma", True)):
+                           ("rdma", False), ("fused", False),
+                           ("bulk", True), ("pipelined", True),
+                           ("rdma", True), ("fused", True)):
+        # fused keeps expert compute INSIDE the decode-shaped kernel
+        # (expert_compute="kernel"); the XLA-side impls are forced to
+        # the cost-equivalent einsum by distributed_moe_decode itself.
         cfg = MoEConfig(gate=gc, d_model=H, d_ff=F, activation="gelu",
                         gated=False, interpret=True, dist_impl=impl,
                         num_chunks=2, use_pallas_gate=False,
-                        dropless=dropless)
+                        dropless=dropless,
+                        expert_compute=("kernel" if impl == "fused"
+                                        else "einsum"))
         fn = jax.jit(lambda p, x, c=cfg: distributed_moe_decode(
             p, x, c, mesh_ep)[0])
         name_impl = f"decode_{impl}" + ("_dropless" if dropless else "")
@@ -233,17 +241,21 @@ def run_decode(batch_list=(1, 8), E=8, H=256, F=256, warmup=3, iters=10):
     return results
 
 
-def main(out_path: str = "BENCH_latency.json", smoke: bool = False):
+def main(out_path: str = "BENCH_latency.json", smoke: bool = False,
+         decode_only: bool = False):
+    local = dist = None
     if smoke:
-        local = run(tokens_list=(256,), E=4, H=128, F=128,
-                    warmup=1, iters=3)
-        dist = run_distributed(tokens_list=(256,), E=4, H=128, F=128,
-                               warmup=1, iters=3)
+        if not decode_only:
+            local = run(tokens_list=(256,), E=4, H=128, F=128,
+                        warmup=1, iters=3)
+            dist = run_distributed(tokens_list=(256,), E=4, H=128, F=128,
+                                   warmup=1, iters=3)
         dec = run_decode(batch_list=(4,), E=4, H=128, F=128,
                          warmup=1, iters=3)
     else:
-        local = run()
-        dist = run_distributed()
+        if not decode_only:
+            local = run()
+            dist = run_distributed()
         dec = run_decode()
     rec = {
         "meta": {
@@ -256,14 +268,18 @@ def main(out_path: str = "BENCH_latency.json", smoke: bool = False):
                      "only — absolute TPU numbers come from the roofline "
                      "artifacts. Units: us/call (median of 10)."),
         },
-        "local": [{"impl": i, "tokens": t, "us": round(us, 1)}
-                  for i, t, us in local],
-        "distributed": [{"impl": i, "tokens": t, "us": round(us, 1), **s}
-                        for i, t, us, s in dist],
         "decode": [{"impl": i, "tokens": t, "us": round(us, 1),
                     **(s or {})}
                    for i, t, us, s in dec],
     }
+    if not decode_only:
+        # a decode-only record omits these sections entirely;
+        # check_bench --sections decode skips them symmetrically.
+        rec["local"] = [{"impl": i, "tokens": t, "us": round(us, 1)}
+                        for i, t, us in local]
+        rec["distributed"] = [{"impl": i, "tokens": t, "us": round(us, 1),
+                               **s}
+                              for i, t, us, s in dist]
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1)
         f.write("\n")
@@ -276,5 +292,9 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, few iters: JSON-validity CI run "
                          "(make bench-smoke)")
+    ap.add_argument("--decode-only", action="store_true",
+                    help="run only the EP decode section (make "
+                         "bench-decode-smoke pipes this through "
+                         "check_bench --sections decode)")
     a = ap.parse_args()
-    main(a.out_path, smoke=a.smoke)
+    main(a.out_path, smoke=a.smoke, decode_only=a.decode_only)

@@ -37,7 +37,9 @@ y_back`` registered in :data:`EXCHANGE_IMPLS` and running inside
     no XLA boundary between phases — round s+1's payload is on the wire
     while round s's expert tiles compute and round s-1's outputs push
     back. Needs everything ``rdma`` needs plus in-kernel expert compute
-    (``expert_compute="kernel"``).
+    (``expert_compute="kernel"``). Train plans run the 128-row-tile
+    kernel; decode plans run the decode-shaped kernel (8-row tiles,
+    double-buffered loads, tile-granular combine pushes).
 
 Where a strategy cannot run, :func:`resolve_dist_impl` walks the chain
 ``fused -> rdma -> pipelined`` and logs each downgrade reason once per
@@ -51,8 +53,9 @@ Two entry points share the table:
   * :func:`distributed_moe_decode` — the latency path: tiny replicated
     token batches, the ``phase="decode"`` plan (8-row capacity tile — a
     single token ships ≤ 8 rows per slot, not a 128-row kernel tile),
-    einsum expert compute, and a replicated-hot-expert fast path that
-    skips the network entirely when E < P.
+    the decode-shaped single kernel when ``fused`` resolves (einsum
+    expert compute otherwise), and a replicated-hot-expert fast path
+    that skips the network entirely when E < P.
 
 Expert placement ("slots"): see ``core/exchange.SlotInfo`` — slot-major
 (slots, H, F) weights, replicated R = P/E times when E < P, replica
@@ -75,14 +78,15 @@ from repro.core.exchange import (DECODE_TILE_M, ExchangePlan, SlotInfo,
                                  scatter_to_buffer, slot_capacity)
 from repro.core.moe import (DIST_IMPLS, MoEConfig, moe_ffn_gather, run_gate,
                             shared_expert_ffn)
+from repro.kernels.fused_ep.decode import fused_ep_moe_decode
 from repro.kernels.fused_ep.kernel import fused_ep_moe
 from repro.kernels.fused_moe.ops import grouped_expert_ffn, ragged_expert_ffn
 from repro.kernels.rdma.kernel import rdma_combine, rdma_dispatch
 
 _logger = logging.getLogger(__name__)
-# warn-once memory, keyed (requested_impl, reason): a warning for one
-# cause must not suppress logging of a different impl's (or a different
-# cause's) downgrade. Cleared by reset_fallback_warnings().
+# warn-once memory, keyed (requested_impl, phase, reason): a warning for
+# one cause must not suppress logging of a different impl's, phase's, or
+# cause's downgrade. Cleared by reset_fallback_warnings().
 _warned_fallbacks = set()
 
 # downgrade chain walked by resolve_dist_impl when a strategy's gate
@@ -121,12 +125,12 @@ def fused_fallback_reason(interpret: bool, mesh=None,
                           expert_compute: str = "kernel") -> Optional[str]:
     """None when the single persistent kernel can run here, else why not.
 
-    The fused kernel needs everything the rdma kernels need (its
-    transport IS a pair of one-sided exchanges) plus the expert compute
-    inside the kernel — ``expert_compute="einsum"`` (the dry-run/roofline
-    mode, and the decode plan whose 8-row capacity is below the kernel's
-    128-row tile) keeps compute in XLA-visible einsums, which only the
-    unfused strategies can honor.
+    The fused kernels (train-shaped 128-row tiles, decode-shaped 8-row
+    tiles — kernels/fused_ep) need everything the rdma kernels need
+    (their transport IS a pair of one-sided exchanges) plus the expert
+    compute inside the kernel — ``expert_compute="einsum"`` (the
+    dry-run/roofline mode) keeps compute in XLA-visible einsums, which
+    only the unfused strategies can honor.
     """
     if expert_compute != "kernel":
         return (f"expert_compute={expert_compute!r} keeps expert compute "
@@ -135,19 +139,25 @@ def fused_fallback_reason(interpret: bool, mesh=None,
 
 
 def reset_fallback_warnings() -> None:
-    """Test hook: forget which (requested_impl, reason) downgrades have
-    been logged so tests can assert on fresh warnings."""
+    """Test hook: forget which (requested_impl, phase, reason) downgrades
+    have been logged so tests can assert on fresh warnings."""
     _warned_fallbacks.clear()
 
 
-def resolve_dist_impl(cfg: MoEConfig, mesh=None,
-                      ep_axis: str = "model") -> str:
-    """Effective EP strategy for this config/mesh/backend.
+def resolve_dist_impl(cfg: MoEConfig, mesh=None, ep_axis: str = "model",
+                      phase: str = "train") -> str:
+    """Effective EP strategy for this config/mesh/backend/phase.
 
     Validates ``cfg.dist_impl`` against :data:`repro.core.moe.DIST_IMPLS`
     and walks the downgrade chain ``fused -> rdma -> pipelined``, logging
-    each distinct (requested impl, reason) once, until a strategy's gate
-    accepts. The returned name indexes :data:`EXCHANGE_IMPLS`.
+    each distinct (requested impl, phase, reason) once, until a
+    strategy's gate accepts — so a train-time downgrade never hides the
+    decode-time log for the same cause, and the logged reason is the
+    gate that actually rejected on THIS phase's path (not a stale
+    expert-compute reason when the real blocker is the interpret-mode
+    multi-axis mesh limit). The returned name indexes
+    :data:`EXCHANGE_IMPLS`; both fused kernels (train- and
+    decode-shaped) share the same gate.
     """
     if cfg.dist_impl not in DIST_IMPLS:
         raise ValueError(
@@ -165,12 +175,30 @@ def resolve_dist_impl(cfg: MoEConfig, mesh=None,
         reasons.append((impl, reason))   # the gate that rejected
         impl = _FALLBACK_NEXT[impl]
     for gate, reason in reasons:
-        key = (cfg.dist_impl, reason)
+        key = (cfg.dist_impl, phase, reason)
         if key not in _warned_fallbacks:
             _warned_fallbacks.add(key)
-            _logger.warning("dist_impl=%r falling back to %r (%s gate): %s",
-                            cfg.dist_impl, impl, gate, reason)
+            _logger.warning(
+                "dist_impl=%r falling back to %r [phase=%s] (%s gate): %s",
+                cfg.dist_impl, impl, phase, gate, reason)
     return impl
+
+
+def degrade_next(impl: str, phase: str = "train") -> Optional[str]:
+    """Next strategy on the watchdog degradation ladder, or None.
+
+    Walks :data:`_FALLBACK_NEXT` (fused -> rdma -> pipelined), skipping
+    any rung that cannot serve ``phase`` (:data:`PHASE_CAPABLE`) — so a
+    decode-shaped engine degrades through decode-capable impls only
+    instead of hardcoding the train chain. Today every registered
+    strategy serves both plan flavors, so no rung is skipped; the table
+    is what a future train-only strategy would shrink.
+    """
+    capable = PHASE_CAPABLE[phase]
+    nxt = _FALLBACK_NEXT.get(impl)
+    while nxt is not None and nxt not in capable:
+        nxt = _FALLBACK_NEXT.get(nxt)
+    return nxt
 
 
 def _experts_einsum(w1, w2, w3, x, cfg: MoEConfig):
@@ -431,24 +459,30 @@ def _exchange_fused(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     # counts metadata (exchange_counts, run before the body) precedes
     # it. Same staged-slab and combine-landing layouts as bulk/rdma, so
     # the downstream gather-combine is untouched — and the output is
-    # bitwise-equal to the bulk path.
+    # bitwise-equal to the bulk path. Decode-flavor plans route to the
+    # decode-shaped kernel (8-row tiles, full-F contraction — bitwise
+    # == the moe_ffn_gather oracle); train plans to the 128-row one.
     w1, w2, w3 = weights
     info, C = plan.info, plan.capacity
     H = buf.shape[-1]
     slabs = buf.reshape(plan.staged_slab_shape(H))
+    if plan.phase == "decode":
+        kernel = functools.partial(fused_ep_moe_decode, tile_m=plan.tile_m)
+    else:
+        kernel = fused_ep_moe
     if plan.dropless:
         # the persistent kernel walks the SAME ragged tile tables the
         # unfused paths use, passed in SMEM next to the counts metadata.
         ts, tv = ragged_tile_tables(plan.counts_rcv, plan.slab_rows,
                                     plan.tile_m)
         P = info.world
-        y_back = fused_ep_moe(
+        y_back = kernel(
             slabs, w1, w2, w3, plan.counts_rcv, axis=plan.axis,
             world=P, activation=cfg.activation, interpret=cfg.interpret,
             mesh_axes=plan.mesh_axes,
             tile_slot=ts.reshape(P, -1), tile_valid=tv.reshape(P, -1))
         return y_back
-    y_back = fused_ep_moe(
+    y_back = kernel(
         slabs, w1, w2, w3, plan.counts_rcv, axis=plan.axis,
         world=info.world, activation=cfg.activation,
         interpret=cfg.interpret, mesh_axes=plan.mesh_axes)
@@ -460,6 +494,15 @@ EXCHANGE_IMPLS = {
     "pipelined": _exchange_pipelined,
     "rdma": _exchange_rdma,
     "fused": _exchange_fused,
+}
+
+# which strategies can serve each ExchangePlan flavor — consulted by
+# degrade_next so the watchdog ladder never lands a phase on an impl
+# that cannot run it. Every current strategy handles both flavors
+# (fused routes decode plans to the decode-shaped kernel).
+PHASE_CAPABLE = {
+    "train": frozenset(EXCHANGE_IMPLS),
+    "decode": frozenset(EXCHANGE_IMPLS),
 }
 
 
@@ -488,8 +531,11 @@ def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
         cfg.gate, slot_ids, info, phase="train",
         num_chunks=(cfg.num_chunks if impl == "pipelined" else 1),
         axis=axis, mesh_axes=mesh_axes, dropless=cfg.dropless)
-    buf = scatter_to_buffer(plan, x_loc, cfg.gate.top_k)
+    # counts metadata first: the tiny all-to-all is dataflow-independent
+    # of the scatter, so XLA's async collective overlaps it with staging
+    # instead of serializing it ahead of the payload exchange.
     plan = exchange_counts(plan)
+    buf = scatter_to_buffer(plan, x_loc, cfg.gate.top_k)
 
     y_back = EXCHANGE_IMPLS[impl](plan, buf, (w1, w2, w3), cfg)
 
@@ -600,8 +646,11 @@ def _ep_decode_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
             cfg.gate, slot_ids, info, phase="decode",
             num_chunks=(cfg.num_chunks if impl == "pipelined" else 1),
             axis=axis, mesh_axes=mesh_axes, dropless=cfg.dropless)
-        buf = scatter_to_buffer(plan, x_loc, cfg.gate.top_k)
+        # counts metadata first: the tiny all-to-all overlaps with the
+        # scatter staging (dataflow-independent) — at 1-token batches
+        # the metadata round-trip is a visible slice of the step.
         plan = exchange_counts(plan)
+        buf = scatter_to_buffer(plan, x_loc, cfg.gate.top_k)
         y_back = EXCHANGE_IMPLS[impl](plan, buf, (w1, w2, w3), cfg)
         y_loc = gather_combine(plan, y_back.reshape(plan.num_rows, H),
                                gate_out.combine_weights)
@@ -626,13 +675,14 @@ def distributed_moe_decode(params: dict, x: jax.Array, cfg: MoEConfig,
 
     The decode counterpart of :func:`distributed_moe`: same strategy
     table, different plan flavor. x enters and leaves REPLICATED (one
-    token per sequence; there is no sequence dim to keep resident), the
-    plan aligns capacity to DECODE_TILE_M (8) with no 128-row floor — a
-    1-token batch ships ≤ 8 rows per slot on the wire — and expert
-    compute runs as the cost-equivalent einsum (the grouped kernel's
-    128-row tiles would reintroduce the padding the plan removed), which
-    also means a requested ``dist_impl="fused"`` downgrades to ``rdma``
-    through its expert-compute gate.
+    token per sequence; there is no sequence dim to keep resident) and
+    the plan aligns capacity to DECODE_TILE_M (8) with no 128-row floor
+    — a 1-token batch ships ≤ 8 rows per slot on the wire. A resolved
+    ``dist_impl="fused"`` runs the decode-shaped persistent kernel
+    (kernels/fused_ep/decode: 8-row tiles, dispatch->compute->combine in
+    ONE pallas_call); every other strategy computes experts as the
+    cost-equivalent einsum (the 128-row grouped kernel would reintroduce
+    the padding the plan removed).
 
     When E < P the exchange is skipped entirely: every rank receives a
     replica of the (small) expert set and computes its token block
@@ -657,10 +707,9 @@ def distributed_moe_decode(params: dict, x: jax.Array, cfg: MoEConfig,
                                     mesh.shape[ep_axis], expert_placement)
     else:
         info = SlotInfo.make(cfg.gate.num_experts, mesh.shape[ep_axis])
-    # decode plans stay below the kernel tile; the jnp gate avoids the
-    # pallas gate kernel's own 128-row tiling on tiny token counts.
-    cfg = dataclasses.replace(cfg, expert_compute="einsum",
-                              use_pallas_gate=False)
+    # the jnp gate avoids the pallas gate kernel's own 128-row tiling on
+    # tiny token counts.
+    cfg = dataclasses.replace(cfg, use_pallas_gate=False)
     w3 = params.get("w3")
     shared = {k: v for k, v in params.items() if k.startswith("shared_")}
     rep2 = P(None, None)
@@ -669,7 +718,13 @@ def distributed_moe_decode(params: dict, x: jax.Array, cfg: MoEConfig,
         impl = None
     else:
         w_spec = P(ep_axis, None, None)
-        impl = resolve_dist_impl(cfg, mesh, ep_axis)
+        impl = resolve_dist_impl(cfg, mesh, ep_axis, phase="decode")
+        if impl != "fused":
+            # only the decode-shaped fused kernel keeps expert compute
+            # in-kernel at 8-row tiles; the XLA-side strategies run the
+            # cost-equivalent einsum (the 128-row grouped kernel would
+            # reintroduce the padding the decode plan removed).
+            cfg = dataclasses.replace(cfg, expert_compute="einsum")
     body = functools.partial(_ep_decode_body, cfg=cfg, info=info,
                              axis=ep_axis, impl=impl, rng=rng,
                              mesh_axes=tuple(mesh.shape))

@@ -15,10 +15,11 @@ binds differently per serving phase, so the planner is phase-aware:
   * ``phase="decode"`` — the latency plan: at decode ``T·k ≪ E·C``, so a
     128-row capacity floor would ship a full kernel tile per slot for a
     single token. Capacity aligns to ``DECODE_TILE_M`` (8) instead — a
-    1-token batch stages ≤ 8 rows per slot on the wire — and expert
-    compute runs as the cost-equivalent einsum (the grouped kernel's
-    128-row tiles would reintroduce exactly the padding the plan
-    removed).
+    1-token batch stages ≤ 8 rows per slot on the wire. The fused
+    strategy runs the decode-shaped persistent kernel on these 8-row
+    tiles (kernels/fused_ep/decode); the XLA-side strategies compute
+    experts as the cost-equivalent einsum (the 128-row grouped kernel
+    would reintroduce exactly the padding the plan removed).
 
 An :class:`ExchangePlan` carries the slot topology (:class:`SlotInfo`),
 the static capacity/chunking, the traced placement arrays

@@ -1,5 +1,8 @@
+from repro.kernels.fused_ep.decode import (FUSED_DECODE_COLLECTIVE_ID,
+                                           fused_ep_moe_decode)
 from repro.kernels.fused_ep.kernel import (FUSED_COLLECTIVE_ID,
                                            fused_ep_moe)
 from repro.kernels.fused_ep.ref import fused_ep_moe_ref
 
-__all__ = ["FUSED_COLLECTIVE_ID", "fused_ep_moe", "fused_ep_moe_ref"]
+__all__ = ["FUSED_COLLECTIVE_ID", "FUSED_DECODE_COLLECTIVE_ID",
+           "fused_ep_moe", "fused_ep_moe_decode", "fused_ep_moe_ref"]

@@ -1,0 +1,369 @@
+"""Decode-shaped persistent fused kernel: the FlashMoE single-kernel
+dispatch -> expert compute -> combine for 1-token EP steps
+(`dist_impl="fused"` on a ``phase="decode"`` ExchangePlan).
+
+The train-shaped kernel (kernel.py) walks 128-row tiles — at decode a
+slot's capacity is 8 rows, so the 128-row floor would reintroduce the
+padding the decode plan exists to avoid, and the path used to downgrade
+fused->rdma with einsum compute. This kernel is the same persistent
+rotation-schedule body re-tiled at ``tile_m = plan.tile_m`` (8-row
+``DECODE_TILE_M`` tiles), with the expert FFN computed as ONE full-F
+contraction per tile (no f-split): at decode shapes the whole f32
+``(tile_m, F)`` activation tile is a few KB, and a single h-then-f
+contraction makes the per-row arithmetic order identical to the
+``moe_ffn_gather`` einsum oracle — the output is bitwise-equal to the
+local oracle and to the bulk decode path, capacity and dropless alike.
+
+It also folds in the PR-3 real-TPU follow-ups the train kernel documents
+as out of scope:
+
+  * double-buffered x-tile loads — a 2-slot VMEM scratch with its own
+    DMA-semaphore pair; tile t+1's HBM->VMEM load is on the wire while
+    tile t computes;
+  * tile-granular combine pushes — each computed ``tile_m``-row tile is
+    pushed back to its SOURCE's writer-indexed combine landing straight
+    from a 2-slot VMEM y buffer (per-(round, tile) semaphore cells; the
+    send semaphore of the push two tiles back gates slot reuse), instead
+    of one slab-granular push per round through an HBM staging slab —
+    the computed row never touches HBM on the sending side;
+  * the counts-metadata exchange is started before dispatch staging in
+    core/dispatch (`_ep_decode_body`), so the tiny counts all-to-all
+    overlaps the scatter instead of serializing ahead of the kernel.
+
+Schedule (identical to kernel.py): round ``s`` pushes staged slab
+``(me+s) % P`` one-sided to that peer's dispatch landing row ME
+(writer-indexed — Theorem 3.1), keeps LOOKAHEAD rounds of dispatch in
+flight, waits the round-s landing semaphore, then runs that slab's
+8-row tiles (null tiles skipped via the exchanged counts on the
+capacity path, or the SMEM ragged tile tables on the dropless path) and
+streams each tile straight back into the source's combine landing.
+
+Gradients: custom VJP re-traces the decomposed rdma_dispatch ->
+grouped/ragged_expert_ffn(tile_m=8, tile_f=F) -> rdma_combine
+composition, exactly like the train kernel's VJP — the sub-128-row
+grouped-GEMM backward keeps the owner-sorted contiguous accumulate.
+
+Gating is shared with the train kernel (core/dispatch
+``fused_fallback_reason``): real TPU, or interpret mode on a pure-EP
+mesh (the 0.4.x remote-DMA discharge limit).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_moe.kernel import _act
+from repro.kernels.fused_moe.ops import grouped_expert_ffn, ragged_expert_ffn
+from repro.kernels.rdma.kernel import (_CompilerParams, device_id_for_peer,
+                                       rdma_combine, rdma_dispatch)
+
+FUSED_DECODE_COLLECTIVE_ID = 10
+
+# dispatch rounds kept in flight ahead of compute (same depth as the
+# train-shaped kernel).
+LOOKAHEAD = 2
+
+
+def _decode_tile_ffn(x, w1_ref, w2_ref, w3_ref, l, *, activation: str):
+    """One sub-128-row expert tile as a single full-F contraction.
+
+    Unlike kernel._tile_ffn there is no f-tile accumulation loop: h is
+    one dot over H, y one dot over F — the same contraction order as the
+    ``moe_ffn_gather`` einsum oracle (and the decode einsum strategies),
+    which is what makes decode-fused bitwise-equal to both. ``l`` is the
+    owner slot: static int on the capacity path, traced (dynamic ``pl.ds``
+    fetch) on the ragged dropless path.
+    """
+    dyn = not isinstance(l, int)
+
+    def w_block(ref):
+        if dyn:
+            return ref[pl.ds(l, 1), :, :][0]
+        return ref[l]
+
+    w1b = w_block(w1_ref)
+    h = jnp.dot(x, w1b, preferred_element_type=jnp.float32)
+    h = _act(activation, h)
+    if w3_ref is not None:
+        g = jnp.dot(x, w_block(w3_ref),
+                    preferred_element_type=jnp.float32)
+        h = h * g
+    w2b = w_block(w2_ref)
+    return jnp.dot(h.astype(w2b.dtype), w2b,
+                   preferred_element_type=jnp.float32)
+
+
+def _fused_ep_decode_body(slabs_ref, w1_ref, w2_ref, w3_ref, counts_ref,
+                          out_ref, land_ref,
+                          x_vmem, y_vmem,
+                          disp_send, disp_recv, comb_send, comb_recv,
+                          ld_sems,
+                          *, axis: str, world: int, local_slots: int,
+                          capacity: int, tile_m: int, activation: str,
+                          mesh_axes, tile_slot_ref=None,
+                          tile_valid_ref=None, slab_tiles: int = 0):
+    my_id = jax.lax.axis_index(axis)
+    ragged = tile_slot_ref is not None
+    cap_tiles = 0 if ragged else capacity // tile_m
+    ntiles = slab_tiles if ragged else local_slots * cap_tiles
+
+    def make_disp(s):
+        # staged slab for peer (me+s)%P -> peer's landing row ME
+        peer = jax.lax.rem(my_id + s, world)
+        device_id, id_type = device_id_for_peer(peer, axis, mesh_axes)
+        return pltpu.make_async_remote_copy(
+            src_ref=slabs_ref.at[peer],
+            dst_ref=land_ref.at[my_id],
+            send_sem=disp_send.at[s],
+            recv_sem=disp_recv.at[s],
+            device_id=device_id,
+            device_id_type=id_type,
+        )
+
+    def make_comb_tile(g, row0):
+        # tile-granular combine for global tile g = s*ntiles + t: this
+        # round-s tile -> its SOURCE's writer-indexed combine row ME,
+        # pushed straight from the y double buffer (one semaphore cell
+        # per (round, tile), so consecutive pushes overlap freely).
+        s = g // ntiles
+        src = jax.lax.rem(my_id - s + world, world)
+        device_id, id_type = device_id_for_peer(src, axis, mesh_axes)
+        return pltpu.make_async_remote_copy(
+            src_ref=y_vmem.at[g % 2],
+            dst_ref=out_ref.at[my_id, pl.ds(row0, tile_m)],
+            send_sem=comb_send.at[g],
+            recv_sem=comb_recv.at[g],
+            device_id=device_id,
+            device_id_type=id_type,
+        )
+
+    def row0_of(t):
+        if ragged:
+            return t * tile_m
+        l, r = divmod(t, cap_tiles)
+        return l * capacity + r * tile_m
+
+    for s in range(min(LOOKAHEAD, world)):
+        make_disp(s).start()
+
+    for s in range(world):
+        # landing-slab semaphore for round s: payload from (me-s)%P is in
+        # land_ref[src] the moment this returns — compute starts NOW.
+        make_disp(s).wait()
+        if s + LOOKAHEAD < world:
+            make_disp(s + LOOKAHEAD).start()   # keep dispatch in flight
+        src = jax.lax.rem(my_id - s + world, world)
+
+        def make_load(t, slot):
+            return pltpu.make_async_copy(
+                land_ref.at[src, pl.ds(row0_of(t), tile_m)],
+                x_vmem.at[slot], ld_sems.at[slot])
+
+        if ntiles:
+            make_load(0, 0).start()
+        for t in range(ntiles):
+            if t + 1 < ntiles:
+                # double buffer: tile t+1's load rides the wire while
+                # tile t computes (disjoint VMEM slot, own semaphore).
+                make_load(t + 1, (t + 1) % 2).start()
+            make_load(t, t % 2).wait()
+            g = s * ntiles + t
+            row0 = row0_of(t)
+            if ragged:
+                l = tile_slot_ref[src, t]
+                valid = tile_valid_ref[src, t] == 1
+            else:
+                l, r = divmod(t, cap_tiles)
+                valid = (r * tile_m) < counts_ref[src, l]
+            if g >= 2:
+                # y slot g%2 was last pushed by global tile g-2: its
+                # send semaphore gates the overwrite.
+                make_comb_tile(g - 2, row0_of((g - 2) % ntiles)).wait_send()
+            y_vmem[g % 2] = jax.lax.cond(
+                valid,
+                lambda l=l, t=t: _decode_tile_ffn(
+                    x_vmem[t % 2], w1_ref, w2_ref, w3_ref, l,
+                    activation=activation).astype(y_vmem.dtype),
+                lambda: jnp.zeros((tile_m, y_vmem.shape[-1]),
+                                  y_vmem.dtype))
+            make_comb_tile(g, row0).start()
+
+    total = world * ntiles
+    for g in range(max(0, total - 2), total):
+        make_comb_tile(g, row0_of(g % ntiles)).wait_send()
+    for g in range(total):
+        # pushes INTO my combine landing (signalled by the peers running
+        # the mirror-image program) — the kernel's output barrier.
+        make_comb_tile(g, row0_of(g % ntiles)).wait_recv()
+
+
+def _fused_ep_decode_call(slabs, w1, w2, w3, counts, *, axis: str,
+                          world: int, tile_m: int, activation: str,
+                          interpret: bool, mesh_axes,
+                          tile_slot=None, tile_valid=None):
+    P, LsC, H = slabs.shape
+    Ls = w1.shape[0]
+    assert P == world, (P, world)
+    ragged = tile_slot is not None
+    if ragged:
+        assert LsC % tile_m == 0, (LsC, tile_m)
+        C = 0
+        slab_tiles = LsC // tile_m
+        assert tile_slot.shape == tile_valid.shape == (P, slab_tiles), (
+            tile_slot.shape, (P, slab_tiles))
+        ntiles = slab_tiles
+    else:
+        assert LsC % Ls == 0, (LsC, Ls)
+        C = LsC // Ls
+        assert C % tile_m == 0, (C, tile_m)
+        slab_tiles = 0
+        ntiles = Ls * (C // tile_m)
+
+    body = functools.partial(
+        _fused_ep_decode_body, axis=axis, world=world, local_slots=Ls,
+        capacity=C, tile_m=tile_m, activation=activation,
+        mesh_axes=mesh_axes, slab_tiles=slab_tiles)
+
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),    # staged slabs
+                pl.BlockSpec(memory_space=pltpu.VMEM),   # w1 (resident)
+                pl.BlockSpec(memory_space=pltpu.VMEM)]   # w2 (resident)
+    inputs = [slabs, w1, w2]
+    if w3 is not None:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.VMEM))
+        inputs.append(w3)
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))  # counts
+    inputs.append(counts)
+    if ragged:
+        # the ragged tile tables ride next to the counts metadata
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        inputs.append(tile_slot.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        inputs.append(tile_valid.astype(jnp.int32))
+
+    def wrapped(*refs):
+        if w3 is not None:
+            s_r, w1_r, w2_r, w3_r, c_r = refs[:5]
+            rest = refs[5:]
+        else:
+            s_r, w1_r, w2_r, c_r = refs[:4]
+            w3_r = None
+            rest = refs[4:]
+        kw = {}
+        if ragged:
+            kw = {"tile_slot_ref": rest[0], "tile_valid_ref": rest[1]}
+            rest = rest[2:]
+        body(s_r, w1_r, w2_r, w3_r, c_r, *rest, **kw)
+
+    y_back, _land = pl.pallas_call(
+        wrapped,
+        in_specs=in_specs,
+        # both landing buffers are real buffers (remote-DMA targets):
+        # out[0] is the combine landing (the result), out[1] the dispatch
+        # landing — STAGE_REMOTE cells of the symmetric layout L.
+        out_specs=(pl.BlockSpec(memory_space=pltpu.ANY),
+                   pl.BlockSpec(memory_space=pltpu.ANY)),
+        out_shape=(jax.ShapeDtypeStruct((P, LsC, H), slabs.dtype),
+                   jax.ShapeDtypeStruct((P, LsC, H), slabs.dtype)),
+        scratch_shapes=[
+            pltpu.VMEM((2, tile_m, H), slabs.dtype),  # x double buffer
+            pltpu.VMEM((2, tile_m, H), slabs.dtype),  # y double buffer
+            pltpu.SemaphoreType.DMA((world,)),        # dispatch send
+            pltpu.SemaphoreType.DMA((world,)),        # dispatch recv
+            # one combine cell per (round, tile): tile-granular pushes
+            pltpu.SemaphoreType.DMA((world * max(ntiles, 1),)),
+            pltpu.SemaphoreType.DMA((world * max(ntiles, 1),)),
+            pltpu.SemaphoreType.DMA((2,)),            # x-tile loads
+        ],
+        compiler_params=_CompilerParams(
+            collective_id=FUSED_DECODE_COLLECTIVE_ID),
+        interpret=interpret,
+        name="flashmoe_fused_ep_decode",
+    )(*inputs)
+    return y_back
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12))
+def _fused_ep_decode(slabs, w1, w2, w3, counts, tile_slot, tile_valid,
+                     axis, world, tile_m, activation, interpret,
+                     mesh_axes):
+    return _fused_ep_decode_call(
+        slabs, w1, w2, w3, counts, axis=axis, world=world, tile_m=tile_m,
+        activation=activation, interpret=interpret, mesh_axes=mesh_axes,
+        tile_slot=tile_slot, tile_valid=tile_valid)
+
+
+def _fused_ep_decode_fwd(slabs, w1, w2, w3, counts, tile_slot, tile_valid,
+                         axis, world, tile_m, activation, interpret,
+                         mesh_axes):
+    y = _fused_ep_decode(slabs, w1, w2, w3, counts, tile_slot, tile_valid,
+                         axis, world, tile_m, activation, interpret,
+                         mesh_axes)
+    return y, (slabs, w1, w2, w3, counts, tile_slot, tile_valid)
+
+
+def _fused_ep_decode_bwd(axis, world, tile_m, activation, interpret,
+                         mesh_axes, res, g):
+    """Same decomposition as the train kernel's VJP — rdma_dispatch ->
+    sub-128-row grouped GEMM -> rdma_combine, re-traced with this
+    kernel's tile size and the full-F contraction (tile_f=F) so the
+    recomputed forward stays bitwise-equal to the kernel."""
+    slabs, w1, w2, w3, counts, tile_slot, tile_valid = res
+    Ls, _, F = w1.shape
+
+    def decomposed(s, a, b, c):
+        landing = rdma_dispatch(s, axis=axis, world=world,
+                                interpret=interpret, mesh_axes=mesh_axes)
+        P_, R, H = landing.shape
+        if tile_slot is not None:
+            y = ragged_expert_ffn(
+                a, b, c, landing.reshape(P_ * R, H),
+                tile_slot.reshape(-1), tile_valid.reshape(-1),
+                activation=activation, tile_m=tile_m, tile_f=F,
+                interpret=interpret)
+            y = y.reshape(P_, R, H)
+        else:
+            recv = landing.reshape(P_, Ls, R // Ls, H)
+            y = grouped_expert_ffn(
+                a, b, c, recv, counts,
+                activation=activation, tile_m=tile_m, tile_f=F,
+                interpret=interpret
+            ).reshape(P_, R, H)
+        return rdma_combine(y, axis=axis, world=world,
+                            interpret=interpret, mesh_axes=mesh_axes)
+
+    _, vjp = jax.vjp(decomposed, slabs, w1, w2, w3)
+    ds, dw1, dw2, dw3 = vjp(g)
+    return ds, dw1, dw2, dw3, None, None, None
+
+
+_fused_ep_decode.defvjp(_fused_ep_decode_fwd, _fused_ep_decode_bwd)
+
+
+def fused_ep_moe_decode(slabs: jax.Array, w1: jax.Array, w2: jax.Array,
+                        w3: Optional[jax.Array], counts_rcv: jax.Array,
+                        *, axis: str, world: int, tile_m: int,
+                        activation: str = "gelu", interpret: bool = False,
+                        mesh_axes=None,
+                        tile_slot: Optional[jax.Array] = None,
+                        tile_valid: Optional[jax.Array] = None
+                        ) -> jax.Array:
+    """Decode-shaped dispatch -> expert FFN -> combine in one kernel.
+
+    Must run inside shard_map over ``axis`` (the EP axis). Same
+    slab/landing contract as :func:`kernel.fused_ep_moe`, with
+    ``tile_m`` taken from the decode plan (``plan.tile_m``, 8-row
+    ``DECODE_TILE_M`` tiles) instead of the 128-row train tile, and the
+    expert FFN computed as a single full-F contraction per tile so the
+    result is bitwise-equal to the ``moe_ffn_gather`` oracle.
+    Returns (P, local_slots*C, H) in the ``exchange.gather_combine``
+    layout, bitwise-equal to the bulk decode path.
+    """
+    return _fused_ep_decode(
+        slabs, w1, w2, w3, counts_rcv, tile_slot, tile_valid,
+        axis, world, tile_m, activation, interpret,
+        None if mesh_axes is None else tuple(mesh_axes))

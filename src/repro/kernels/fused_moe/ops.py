@@ -95,29 +95,35 @@ def fused_moe_ffn(
 
 
 def grouped_expert_ffn(w1, w2, w3, recv, counts_rcv, *, activation: str,
+                       tile_m: int = TILE_M,
+                       tile_f: Optional[int] = None,
                        interpret: bool = True) -> jax.Array:
     """Fused grouped-GEMM over an EP dispatch-landing buffer.
 
     Layout adapter shared by the EP strategies (core/dispatch) and the
-    fused-EP kernel's decomposed backward (kernels/fused_ep): ONE
+    fused-EP kernels' decomposed backward (kernels/fused_ep): ONE
     ``fused_moe_ffn`` call over the slot-major landing buffer, with
     ``tile_valid`` derived from the exchanged per-source counts so
     capacity-padding tiles are skipped (§3.2.1 work conservation).
 
     Args:
       recv: (P, local_slots, C, H) — tokens from every source for the
-        slots this device owns; C is a multiple of TILE_M.
+        slots this device owns; C is a multiple of ``tile_m``.
       counts_rcv: (P, local_slots) int32 actual token counts.
+      tile_m: row-tile size; 128 for train shapes, DECODE_TILE_M (8) for
+        the decode-shaped plans whose capacity has no 128-row floor.
+      tile_f: optional f-tile override (the decode path passes F so the
+        per-row contraction order matches the einsum oracle bitwise).
     Returns (P, local_slots, C, H) expert outputs, zeros on null tiles.
     """
     P, Ls, C, H = recv.shape
     x = jnp.transpose(recv, (1, 0, 2, 3)).reshape(Ls * P * C, H)
     rows_per_slot = P * C
-    tiles_per_slot = rows_per_slot // TILE_M
+    tiles_per_slot = rows_per_slot // tile_m
     tile_expert = jnp.repeat(
         jnp.arange(Ls, dtype=jnp.int32), tiles_per_slot)
-    # valid tiles: tile t of slot s covers rows of source p = (t*TILE_M)//C
-    tile_row = (jnp.arange(tiles_per_slot, dtype=jnp.int32) * TILE_M)[None, :]
+    # valid tiles: tile t of slot s covers rows of source p = (t*tile_m)//C
+    tile_row = (jnp.arange(tiles_per_slot, dtype=jnp.int32) * tile_m)[None, :]
     src = tile_row // C                                      # (1, tps)
     row_in_src = tile_row - src * C
     cnt = jnp.transpose(counts_rcv, (1, 0))                  # (Ls, P)
@@ -126,12 +132,14 @@ def grouped_expert_ffn(w1, w2, w3, recv, counts_rcv, *, activation: str,
     scale = jnp.ones((x.shape[0],), jnp.float32)
     y = fused_moe_ffn(
         x, w1, w2, w3, tile_expert, tile_valid, scale,
-        activation=activation, interpret=interpret, use_kernel=True)
+        activation=activation, tile_m=tile_m, tile_f=tile_f,
+        interpret=interpret, use_kernel=True)
     return jnp.transpose(y.reshape(Ls, P, C, H), (1, 0, 2, 3))
 
 
 def ragged_expert_ffn(w1, w2, w3, x, tile_expert, tile_valid, *,
                       activation: str, tile_m: int = TILE_M,
+                      tile_f: Optional[int] = None,
                       interpret: bool = True) -> jax.Array:
     """Variable-group grouped-GEMM over a ragged packed buffer.
 
@@ -165,6 +173,6 @@ def ragged_expert_ffn(w1, w2, w3, x, tile_expert, tile_valid, *,
     scale = jnp.ones((rows,), jnp.float32)
     ys = fused_moe_ffn(
         xs, w1, w2, w3, tile_expert[order], tile_valid[order], scale,
-        activation=activation, tile_m=tile_m, interpret=interpret,
-        use_kernel=True)
+        activation=activation, tile_m=tile_m, tile_f=tile_f,
+        interpret=interpret, use_kernel=True)
     return ys.reshape(nt, tile_m, H)[inv].reshape(rows, H)

@@ -9,12 +9,15 @@ step through 4 slots, stopping at token 7 or after 16 tokens:
       --requests 8 --slots 4 --prompt-len 32 --max-new 16 \
       --arrival-rate 0.5 --eos 7
 
-Expert-parallel decode (MoE archs): ``--ep P`` builds a (1, P) host
-mesh, keeps the expert weights EP-sharded (slot-major, the same layout
-the train cells use) and routes every decode token through
-``distributed_moe_decode`` — ``--dist-impl`` selects the exchange
-strategy (core/dispatch.EXCHANGE_IMPLS; unrunnable strategies downgrade
-with a logged reason):
+Expert-parallel decode (MoE archs): ``--ep P`` builds a pure-EP (P,)
+host mesh — a single named axis, so the one-sided rdma/fused kernels
+can execute under interpret mode (the 0.4.x remote-DMA discharge limit;
+decode has no data axis to lose) — keeps the expert weights EP-sharded
+(slot-major, the same layout the train cells use) and routes every
+decode token through ``distributed_moe_decode`` — ``--dist-impl``
+selects the exchange strategy (core/dispatch.EXCHANGE_IMPLS;
+``fused`` runs the decode-shaped persistent kernel; unrunnable
+strategies downgrade with a logged reason):
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
       --reduced --ep 4 --dist-impl pipelined --requests 4 --max-new 8
@@ -94,7 +97,11 @@ def build_serving_setup(args):
                 f"--ep {args.ep} needs {args.ep} devices, have "
                 f"{jax.device_count()} (run as a script so the host "
                 "placeholder devices are forced before jax init)")
-        mesh = compat.make_mesh((1, args.ep), ("data", "model"))
+        # pure-EP mesh: decode serving has no data axis to name, and a
+        # single named axis is what lets the one-sided rdma/fused decode
+        # kernels execute under interpret mode (resolve_dist_impl would
+        # downgrade them on a multi-axis interpret mesh).
+        mesh = compat.make_mesh((args.ep,), ("model",))
     pctx = make_pctx(cfg, mesh, train=False, dist_impl=args.dist_impl)
     params = init_params(cfg, jax.random.PRNGKey(args.seed),
                          dtype=jnp.float32, ep_world=args.ep)
@@ -144,8 +151,9 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default="",
                     help="write the serving metrics summary JSON here")
     ap.add_argument("--ep", type=int, default=1,
-                    help="EP world (model-axis size); >1 builds a (1, ep) "
-                         "host mesh and serves MoE layers expert-parallel")
+                    help="EP world (model-axis size); >1 builds a pure-EP "
+                         "(ep,) host mesh and serves MoE layers "
+                         "expert-parallel")
     ap.add_argument("--dist-impl", default="pipelined",
                     choices=list(DIST_IMPLS),
                     help="EP exchange strategy (unrunnable strategies "

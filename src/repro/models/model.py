@@ -229,7 +229,9 @@ def _apply_ffn(cfg: ArchConfig, p_layer, x, pctx: ParallelContext,
         if pctx.use_ep and pctx.mesh is not None \
                 and pctx.mesh.shape.get(pctx.model_axis, 1) > 1:
             # latency-oriented EP decode: decode-flavor ExchangePlan
-            # (8-row capacity tile) over slot-major sharded weights,
+            # (8-row capacity tile) over slot-major sharded weights;
+            # dist_impl="fused" runs the decode-shaped persistent kernel
+            # (one pallas_call for dispatch->compute->combine),
             # replicated-hot-expert fast path when E < P.
             y, aux = distributed_moe_decode(
                 mp, x2d, mcfg_d, pctx.mesh, ep_axis=pctx.model_axis,

@@ -101,8 +101,10 @@ from repro.serving.slots import SlotKVManager
 
 # the PR-3 downgrade chain, reused for watchdog-triggered mid-run
 # degradation: the persistent kernel degrades to the three-kernel rdma
-# path, which degrades to the portable pipelined path.
-from repro.core.dispatch import _FALLBACK_NEXT as DEGRADE_NEXT
+# path, which degrades to the portable pipelined path. degrade_next is
+# phase-aware — the engine's steady state is decode-shaped, so it asks
+# for decode-capable rungs only.
+from repro.core.dispatch import degrade_next
 
 
 @dataclasses.dataclass
@@ -478,9 +480,10 @@ class ServingEngine:
 
     def _degrade_dist_impl(self) -> None:
         """Watchdog-triggered mid-run degradation along the PR-3 chain
-        fused -> rdma -> pipelined (bitwise-safe: the strategies are
-        output-equivalent by the equivalence matrix)."""
-        nxt = DEGRADE_NEXT.get(self.pctx.dist_impl)
+        fused -> rdma -> pipelined, restricted to decode-capable rungs —
+        the engine's hot loop is decode-shaped (bitwise-safe: the
+        strategies are output-equivalent by the equivalence matrix)."""
+        nxt = degrade_next(self.pctx.dist_impl, phase="decode")
         if nxt is None:
             return                      # already at the portable floor
         self.pctx = dataclasses.replace(self.pctx, dist_impl=nxt)

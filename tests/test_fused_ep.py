@@ -319,9 +319,9 @@ def test_bench_smoke_emits_per_impl_json(tmp_path):
             "rdma_c1_dropless", "fused_c1_dropless"} <= dist_impls
     decode_impls = {row["impl"] for row in rec["decode"]}
     assert {"decode_gather", "decode_bulk", "decode_pipelined",
-            "decode_rdma", "decode_bulk_dropless",
-            "decode_pipelined_dropless",
-            "decode_rdma_dropless"} <= decode_impls
+            "decode_rdma", "decode_fused", "decode_bulk_dropless",
+            "decode_pipelined_dropless", "decode_rdma_dropless",
+            "decode_fused_dropless"} <= decode_impls
     assert all(row["us"] > 0 for row in
                rec["local"] + rec["distributed"] + rec["decode"])
     # every EP row carries the plan accounting; dropless rows must be

@@ -1,0 +1,347 @@
+"""The decode-shaped persistent kernel (dist_impl="fused" at
+phase="decode" — kernels/fused_ep/decode.py):
+
+  * world-4 interpret execution through distributed_moe_decode vs the
+    local ``moe_ffn_gather`` oracle — BITWISE, for capacity and dropless
+    (Zipf-skewed routing) plans, odd and tile-aligned batches;
+  * fused vs bulk decode equivalence (bitwise where the einsum path is
+    bitwise — dropless — and allclose in capacity mode, where the
+    capacity einsum itself sits ~1e-6 off the oracle);
+  * the E < P replicated-hot-expert fast path stays bitwise (fused
+    request resolves to the zero-exchange gather body);
+  * gradients through the decode kernel's custom VJP vs the bulk path;
+  * serving: a world-4 ServingEngine on the serve CLI's pure-EP (4,)
+    mesh streams bitwise-identically under fused vs bulk, and a
+    watchdog-tripped mid-stream degradation fused -> rdma (the
+    phase-aware ladder) keeps the streams bitwise;
+  * smoke gates: fused RESOLVES at phase="decode" on a pure-EP
+    interpret mesh (the PR removes the old force-downgrade), the
+    einsum-compute gate still stops it at rdma, fallback warnings are
+    keyed by phase, and degrade_next walks decode-capable rungs;
+  * single-device: grouped_expert_ffn at tile_m=8 / tile_f=F (the
+    decode tile shape) fwd bitwise + grads vs the einsum reference.
+
+Multi-device cases run in a subprocess so the main pytest process keeps
+1 device; the gate tests are pure logic and marked smoke.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import run_sub
+from test_fused_ep import _capture_dispatch_log, _cfg
+
+run_sub4 = functools.partial(run_sub, devices=4)
+
+# world-4 decode fixture: slot-major expert weights + the local params
+# the oracle reads. skew=True multiplies two gate columns so routing is
+# Zipf-ish (hot experts 0/1) and the dropless ragged groups are uneven.
+_DECODE_COMMON = r"""
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import compat
+    from repro.core.dispatch import distributed_moe_decode
+    from repro.core.exchange import SlotInfo
+    from repro.core.gate import GateConfig
+    from repro.core.moe import MoEConfig, moe_ffn_gather, run_gate
+
+    P = 4
+    mesh = compat.make_mesh((P,), ("model",))
+
+    def build(E, H, F, seed=0, skew=False):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        wg = jax.random.normal(ks[0], (H, E), jnp.float32) * 0.1
+        if skew:
+            wg = wg.at[:, :2].multiply(4.0)
+        w1 = jax.random.normal(ks[1], (E, H, F), jnp.float32) * 0.1
+        w2 = jax.random.normal(ks[2], (E, F, H), jnp.float32) * 0.1
+        w3 = jax.random.normal(ks[3], (E, H, F), jnp.float32) * 0.1
+        info = SlotInfo.make(E, P)
+        ps = {"gate": wg, "w1": info.expand_expert_weights(w1),
+              "w2": info.expand_expert_weights(w2),
+              "w3": info.expand_expert_weights(w3)}
+        pl = {"gate": wg, "w1": w1, "w2": w2, "w3": w3}
+        return ps, pl, ks[4]
+
+    def mk(E, H, F, k, dropless, impl):
+        return MoEConfig(d_model=H, d_ff=F,
+                         gate=GateConfig(num_experts=E, top_k=k,
+                                         capacity_factor=4.0),
+                         activation="silu", dist_impl=impl,
+                         expert_compute="kernel", dropless=dropless,
+                         interpret=True, use_pallas_gate=False)
+
+    def oracle(pl, x, cfg):
+        go = run_gate(pl, x, cfg, None)
+        return moe_ffn_gather(pl, x, cfg, go)
+"""
+
+
+def test_decode_fused_matches_gather_oracle_world4():
+    """The acceptance anchor: fused decode through distributed_moe_decode
+    == the local moe_ffn_gather oracle BITWISE at world 4, capacity AND
+    dropless (Zipf-skewed counts), for an odd sub-tile batch and a
+    tile-aligned one; fused == bulk bitwise in dropless mode and
+    allclose in capacity mode (where the einsum path itself is off the
+    oracle by ~1e-6, strictly further than the kernel)."""
+    out = run_sub4(_DECODE_COMMON + r"""
+    ps, pl, kx = build(8, 64, 128, skew=True)
+    for B in (3, 8):
+        x = jax.random.normal(kx, (B, 64), jnp.float32)
+        for dropless in (False, True):
+            cfg_f = mk(8, 64, 128, 2, dropless, "fused")
+            want = oracle(pl, x, cfg_f)
+            y_f, _ = distributed_moe_decode(ps, x, cfg_f, mesh)
+            np.testing.assert_array_equal(np.asarray(y_f),
+                                          np.asarray(want))
+            cfg_b = mk(8, 64, 128, 2, dropless, "bulk")
+            y_b, _ = distributed_moe_decode(ps, x, cfg_b, mesh)
+            if dropless:      # _ragged_einsum is bitwise vs the oracle
+                np.testing.assert_array_equal(np.asarray(y_f),
+                                              np.asarray(y_b))
+            else:             # capacity einsum sits ~1e-6 off it
+                np.testing.assert_allclose(np.asarray(y_f),
+                                           np.asarray(y_b), atol=1e-4)
+            print(f"B={B} dropless={dropless} DECODE FUSED OK")
+    """)
+    for b in (3, 8):
+        for d in (False, True):
+            assert f"B={b} dropless={d} DECODE FUSED OK" in out
+
+
+def test_decode_fused_replicated_experts_world4():
+    """E=2 < P=4: dist_impl='fused' resolves to the replicated-hot-expert
+    fast path (zero exchange) and stays bitwise vs the oracle."""
+    run_sub4(_DECODE_COMMON + r"""
+    ps, pl, kx = build(2, 64, 128, seed=1)
+    x = jax.random.normal(kx, (6, 64), jnp.float32)
+    cfg = mk(2, 64, 128, 1, False, "fused")
+    want = oracle(pl, x, cfg)
+    y, _ = distributed_moe_decode(ps, x, cfg, mesh)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+    print("E<P FAST PATH BITWISE OK")
+    """)
+
+
+def test_decode_fused_grads_match_bulk_world4():
+    """Gradients flow through the decode kernel's custom VJP (which
+    re-traces dispatch -> sub-128-row grouped FFN -> combine) and match
+    the bulk einsum path, capacity and dropless."""
+    run_sub4(_DECODE_COMMON + r"""
+    ps, pl, kx = build(8, 64, 128, skew=True)
+    x = jax.random.normal(kx, (8, 64), jnp.float32)
+    for dropless in (False, True):
+        grads = {}
+        for impl in ("fused", "bulk"):
+            cfg = mk(8, 64, 128, 2, dropless, impl)
+            grads[impl] = jax.grad(lambda p: jnp.sum(jnp.sin(
+                distributed_moe_decode(p, x, cfg, mesh)[0])))(ps)
+        for kname in ("w1", "w2", "w3", "gate"):
+            np.testing.assert_allclose(
+                np.asarray(grads["fused"][kname]),
+                np.asarray(grads["bulk"][kname]), rtol=5e-3, atol=1e-5)
+        print(f"dropless={dropless} DECODE GRADS OK")
+    """)
+
+
+# ------------------------------------------------- serving (pure-EP) ---
+# the serve CLI's world-4 decode shape: a pure-EP (4,) mesh (single
+# named axis, so the one-sided kernels execute under interpret).
+_SERVE_COMMON = r"""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro import compat
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.distributed import sharding as shd
+    from repro.serving import FaultInjector, ServingEngine
+
+    cfg = get_config("mixtral-8x7b").reduced()
+    mesh = compat.make_mesh((4,), ("model",))
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32,
+                         ep_world=4)
+    params = jax.device_put(params, shd.params_shardings(
+        cfg, mesh, params, serve=False))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    max_news, arrivals = [6, 5, 6, 4], [0, 0, 1, 2]
+
+    def serve(impl, injector=None, watchdog=None):
+        pctx = make_pctx(cfg, mesh, train=False, dist_impl=impl)
+        eng = ServingEngine(cfg, params, slots=2, seq_budget=16,
+                            pctx=pctx, mesh=mesh, injector=injector,
+                            watchdog=watchdog)
+        for i in range(4):
+            eng.submit(prompts[i], max_news[i], arrival=int(arrivals[i]))
+        eng.run()
+        return eng
+"""
+
+
+def test_serving_engine_fused_decode_stream_bitwise():
+    """The serving stream contract on the serve CLI's pure-EP mesh:
+    dist_impl='fused' decode streams are bitwise-identical to the bulk
+    strategy's (the engine equivalence matrix extended to the persistent
+    kernel)."""
+    run_sub4(_SERVE_COMMON + r"""
+    bulk = serve("bulk")
+    fused = serve("fused")
+    assert fused.outputs == bulk.outputs, (fused.outputs, bulk.outputs)
+    assert fused.pctx.dist_impl == "fused"   # never silently downgraded
+    print("SERVING FUSED STREAM BITWISE OK")
+    """)
+
+
+def test_serving_engine_watchdog_degrades_fused_to_rdma():
+    """An injected stall trips the watchdog mid-decode and the engine
+    walks the phase-aware ladder one rung: fused -> rdma (NOT the train
+    chain's endpoint) — and the recovered streams stay bitwise."""
+    run_sub4(_SERVE_COMMON + r"""
+    from repro.distributed.fault_tolerance import StepWatchdog
+    from repro.serving import step_delay
+    clean = serve("fused")
+    inj = FaultInjector([step_delay(4, 0.6)])
+    wd = StepWatchdog(factor=1.0, min_deadline=0.4)
+    faulted = serve("fused", injector=inj, watchdog=wd)
+    assert faulted.outputs == clean.outputs, \
+        (faulted.outputs, clean.outputs)
+    assert faulted.metrics.watchdog_fires >= 1
+    assert faulted.metrics.degradations >= 1
+    assert faulted.pctx.dist_impl == "rdma"
+    print("FUSED->RDMA DEGRADATION BITWISE OK")
+    """)
+
+
+# --------------------------------------------------------- gates (smoke)
+@pytest.mark.smoke
+def test_fused_resolves_at_decode_phase():
+    """The PR's un-gating: on a pure-EP interpret mesh, a fused request
+    at phase='decode' resolves to the decode-shaped kernel instead of
+    force-downgrading; the einsum-compute gate still stops it at rdma."""
+    from repro.compat import make_mesh
+    from repro.core.dispatch import (reset_fallback_warnings,
+                                     resolve_dist_impl)
+    reset_fallback_warnings()
+    mesh = make_mesh((1,), ("model",))
+    assert resolve_dist_impl(_cfg("fused"), mesh, phase="decode") == "fused"
+    cfg_e = _cfg("fused", expert_compute="einsum")
+    assert resolve_dist_impl(cfg_e, mesh, phase="decode") == "rdma"
+
+
+@pytest.mark.smoke
+def test_fallback_warnings_keyed_by_phase():
+    """The same (impl, reason) downgrade logs once PER PHASE — a train
+    warning must not swallow the decode path's, and vice versa."""
+    from repro.compat import make_mesh
+    from repro.core.dispatch import (reset_fallback_warnings,
+                                     resolve_dist_impl)
+    reset_fallback_warnings()
+    mesh = make_mesh((1, 1), ("data", "model"))   # multi-axis interpret
+    msgs = []
+    _capture_dispatch_log(msgs)
+    assert resolve_dist_impl(_cfg("fused"), mesh) == "pipelined"
+    n = len(msgs)
+    assert n >= 1 and "[phase=train]" in msgs[-1], msgs
+    assert resolve_dist_impl(_cfg("fused"), mesh,
+                             phase="decode") == "pipelined"
+    assert len(msgs) == n + 1 and "[phase=decode]" in msgs[-1], msgs
+    # repeats of either phase stay suppressed
+    resolve_dist_impl(_cfg("fused"), mesh)
+    resolve_dist_impl(_cfg("fused"), mesh, phase="decode")
+    assert len(msgs) == n + 1, msgs
+    reset_fallback_warnings()
+
+
+@pytest.mark.smoke
+def test_degrade_next_walks_decode_capable_rungs():
+    """The watchdog ladder consulted by the engine: fused -> rdma ->
+    pipelined for BOTH phases today (every strategy serves both plan
+    flavors), terminating at the portable endpoint."""
+    from repro.core.dispatch import PHASE_CAPABLE, degrade_next
+    for phase in ("train", "decode"):
+        assert degrade_next("fused", phase=phase) == "rdma"
+        assert degrade_next("rdma", phase=phase) == "pipelined"
+        assert degrade_next("pipelined", phase=phase) is None
+        assert degrade_next("bulk", phase=phase) is None
+    assert PHASE_CAPABLE["decode"] == PHASE_CAPABLE["train"]
+
+
+# -------------------------------------------- sub-128-row tiles (1 dev)
+@pytest.mark.smoke
+def test_grouped_expert_ffn_decode_tiles_single_device():
+    """grouped_expert_ffn at the decode tile shape (tile_m=8, tile_f=F:
+    one full-F contraction per tile) — forward BITWISE vs the per-expert
+    einsum reference, gradients allclose."""
+    from repro.kernels.fused_moe.ops import grouped_expert_ffn
+
+    P, Ls, C, H, F = 2, 2, 16, 32, 64   # C a multiple of tile_m=8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    w1 = jax.random.normal(ks[0], (Ls, H, F), jnp.float32) * 0.1
+    w2 = jax.random.normal(ks[1], (Ls, F, H), jnp.float32) * 0.1
+    w3 = jax.random.normal(ks[2], (Ls, H, F), jnp.float32) * 0.1
+    recv = jax.random.normal(ks[3], (P, Ls, C, H), jnp.float32)
+    counts = jax.random.randint(ks[4], (P, Ls), 0, C + 1)
+
+    def ref(w1, w2, w3, recv, counts):
+        # validity is TILE-granular: a partially-filled tile computes
+        # all 8 rows (combine ignores the tail); only fully-empty tiles
+        # are zeroed
+        tile_start = (jnp.arange(C) // 8) * 8
+        mask = (tile_start[None, None, :, None]
+                < counts[:, :, None, None]).astype(recv.dtype)
+        h = jax.nn.silu(jnp.einsum("psch,shf->pscf", recv, w1))
+        h = h * jnp.einsum("psch,shf->pscf", recv, w3)
+        return jnp.einsum("pscf,sfh->psch", h, w2) * mask
+
+    fn = functools.partial(grouped_expert_ffn, activation="silu",
+                           tile_m=8, tile_f=F, interpret=True)
+    y = fn(w1, w2, w3, recv, counts)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(ref(w1, w2, w3, recv,
+                                                 counts)))
+    g = jax.grad(lambda a, b, c, r: jnp.sum(jnp.sin(
+        fn(a, b, c, r, counts))), argnums=(0, 1, 2, 3))(w1, w2, w3, recv)
+    gr = jax.grad(lambda a, b, c, r: jnp.sum(jnp.sin(
+        ref(a, b, c, r, counts))), argnums=(0, 1, 2, 3))(w1, w2, w3, recv)
+    for got, want in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.smoke
+def test_bench_decode_smoke_pipeline(tmp_path):
+    """`make bench-decode-smoke`'s compare half, offline: a decode-only
+    record (no local/distributed sections) passes check_bench under
+    --sections decode, and the committed baseline satisfies the
+    decode_fused < decode_rdma headline gate the same invocation
+    enforces."""
+    import json
+    import os
+    import sys
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, os.path.join(root, "tools"))
+    from check_bench import _headline_decode_gate, check_latency
+
+    committed = json.loads(
+        open(os.path.join(root, "BENCH_latency.json")).read())
+    assert _headline_decode_gate(committed) == []
+    t1 = {r["impl"]: r["us"] for r in committed["decode"]
+          if r["tokens"] == 1}
+    assert t1["decode_fused"] < t1["decode_rdma"]
+    assert t1["decode_fused_dropless"] < t1["decode_rdma_dropless"]
+    # decode-only record: identical decode rows, no other sections
+    fresh = {"meta": committed["meta"], "decode": committed["decode"]}
+    assert check_latency(committed, fresh, sections=("decode",)) == []
+    # ...and a slowed-down committed fused row trips the headline gate
+    bad = json.loads(json.dumps(committed))
+    for r in bad["decode"]:
+        if r["impl"] == "decode_fused":
+            r["us"] = 1e9
+    errs = _headline_decode_gate(bad)
+    assert any("decode_fused" in e and "not faster" in e for e in errs)

@@ -387,10 +387,11 @@ def test_engine_bitwise_matches_reference_world4_ep():
     """World-4 EP bitwise matrix: the PAGED + chunked-admission engine
     under forced mid-stream refills with HETEROGENEOUS prompt lengths
     == the fixed-batch reference, for every decode-runnable strategy on
-    a dropless spec (mixtral's default). The pure-EP (4,) mesh lets the
-    one-sided rdma kernels execute under interpret; (1, 4) exercises
-    the serve CLI's mesh shape. The page pool is deliberately smaller
-    than the monolithic slots x seq_budget reservation."""
+    a dropless spec (mixtral's default). The pure-EP (4,) mesh — the
+    serve CLI's shape — lets the one-sided rdma/fused kernels execute
+    under interpret; (1, 4) exercises the multi-axis train-cell shape
+    (where those kernels downgrade). The page pool is deliberately
+    smaller than the monolithic slots x seq_budget reservation."""
     run_sub("""
     import numpy as np, jax, jax.numpy as jnp
     from repro.configs import get_config
