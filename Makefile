@@ -1,7 +1,7 @@
 # FlashMoE repro — common entry points. Pure-Python JAX project: no
 # build step, PYTHONPATH=src is the only setup (see README.md).
 
-.PHONY: test smoke check-docs check-bench bench bench-smoke bench-decode-smoke bench-serving serve-smoke chaos-smoke dryrun
+.PHONY: test smoke check-docs check-bench bench bench-smoke bench-decode-smoke bench-serving serve-smoke chaos-smoke trace-smoke dryrun
 
 # tier-1 verify: the whole suite (multi-device cases spawn subprocesses)
 test:
@@ -56,6 +56,19 @@ chaos-smoke:
 	PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
 		--reduced --ep 4 --dist-impl pipelined --requests 4 --slots 2 \
 		--prompt-len 8 --max-new 6 --faults rank_down@4:1,transient@2
+
+# tracing sanity run: serve a tiny world-4 EP workload with --trace-out
+# and validate the Perfetto trace — schema, span nesting, the engine
+# decode_step span, and EP phase spans whose per-step overlap
+# efficiency lands in (0, 1] (tools/check_trace.py)
+trace-smoke:
+	PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+		--reduced --ep 4 --dist-impl fused --requests 4 --slots 2 \
+		--prompt-len 8 --max-new 6 --arrival-rate 0.5 --eos 7 \
+		--trace-out /tmp/trace_smoke.json --metrics-snapshot-every 2 \
+		--heartbeat-file /tmp/trace_smoke_hb.json
+	PYTHONPATH=src python tools/check_trace.py /tmp/trace_smoke.json \
+		--require-ep --require decode_step --require admission
 
 # lower+compile one production cell on the host-placeholder mesh
 dryrun:

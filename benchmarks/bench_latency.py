@@ -17,7 +17,11 @@ it). Every EP row rides with exchange accounting from the plan it ran:
 ``dropped_tokens`` (must read 0 on ``*_dropless`` rows),
 ``payload_bytes`` (count-sized routed load) and ``buffer_bytes`` (what
 the static buffers actually ship — worst-case capacity padding vs the
-dropless tile-aligned footprint).
+dropless tile-aligned footprint) — plus the per-phase breakdown from
+the ``repro.obs`` trace-time hooks: ``overlap_efficiency``,
+``phase_us`` (gate/plan/counts_exchange/dispatch/expert_compute/
+combine, roofline-model µs) and ``step_virtual_us`` (the modeled step
+makespan). ``tools/check_bench.py`` gates their presence and sanity.
 
 ``--smoke`` runs a tiny-shape variant of every row (CI sanity: the JSON
 must stay valid and per-impl complete; wall times are meaningless).
@@ -41,6 +45,35 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_fn
 from repro.core.gate import GateConfig
 from repro.core.moe import MoEConfig, init_moe_params, moe_layer
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import overlap_efficiency, phase_totals
+
+
+def ep_trace_stats(tr: "obs_trace.Tracer") -> dict:
+    """Per-phase EP accounting for one bench row, from the virtual
+    timeline the data-plane hooks recorded at trace time (a fresh
+    tracer per (impl, shape): the jit retrace during warmup replays
+    exactly one EP step into it).
+
+      * ``overlap_efficiency`` — 1 - exposed-comm/makespan over the
+        dispatch/compute/combine spans (obs.metrics);
+      * ``phase_us`` — roofline-model µs per phase (gate, plan,
+        counts_exchange, dispatch, expert_compute, combine);
+      * ``step_virtual_us`` — the step makespan (<= sum(phase_us):
+        overlapped phases shrink the makespan, never the totals).
+    """
+    steps = tr.ep_steps()
+    if not steps:
+        return {}
+    spans = steps[0]
+    lo = min(s.ts for s in spans)
+    hi = max(s.ts + s.dur for s in spans)
+    return {
+        "overlap_efficiency": round(overlap_efficiency(spans), 4),
+        "phase_us": {k: round(v, 3)
+                     for k, v in sorted(phase_totals(spans).items())},
+        "step_virtual_us": round(hi - lo, 3),
+    }
 
 
 def plan_stats(params, cfg, info, x, *, phase):
@@ -164,9 +197,11 @@ def run_distributed(tokens_list=(512, 1024), E=8, H=256, F=256,
             shape = ((1, T, H) if impl in ("rdma", "fused")
                      else (P_, T // P_, H))
             x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
-            with with_mesh(m):
+            tr = obs_trace.Tracer()
+            with with_mesh(m), obs_trace.use(tr):
                 us = time_fn(fn, params, x, warmup=warmup, iters=iters)
             stats = plan_stats(params, cfg, info, x, phase="train")
+            stats.update(ep_trace_stats(tr))
             name = f"fig10/ep_{name_impl}_T{T}"
             emit(name, us, f"tokens={T};experts={E};world={P_};"
                  f"dropped={stats['dropped_tokens']}")
@@ -231,9 +266,11 @@ def run_decode(batch_list=(1, 8), E=8, H=256, F=256, warmup=3, iters=10):
         for B in batch_list:
             x = jax.random.normal(jax.random.PRNGKey(1), (B, H),
                                   jnp.float32)
-            with with_mesh(mesh_ep):
+            tr = obs_trace.Tracer()
+            with with_mesh(mesh_ep), obs_trace.use(tr):
                 us = time_fn(fn, pd, x, warmup=warmup, iters=iters)
             stats = plan_stats(pd, cfg, info, x, phase="decode")
+            stats.update(ep_trace_stats(tr))
             emit(f"fig10/{name_impl}_T{B}", us,
                  f"tokens={B};experts={E};world={P_};"
                  f"dropped={stats['dropped_tokens']}")

@@ -27,6 +27,12 @@ plus a mid-run rank loss when ``--ep`` > 1) — its ``recovery_steps``
 bitwise-identical to the clean reference (tools/check_bench.py gates
 this).
 
+Every continuous-family row also rides a ``repro.obs`` Tracer:
+``phase_s`` breaks the wall time down by engine phase (admission /
+prefill_chunk / decode_step / recovery), and under ``--ep`` > 1 an
+``overlap_efficiency`` field carries the same EP-step metric as
+bench_latency's rows (tools/check_bench.py gates presence + sanity).
+
 All rows record decode steps, slot occupancy and an ``identical`` flag:
 per-request greedy token streams must be bitwise-identical to a one-shot
 fixed-batch reference holding ALL requests (row-independence of the
@@ -56,9 +62,27 @@ import jax
 
 from repro.launch.serve import build_serving_setup, poisson_arrivals
 from repro.models.serve import cache_len_for, supports_paging
+from repro.obs import Tracer, overlap_efficiency, phase_totals
 from repro.serving import (BatchedServer, grouped_reference_streams,
                            pages_for_len, run_continuous_workload,
                            run_static_workload)
+
+
+def trace_stats(tracer):
+    """Observability fields for a continuous-family row, from the
+    engine tracer that rode the run: ``phase_s`` sums the wall-clock
+    engine spans per phase (admission / prefill_chunk / decode_step /
+    recovery and its children), and when the run traced EP layers
+    (--ep > 1) ``overlap_efficiency`` comes from the LAST EP step group
+    (the decode steady state) — the same metric bench_latency's EP rows
+    carry, so the two benches agree on its meaning."""
+    wall = [sp for sp in tracer.spans if sp.clock == "wall"]
+    out = {"phase_s": {k: round(v / 1e6, 4)
+                       for k, v in sorted(phase_totals(wall).items())}}
+    steps = tracer.ep_steps()
+    if steps:
+        out["overlap_efficiency"] = round(overlap_efficiency(steps[-1]), 4)
+    return out
 
 
 def make_workload(cfg, *, requests, prompt_len, max_new_lo, max_new_hi,
@@ -99,9 +123,11 @@ def run_benchmark(args):
                 cfg, params, pctx, mesh, prompts, max_new,
                 slots=args.slots, seq_budget=seq_budget, eos=args.eos)
         else:
+            tracer = Tracer()
             outs, steps, dt, summary = run_continuous_workload(
                 cfg, params, pctx, mesh, prompts, max_new, arrivals,
-                slots=args.slots, seq_budget=seq_budget, eos=args.eos)
+                slots=args.slots, seq_budget=seq_budget, eos=args.eos,
+                tracer=tracer)
         tokens = sum(len(o) for o in outs)
         row = {
             "mode": mode, "requests": args.requests, "slots": args.slots,
@@ -116,6 +142,7 @@ def run_benchmark(args):
         if summary is not None:
             row["slot_occupancy"] = summary["slot_occupancy"]
             row["mean_wait_steps"] = summary["wait_steps"]["mean"]
+            row.update(trace_stats(tracer))
         rows.append(row)
         print(f"{mode:11s} steps={steps:4d} tokens={tokens:4d} "
               f"identical={row['identical']}", file=sys.stderr)
@@ -144,10 +171,11 @@ def run_faulted_row(args, cfg, mesh, pctx, params, prompts, max_new,
     if args.ep > 1:
         schedule.append(rank_down(4, 1))   # mid-decode EP rank loss
     inj = FaultInjector(schedule, seed=args.seed)
+    tracer = Tracer()
     outs, steps, dt, summary = run_continuous_workload(
         cfg, params, pctx, mesh, prompts, max_new, arrivals,
         slots=args.slots, seq_budget=seq_budget, eos=args.eos,
-        injector=inj)
+        injector=inj, tracer=tracer)
     tokens = sum(len(o) for o in outs)
     lost = sum(max(0, len(e) - len(o)) for e, o in zip(expected, outs))
     row = {
@@ -164,6 +192,7 @@ def run_faulted_row(args, cfg, mesh, pctx, params, prompts, max_new,
         "transient_errors": summary["transient_errors"],
         "replayed_tokens": summary["replayed_tokens"],
         "lost_tokens": int(lost),
+        **trace_stats(tracer),
     }
     if args.ep > 1:
         row["ep"] = args.ep
@@ -201,11 +230,12 @@ def run_paged_row(args, cfg, mesh, pctx, params):
     expected = grouped_reference_streams(
         cfg, params, pctx, mesh, prompts, max_new,
         seq_budget=seq_budget, eos=args.eos)
+    tracer = Tracer()
     outs, steps, dt, summary = run_continuous_workload(
         cfg, params, pctx, mesh, prompts, max_new, arrivals,
         slots=args.slots, seq_budget=seq_budget, eos=args.eos,
         page_size=ps, kv_pages=kv_pages,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk, tracer=tracer)
     tokens = sum(len(o) for o in outs)
     kv = summary["kv"]
     row = {
@@ -223,6 +253,7 @@ def run_paged_row(args, cfg, mesh, pctx, params):
         "kv_bytes": kv["kv_bytes"],
         "kv_bytes_monolithic": kv["kv_bytes_monolithic"],
         "memory_per_request": round(kv["kv_bytes"] / args.requests, 1),
+        **trace_stats(tracer),
     }
     if args.ep > 1:
         row["ep"] = args.ep

@@ -82,6 +82,7 @@ from repro.kernels.fused_ep.decode import fused_ep_moe_decode
 from repro.kernels.fused_ep.kernel import fused_ep_moe
 from repro.kernels.fused_moe.ops import grouped_expert_ffn, ragged_expert_ffn
 from repro.kernels.rdma.kernel import rdma_combine, rdma_dispatch
+from repro.obs import trace as obs_trace
 
 _logger = logging.getLogger(__name__)
 # warn-once memory, keyed (requested_impl, phase, reason): a warning for
@@ -302,6 +303,8 @@ def _exchange_bulk(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     w1, w2, w3 = weights
     info, C = plan.info, plan.capacity
     H = buf.shape[-1]
+    obs_trace.record_ep_exchange("bulk", plan, H=H, F=w1.shape[-1],
+                                 gated=w3 is not None)
     recv = jax.lax.all_to_all(buf, plan.axis, 0, 0, tiled=True)
     if plan.dropless:
         # buf is already per-peer slabs (P, slab_rows, H); the landing's
@@ -331,6 +334,8 @@ def _exchange_pipelined(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     w1, w2, w3 = weights
     info, axis, n = plan.info, plan.axis, plan.chunks
     counts_rcv = plan.counts_rcv
+    obs_trace.record_ep_exchange("pipelined", plan, H=buf.shape[-1],
+                                 F=w1.shape[-1], gated=w3 is not None)
     if plan.dropless:
         return _exchange_pipelined_ragged(plan, buf, weights, cfg)
     S, C, H = buf.shape
@@ -430,6 +435,8 @@ def _exchange_rdma(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     info, C = plan.info, plan.capacity
     H = buf.shape[-1]
     P = info.world
+    obs_trace.record_ep_exchange("rdma", plan, H=H, F=w1.shape[-1],
+                                 gated=w3 is not None)
     slabs = buf.reshape(plan.staged_slab_shape(H))
     landing = rdma_dispatch(slabs, axis=plan.axis, world=P,
                             interpret=cfg.interpret,
@@ -465,6 +472,8 @@ def _exchange_fused(plan: ExchangePlan, buf, weights, cfg: MoEConfig):
     w1, w2, w3 = weights
     info, C = plan.info, plan.capacity
     H = buf.shape[-1]
+    obs_trace.record_ep_exchange("fused", plan, H=H, F=w1.shape[-1],
+                                 gated=w3 is not None)
     slabs = buf.reshape(plan.staged_slab_shape(H))
     if plan.phase == "decode":
         kernel = functools.partial(fused_ep_moe_decode, tile_m=plan.tile_m)
@@ -535,6 +544,9 @@ def _ep_moe_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
     # of the scatter, so XLA's async collective overlaps it with staging
     # instead of serializing it ahead of the payload exchange.
     plan = exchange_counts(plan)
+    obs_trace.record_ep_meta(plan, tokens=T_loc, H=H,
+                             num_experts=cfg.gate.num_experts,
+                             top_k=cfg.gate.top_k)
     buf = scatter_to_buffer(plan, x_loc, cfg.gate.top_k)
 
     y_back = EXCHANGE_IMPLS[impl](plan, buf, (w1, w2, w3), cfg)
@@ -650,6 +662,9 @@ def _ep_decode_body(w_gate, w1, w2, w3, shared, x, cfg: MoEConfig,
         # scatter staging (dataflow-independent) — at 1-token batches
         # the metadata round-trip is a visible slice of the step.
         plan = exchange_counts(plan)
+        obs_trace.record_ep_meta(plan, tokens=x_loc.shape[0], H=H,
+                                 num_experts=cfg.gate.num_experts,
+                                 top_k=cfg.gate.top_k)
         buf = scatter_to_buffer(plan, x_loc, cfg.gate.top_k)
         y_back = EXCHANGE_IMPLS[impl](plan, buf, (w1, w2, w3), cfg)
         y_loc = gather_combine(plan, y_back.reshape(plan.num_rows, H),

@@ -176,6 +176,13 @@ def main(argv=None):
     ap.add_argument("--request-ttl", type=int, default=0,
                     help="cancel requests unfinished this many virtual "
                          "steps after arrival (0: no deadline)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "here (engine wall spans + EP virtual phase "
+                         "timelines; continuous mode only)")
+    ap.add_argument("--metrics-snapshot-every", type=int, default=0,
+                    help="embed a metrics-registry snapshot in the "
+                         "heartbeat every N engine steps (0: off)")
     args = ap.parse_args(argv)
 
     cfg, mesh, pctx, params = build_serving_setup(args)
@@ -198,9 +205,14 @@ def main(argv=None):
         from repro.distributed.fault_tolerance import StepWatchdog
         wd = (StepWatchdog(min_deadline=args.watchdog)
               if args.watchdog > 0 else None)
+        tracer = None
+        if args.trace_out:
+            from repro.obs import Tracer
+            tracer = Tracer(rank=0)
         extra = dict(watchdog=wd,
                      heartbeat_file=args.heartbeat_file or None,
-                     request_ttl=args.request_ttl)
+                     request_ttl=args.request_ttl, tracer=tracer,
+                     metrics_snapshot_every=args.metrics_snapshot_every)
         if args.faults:
             # chaos mode: the clean run is the oracle for the faulted one
             ref, _, _, _ = run_continuous_workload(
@@ -256,6 +268,14 @@ def main(argv=None):
     if args.metrics_out:
         write_json(args.metrics_out, summary)
         print(f"wrote {args.metrics_out}")
+    if args.trace_out:
+        if args.static:
+            print("--trace-out ignored: the static baseline has no "
+                  "engine step loop to trace")
+        else:
+            tracer.write(args.trace_out)
+            print(f"wrote {args.trace_out} ({len(tracer.spans)} spans, "
+                  f"{len(tracer.instants)} instants)")
     return outs
 
 

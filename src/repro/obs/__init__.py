@@ -1,0 +1,30 @@
+"""Unified observability: span tracing + typed metrics.
+
+``obs.trace`` records nestable spans on two clock domains — wall-clock
+for host-side serving phases, virtual-clock (roofline-model) for the
+per-phase EP step timeline that jitted SPMD code cannot expose — and
+exports Chrome-trace / Perfetto JSON. ``obs.metrics`` is the typed
+counter/gauge/histogram registry plus the derived MoE metrics
+(overlap efficiency, payload efficiency) computed from those spans.
+"""
+from repro.obs.metrics import (                              # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    nearest_rank_pct,
+    overlap_efficiency,
+    payload_efficiency,
+    phase_totals,
+)
+from repro.obs.trace import (                                # noqa: F401
+    Span,
+    Tracer,
+    current,
+    ep_exchange_timeline,
+    ep_meta_timeline,
+    instant,
+    merge_chrome,
+    span,
+    use,
+)

@@ -1,0 +1,248 @@
+"""Typed metrics registry + derived MoE observability metrics.
+
+``MetricsRegistry`` is the process-local substrate: named counters,
+gauges and histograms with a JSON-serializable ``snapshot()``. The
+serving layer's ``ServingMetrics`` is backed by it, and the serving
+heartbeat / bench rows embed snapshots directly.
+
+The derived metrics turn span lists from ``obs.trace`` into the
+paper's figure-style numbers:
+
+  * ``overlap_efficiency`` — 1 - exposed_comm / makespan, where
+    exposed comm is the measure of (dispatch ∪ combine) intervals not
+    covered by expert-compute intervals. A fully serialized exchange
+    (bulk, rdma) scores compute/makespan; a software-pipelined one
+    (pipelined, fused) approaches 1. Always in (0, 1] for any step
+    that did some compute.
+  * ``payload_efficiency`` — payload_bytes / buffer_bytes actually
+    shipped vs the static worst-case slab (the dropless wire-shape gap
+    tracked per EP row in BENCH_latency.json).
+
+Spans may be ``obs.trace.Span`` objects or plain dicts with
+``ts``/``dur``/``track``/``name`` keys — both benches and the trace
+validator feed dicts straight from exported JSON.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Iterable, List, Sequence, Tuple
+
+
+def nearest_rank_pct(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of an already-sorted list: the smallest
+    value with at least q of the mass at or below it (ceil(q*n) - 1),
+    so p95 of 20 samples is the 19th value, not the max.
+
+    Edge cases are pinned down: an empty list is 0.0 for every q, a
+    single sample is that sample for every q, and the rank index is
+    computed as ``ceil(q*n - eps)`` so binary float round-up (e.g.
+    0.2 * 5 == 1.0000000000000002) cannot shift the rank by one.
+    """
+    if not sorted_vals:
+        return 0.0
+    n = len(sorted_vals)
+    if n == 1:
+        return float(sorted_vals[0])
+    i = min(n - 1, max(0, math.ceil(q * n - 1e-9) - 1))
+    return float(sorted_vals[i])
+
+
+class Counter:
+    """Monotonic event count."""
+
+    kind = "counter"
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name}: negative increment {n}")
+        self.value += n
+
+
+class Gauge:
+    """Last-observed value."""
+
+    kind = "gauge"
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Full-sample histogram (bounded workloads — no bucketing)."""
+
+    kind = "histogram"
+    __slots__ = ("name", "values")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.values: List[float] = []
+
+    def observe(self, v: float) -> None:
+        self.values.append(float(v))
+
+    def summary(self) -> Dict[str, float]:
+        vs = sorted(self.values)
+        if not vs:
+            return {"count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0,
+                    "max": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
+        return {
+            "count": len(vs),
+            "sum": float(sum(vs)),
+            "mean": float(sum(vs) / len(vs)),
+            "min": vs[0],
+            "max": vs[-1],
+            "p50": nearest_rank_pct(vs, 0.50),
+            "p95": nearest_rank_pct(vs, 0.95),
+            "p99": nearest_rank_pct(vs, 0.99),
+        }
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named metrics.
+
+    Names are free-form but the convention is ``layer/name``
+    (``serving/timeouts``, ``ep/payload_bytes``). Re-registering a name
+    with a different kind is a TypeError — one name, one meaning.
+    """
+
+    def __init__(self):
+        self._metrics: Dict[str, Any] = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(name)
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as {m.kind}, "
+                f"not {cls.kind}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Plain-JSON dict: counters/gauges -> value, histograms ->
+        summary dict. Keys sorted for stable diffs."""
+        out: Dict[str, Any] = {}
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            out[name] = m.summary() if m.kind == "histogram" else m.value
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Derived metrics over span lists
+# ---------------------------------------------------------------------------
+
+def _field(s, k, default=None):
+    if isinstance(s, dict):
+        return s.get(k, default)
+    return getattr(s, k, default)
+
+
+def _intervals(spans: Iterable[Any],
+               tracks: Sequence[str]) -> List[Tuple[float, float]]:
+    out = []
+    for s in spans:
+        if _field(s, "track") in tracks:
+            ts = float(_field(s, "ts", 0.0))
+            dur = float(_field(s, "dur", 0.0))
+            if dur > 0:
+                out.append((ts, ts + dur))
+    return out
+
+
+def _union(iv: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    if not iv:
+        return []
+    iv = sorted(iv)
+    merged = [iv[0]]
+    for s, e in iv[1:]:
+        ls, le = merged[-1]
+        if s <= le:
+            merged[-1] = (ls, max(le, e))
+        else:
+            merged.append((s, e))
+    return merged
+
+
+def _measure(iv: List[Tuple[float, float]]) -> float:
+    return sum(e - s for s, e in iv)
+
+
+def _intersect(a: List[Tuple[float, float]],
+               b: List[Tuple[float, float]]) -> float:
+    total, i, j = 0.0, 0, 0
+    while i < len(a) and j < len(b):
+        lo = max(a[i][0], b[j][0])
+        hi = min(a[i][1], b[j][1])
+        if hi > lo:
+            total += hi - lo
+        if a[i][1] < b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
+
+
+def overlap_efficiency(spans: Iterable[Any],
+                       comm_tracks: Sequence[str] = ("dispatch", "combine"),
+                       compute_tracks: Sequence[str] = ("compute",)) -> float:
+    """1 - exposed_comm / makespan over one EP step's spans.
+
+    Exposed comm = measure of comm intervals NOT covered by compute.
+    With no comm spans at all (local / E<P fast path) everything is
+    trivially hidden -> 1.0; with no compute spans nothing hides the
+    comm -> 0.0. Clamped to [0, 1].
+    """
+    spans = list(spans)
+    comm = _union(_intervals(spans, comm_tracks))
+    compute = _union(_intervals(spans, compute_tracks))
+    if not comm:
+        return 1.0
+    if not compute:
+        return 0.0
+    both = _union(comm + compute)
+    makespan = both[-1][1] - both[0][0]
+    if makespan <= 0:
+        return 1.0
+    exposed = _measure(comm) - _intersect(comm, compute)
+    return max(0.0, min(1.0, 1.0 - exposed / makespan))
+
+
+def payload_efficiency(payload_bytes: float, buffer_bytes: float) -> float:
+    """Fraction of the static exchange slab carrying real tokens."""
+    if buffer_bytes <= 0:
+        return 0.0
+    return max(0.0, min(1.0, payload_bytes / buffer_bytes))
+
+
+def phase_totals(spans: Iterable[Any]) -> Dict[str, float]:
+    """Sum span durations per phase label (``phase`` field, falling
+    back to the span name). Units are whatever the spans carry (µs for
+    virtual EP spans, µs wall for engine spans)."""
+    out: Dict[str, float] = {}
+    for s in spans:
+        key = _field(s, "phase") or _field(s, "name")
+        out[key] = out.get(key, 0.0) + float(_field(s, "dur", 0.0))
+    return out

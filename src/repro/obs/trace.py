@@ -1,0 +1,396 @@
+"""Low-overhead span tracer with Chrome-trace / Perfetto JSON export.
+
+Two clock domains, deliberately:
+
+  * **wall** — host-side serving phases (admission, prefill chunks,
+    decode steps, recovery quiesce/rebuild/replay, fault instants),
+    measured in µs of ``time.perf_counter`` since the tracer's epoch.
+  * **virtual** — the per-phase EP step timeline (gate, plan,
+    counts-exchange, dispatch, expert-compute, combine). Jitted SPMD
+    code runs as ONE XLA launch; its interior phases cannot be
+    wall-clocked from Python. Instead the hooks in ``core/dispatch``
+    fire at JAX *trace* time and lay the phases out deterministically
+    from the roofline model (``launch/roofline`` constants) and the
+    ExchangePlan's static geometry — the same cost model
+    ``benchmarks/bench_overlap`` reports, so its numbers and the bench
+    rows agree by construction.
+
+Both domains export into one Chrome-trace file: wall spans on
+``pid=rank``, virtual spans on ``pid=1000+rank`` (separate clock
+domains must never share a Perfetto track). ``merge_chrome`` joins
+per-rank exports of a world-N run into a single trace.
+
+Recording hooks (``record_ep_meta`` / ``record_ep_exchange``) no-op
+unless a tracer is installed via ``use(...)`` — the data plane pays
+nothing by default.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+CLOCK_WALL = "wall"
+CLOCK_VIRTUAL = "virtual"
+
+# EP phase labels, in step order (bench phase_us keys follow this).
+EP_PHASES = ("gate", "plan", "counts_exchange", "dispatch",
+             "expert_compute", "combine")
+
+# stable Perfetto thread ids; unknown tracks get ids from 100 up.
+_TRACK_TIDS = {"engine": 1, "admission": 2, "host": 3,
+               "meta": 10, "dispatch": 11, "compute": 12, "combine": 13}
+_VIRTUAL_PID_BASE = 1000
+
+_MIN_US = 0.05                  # visibility floor for virtual spans
+_LATENCY_US = 1.0               # per-collective latency floor
+
+
+@dataclasses.dataclass
+class Span:
+    name: str
+    ts: float                   # µs (wall: since epoch; virtual: model)
+    dur: float
+    track: str
+    clock: str
+    args: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Instant:
+    name: str
+    ts: float
+    track: str
+    clock: str
+    args: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class Tracer:
+    """Per-rank span recorder. Wall spans come from the ``span(...)``
+    context manager (nesting by construction — single-threaded host
+    loop); virtual spans are appended by the EP cost-model hooks at a
+    monotonically advancing virtual cursor."""
+
+    def __init__(self, rank: int = 0, label: Optional[str] = None):
+        self.rank = int(rank)
+        self.label = label or f"rank{self.rank}"
+        self.spans: List[Span] = []
+        self.instants: List[Instant] = []
+        self._epoch = time.perf_counter()
+        self._vcursor = 0.0
+        self._ep_step = -1
+
+    # ------------------------------------------------------ wall clock
+    def now_us(self) -> float:
+        return (time.perf_counter() - self._epoch) * 1e6
+
+    @contextlib.contextmanager
+    def span(self, name: str, track: str = "engine", **args):
+        t0 = self.now_us()
+        try:
+            yield self
+        finally:
+            self.add_span(name, t0, self.now_us() - t0, track=track,
+                          clock=CLOCK_WALL, **args)
+
+    def instant(self, name: str, track: str = "engine",
+                ts: Optional[float] = None, **args) -> Instant:
+        ev = Instant(name, self.now_us() if ts is None else float(ts),
+                     track, CLOCK_WALL, dict(args))
+        self.instants.append(ev)
+        return ev
+
+    # --------------------------------------------------- virtual clock
+    @property
+    def vcursor(self) -> float:
+        return self._vcursor
+
+    def begin_ep_step(self) -> int:
+        """Open a new EP step group; subsequent virtual spans tagged
+        with its index (one group per traced EP layer call)."""
+        self._ep_step += 1
+        return self._ep_step
+
+    @property
+    def ep_step(self) -> int:
+        return self._ep_step
+
+    def add_span(self, name: str, ts: float, dur: float, *,
+                 track: str = "engine", clock: str = CLOCK_VIRTUAL,
+                 **args) -> Span:
+        s = Span(name, float(ts), float(dur), track, clock, dict(args))
+        self.spans.append(s)
+        if clock == CLOCK_VIRTUAL:
+            self._vcursor = max(self._vcursor, s.ts + s.dur)
+        return s
+
+    def extend_virtual(self, spans: Iterable[Span]) -> None:
+        for s in spans:
+            self.add_span(s.name, s.ts, s.dur, track=s.track,
+                          clock=CLOCK_VIRTUAL, **s.args)
+
+    def ep_spans(self) -> List[Span]:
+        return [s for s in self.spans if s.clock == CLOCK_VIRTUAL]
+
+    def ep_steps(self) -> List[List[Span]]:
+        """Virtual spans grouped by EP step index, in order."""
+        groups: Dict[int, List[Span]] = {}
+        for s in self.ep_spans():
+            groups.setdefault(int(s.args.get("ep_step", 0)), []).append(s)
+        return [groups[k] for k in sorted(groups)]
+
+    # --------------------------------------------------------- export
+    def to_chrome(self) -> Dict[str, Any]:
+        return chrome_events(self.spans, self.instants, rank=self.rank,
+                             label=self.label)
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f, indent=1)
+            f.write("\n")
+
+
+def _tid_map(tracks: Iterable[str]) -> Dict[str, int]:
+    out, nxt = {}, 100
+    for t in sorted(set(tracks)):
+        if t in _TRACK_TIDS:
+            out[t] = _TRACK_TIDS[t]
+        else:
+            out[t] = nxt
+            nxt += 1
+    return out
+
+
+def chrome_events(spans: List[Span], instants: List[Instant], *,
+                  rank: int = 0, label: str = "rank0") -> Dict[str, Any]:
+    """Chrome-trace JSON dict (``{"traceEvents": [...]}``) loadable by
+    Perfetto / chrome://tracing. Wall events on pid=rank, virtual
+    events on pid=1000+rank, with process/thread metadata events."""
+    tids = _tid_map([s.track for s in spans] + [i.track for i in instants])
+    pids = {CLOCK_WALL: rank, CLOCK_VIRTUAL: _VIRTUAL_PID_BASE + rank}
+    pnames = {CLOCK_WALL: f"{label} host (wall)",
+              CLOCK_VIRTUAL: f"{label} EP model (virtual us)"}
+    events: List[Dict[str, Any]] = []
+    seen: set = set()
+    for ev in list(spans) + list(instants):
+        pid = pids[ev.clock]
+        if pid not in {p for p, _ in seen}:
+            events.append({"ph": "M", "pid": pid, "name": "process_name",
+                           "args": {"name": pnames[ev.clock]}})
+        key = (pid, tids[ev.track])
+        if key not in seen:
+            seen.add(key)
+            events.append({"ph": "M", "pid": pid, "tid": tids[ev.track],
+                           "name": "thread_name",
+                           "args": {"name": ev.track}})
+    for s in spans:
+        events.append({"ph": "X", "name": s.name, "ts": round(s.ts, 3),
+                       "dur": round(max(s.dur, 0.0), 3),
+                       "pid": pids[s.clock], "tid": tids[s.track],
+                       "args": dict(s.args, clock=s.clock)})
+    for i in instants:
+        events.append({"ph": "i", "s": "t", "name": i.name,
+                       "ts": round(i.ts, 3), "pid": pids[i.clock],
+                       "tid": tids[i.track],
+                       "args": dict(i.args, clock=i.clock)})
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def merge_chrome(records: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
+    """Join per-rank Chrome-trace dicts (distinct rank -> distinct
+    pids) into one trace."""
+    events: List[Dict[str, Any]] = []
+    for rec in records:
+        events.extend(rec.get("traceEvents", []))
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+# ---------------------------------------------------------------------------
+# Current-tracer context (module-level hooks)
+# ---------------------------------------------------------------------------
+
+_CURRENT: Optional[Tracer] = None
+
+
+def current() -> Optional[Tracer]:
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def use(tracer: Optional[Tracer]):
+    """Install ``tracer`` as the process-current tracer for the block.
+    ``use(None)`` is a no-op context (hooks stay disabled)."""
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = tracer if tracer is not None else prev
+    try:
+        yield tracer
+    finally:
+        _CURRENT = prev
+
+
+def span(name: str, track: str = "engine", **args):
+    """Wall span on the current tracer; null context when none."""
+    t = _CURRENT
+    if t is None:
+        return contextlib.nullcontext()
+    return t.span(name, track, **args)
+
+
+def instant(name: str, track: str = "engine", **args) -> None:
+    if _CURRENT is not None:
+        _CURRENT.instant(name, track=track, **args)
+
+
+# ---------------------------------------------------------------------------
+# EP virtual timelines (roofline cost model)
+# ---------------------------------------------------------------------------
+
+def _us_comm(nbytes: float) -> float:
+    return nbytes / ICI_BW * 1e6
+
+
+def _us_flops(flops: float) -> float:
+    return flops / PEAK_FLOPS * 1e6
+
+
+def _us_hbm(nbytes: float) -> float:
+    return nbytes / HBM_BW * 1e6
+
+
+def ep_meta_timeline(*, tokens: int, H: int, num_experts: int,
+                     world: int, slots: int, top_k: int = 2,
+                     base: float = 0.0) -> Tuple[List[Span], float]:
+    """gate -> plan -> counts_exchange, sequential on the ``meta``
+    track. The counts all-to-all gets a latency floor — at decode
+    shapes the metadata round-trip is a visible slice of the step."""
+    t = base
+    spans = []
+    for name, dur in (
+            ("gate", max(_MIN_US, _us_flops(2 * tokens * H * num_experts))),
+            ("plan", max(_MIN_US, _us_flops(tokens * top_k * 64))),
+            ("counts_exchange",
+             max(_MIN_US, _us_comm(world * slots * 4) + _LATENCY_US))):
+        spans.append(Span(name, t, dur, "meta", CLOCK_VIRTUAL))
+        t += dur
+    return spans, t
+
+
+def ep_exchange_timeline(*, impl: str, world: int, rows: int, H: int,
+                         F: int, chunks: int = 1, gated: bool = False,
+                         itemsize: int = 4,
+                         base: float = 0.0) -> Tuple[List[Span], float]:
+    """dispatch / expert_compute / combine spans for one exchange, laid
+    out per strategy schedule:
+
+      * ``bulk``  — serialized d -> c -> cb (one span each)
+      * ``rdma``  — same serialization, shown as world-1 rotation
+        rounds per transfer direction
+      * ``pipelined`` — ``chunks`` software-pipelined rounds: round i's
+        compute starts when its dispatch chunk lands AND round i-1's
+        compute is done (same recurrence for combine)
+      * ``fused`` — the persistent kernel's ``world`` rotation rounds,
+        same pipelined recurrence at tile granularity
+
+    Wire bytes are the slab rows each rank ships off-rank
+    (rows * H * itemsize * (P-1)/P, each direction); compute is the
+    grouped-GEMM roofline (FLOPs + activation HBM traffic).
+    Returns (spans, makespan end time).
+    """
+    wire = rows * H * itemsize * (world - 1) / max(1, world)
+    t_d = max(_MIN_US, _us_comm(wire) + _LATENCY_US)
+    t_cb = t_d
+    n_mats = 3 if gated else 2
+    t_c = max(_MIN_US, _us_flops(2 * rows * H * F * n_mats)
+              + _us_hbm(2 * rows * H * itemsize))
+
+    def rounds(n: int) -> Tuple[List[Span], float]:
+        dr, cr, cbr = t_d / n, t_c / n, t_cb / n
+        spans, c_end, cb_end = [], base, base
+        for i in range(n):
+            d0 = base + i * dr
+            spans.append(Span("dispatch", d0, dr, "dispatch",
+                              CLOCK_VIRTUAL, {"round": i}))
+            c0 = max(d0 + dr, c_end)
+            c_end = c0 + cr
+            spans.append(Span("expert_compute", c0, cr, "compute",
+                              CLOCK_VIRTUAL, {"round": i}))
+            cb0 = max(c_end, cb_end)
+            cb_end = cb0 + cbr
+            spans.append(Span("combine", cb0, cbr, "combine",
+                              CLOCK_VIRTUAL, {"round": i}))
+        return spans, cb_end
+
+    if impl == "pipelined" and chunks > 1:
+        spans, end = rounds(chunks)
+    elif impl == "fused" and world > 1:
+        spans, end = rounds(world)
+    elif impl == "rdma" and world > 1:
+        spans, t = [], base
+        nr = world - 1
+        for i in range(nr):
+            spans.append(Span("dispatch", t, t_d / nr, "dispatch",
+                              CLOCK_VIRTUAL, {"round": i}))
+            t += t_d / nr
+        spans.append(Span("expert_compute", t, t_c, "compute",
+                          CLOCK_VIRTUAL))
+        t += t_c
+        for i in range(nr):
+            spans.append(Span("combine", t, t_cb / nr, "combine",
+                              CLOCK_VIRTUAL, {"round": i}))
+            t += t_cb / nr
+        end = t
+    else:                       # bulk and degenerate cases: serialized
+        spans = [Span("dispatch", base, t_d, "dispatch", CLOCK_VIRTUAL),
+                 Span("expert_compute", base + t_d, t_c, "compute",
+                      CLOCK_VIRTUAL),
+                 Span("combine", base + t_d + t_c, t_cb, "combine",
+                      CLOCK_VIRTUAL)]
+        end = base + t_d + t_c + t_cb
+    return spans, end
+
+
+# ---------------------------------------------------------------------------
+# Data-plane recording hooks (called at JAX trace time from
+# core/dispatch; no-ops when no tracer is installed)
+# ---------------------------------------------------------------------------
+
+def record_ep_meta(plan, *, tokens: int, H: int, num_experts: int,
+                   top_k: int) -> None:
+    """Open a new EP step group and lay down gate/plan/counts spans.
+    Reads only static plan geometry — safe inside jit tracing."""
+    tr = _CURRENT
+    if tr is None:
+        return
+    step = tr.begin_ep_step()
+    spans, _ = ep_meta_timeline(
+        tokens=int(tokens), H=int(H), num_experts=int(num_experts),
+        world=int(plan.info.world), slots=int(plan.info.slots),
+        top_k=int(top_k), base=tr.vcursor)
+    for s in spans:
+        tr.add_span(s.name, s.ts, s.dur, track=s.track,
+                    clock=CLOCK_VIRTUAL, ep_step=step,
+                    phase_flavor=plan.phase)
+
+
+def record_ep_exchange(impl: str, plan, *, H: int, F: int,
+                       gated: bool) -> None:
+    """Lay down the dispatch/expert_compute/combine timeline for one
+    exchange strategy invocation. Reads only static plan geometry."""
+    tr = _CURRENT
+    if tr is None:
+        return
+    step = tr.ep_step if tr.ep_step >= 0 else tr.begin_ep_step()
+    spans, _ = ep_exchange_timeline(
+        impl=impl, world=int(plan.info.world), rows=int(plan.num_rows),
+        H=int(H), F=int(F), chunks=int(plan.chunks), gated=bool(gated),
+        base=tr.vcursor)
+    for s in spans:
+        tr.add_span(s.name, s.ts, s.dur, track=s.track,
+                    clock=CLOCK_VIRTUAL, ep_step=step, impl=impl,
+                    phase_flavor=plan.phase, dropless=bool(plan.dropless),
+                    **s.args)

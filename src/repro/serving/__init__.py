@@ -13,6 +13,11 @@ prompt lengths). ``serving.faults`` drives the failure model: a seeded
 ``FaultInjector`` replays declarative rank-loss / transient-error /
 step-delay / pool-pressure schedules through the engine's recovery path
 (detect → quiesce → rebuild → replay; see serving/engine.py).
+Observability rides on ``repro.obs``: pass the engine a
+``obs.Tracer`` to record admission / prefill-chunk / decode-step /
+recovery spans (plus the EP phase timelines the data-plane hooks
+replay at trace time) and ``metrics_snapshot_every`` to embed registry
+snapshots in the heartbeat.
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.faults import (FaultInjector, InjectedStepError,

@@ -93,6 +93,7 @@ from repro.distributed.fault_tolerance import (StepWatchdog, retry_step,
 from repro.models.serve import (decode_step, init_cache, prefill,
                                 prefill_chunk as model_prefill_chunk,
                                 supports_chunked_prefill)
+from repro.obs import trace as obs_trace
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paging import DEFAULT_PAGE_SIZE
 from repro.serving.requests import RUNNING, Request, RequestState
@@ -129,7 +130,8 @@ class ServingEngine:
                  watchdog: Optional[StepWatchdog] = None,
                  heartbeat_file: Optional[str] = None,
                  max_retries: int = 2, retry_backoff_s: float = 0.0,
-                 request_ttl: int = 0):
+                 request_ttl: int = 0, tracer=None,
+                 metrics_snapshot_every: int = 0):
         self.cfg, self.params, self.pctx = cfg, params, pctx
         self.dtype = dtype
         self.mesh = mesh
@@ -147,6 +149,15 @@ class ServingEngine:
         self._inflight: Dict[int, _Inflight] = {}
         self._next_rid = 0
         self._last_tok = np.zeros((slots,), np.int32)
+        # ----------------------------------------- observability knobs --
+        # tracer: an obs.trace.Tracer; installed as the process-current
+        # tracer around every step, so the EP cost-model hooks in
+        # core/dispatch and the fault instants in serving/faults record
+        # into it (None = all hooks no-op).
+        self.tracer = tracer
+        self.metrics_snapshot_every = int(metrics_snapshot_every)
+        self._last_snapshot: Optional[Dict[str, Any]] = None
+        self._step_calls = 0
         # --------------------------------------------- robustness knobs --
         self.injector = injector
         self.heartbeat_file = heartbeat_file
@@ -183,6 +194,14 @@ class ServingEngine:
             lambda p, c, tk, off: model_prefill_chunk(cfg, p, c, tk, off,
                                                       pctx),
             donate_argnums=(1,))
+
+    def _span(self, name: str, **args):
+        """Wall span on the engine tracer (null context when tracing is
+        off); stamps the virtual-clock step for cross-referencing."""
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(name, track="engine", step=self.clock,
+                                **args)
 
     def _warn_if_capacity_can_drop(self, slots: int) -> None:
         """The bitwise contract needs drop-free routing. Structural
@@ -297,7 +316,8 @@ class ServingEngine:
             if not self.kv.can_admit(head.request.seq_need):
                 break                          # strict FCFS: no lookahead
             st = self.scheduler.admit(self.clock)
-            self._admit_one(st)
+            with self._span("admission", rid=st.rid):
+                self._admit_one(st)
             n += 1
         return n
 
@@ -406,13 +426,31 @@ class ServingEngine:
         world = self._ep_world()
         if world <= 1 or self.mesh is None:
             return                      # nothing distributed to lose
-        moe, axis = self.cfg.moe, self.pctx.model_axis
+        with self._span("recovery", down_rank=down_rank):
+            self._recover_rank_loss_inner(down_rank, world)
+
+    def _recover_rank_loss_inner(self, down_rank: int, world: int) -> None:
         # ---- quiesce: collect every interrupted request (submission
         # order) and drop in-flight chunk caches / pool pressures
-        interrupted = [st for st in self.scheduler.states
-                       if st.status == RUNNING]
-        self._inflight.clear()
-        self._pressure.clear()
+        with self._span("quiesce"):
+            interrupted = [st for st in self.scheduler.states
+                           if st.status == RUNNING]
+            self._inflight.clear()
+            self._pressure.clear()
+        with self._span("rebuild"):
+            self._rebuild_survivors(down_rank, world)
+        # ---- replay: requeue at the FRONT, preserving submission order
+        with self._span("replay", requests=len(interrupted)):
+            self.scheduler.requeue(interrupted)
+            self.metrics.recoveries += 1
+            self.metrics.replayed_requests += len(interrupted)
+            self.metrics.replayed_tokens += sum(
+                len(st.tokens) for st in interrupted)
+
+    def _rebuild_survivors(self, down_rank: int, world: int) -> None:
+        """Survivor topology + weight re-placement + reshard + fresh KV
+        + re-jit (the recovery 'rebuild' phase)."""
+        moe, axis = self.cfg.moe, self.pctx.model_axis
         # ---- choose the survivor topology
         new_mesh = survivor_mesh(self.mesh, axis, down_rank)
         placement = None
@@ -471,12 +509,6 @@ class ServingEngine:
         self._last_tok = np.zeros((self.num_slots,), np.int32)
         self._build_jits()
         self._warn_if_capacity_can_drop(self.num_slots)
-        # ---- replay: requeue at the FRONT, preserving submission order
-        self.scheduler.requeue(interrupted)
-        self.metrics.recoveries += 1
-        self.metrics.replayed_requests += len(interrupted)
-        self.metrics.replayed_tokens += sum(
-            len(st.tokens) for st in interrupted)
 
     def _degrade_dist_impl(self) -> None:
         """Watchdog-triggered mid-run degradation along the PR-3 chain
@@ -518,25 +550,38 @@ class ServingEngine:
             extra["pages_total"] = self.kv.pool.num_pages
             extra["pages_allocated"] = self.kv.pool.allocated_pages
             extra["pages_reserved"] = self.kv.pool.reserved
+        if self._last_snapshot is not None:
+            # latest --metrics-snapshot-every registry snapshot rides
+            # along with liveness (the ROADMAP's live metrics endpoint)
+            extra["metrics"] = self._last_snapshot
         write_heartbeat(self.heartbeat_file, self.clock, extra=extra)
 
     # ------------------------------------------------------- step loop --
     def step(self) -> bool:
         """Fault hooks + admissions + inflight prompt chunks + one
         batched decode across the slot set. Returns True while the
-        engine still has (or awaits) work."""
-        self._release_pressure()
-        if self.injector is not None:
-            self._apply_pool_pressure(
-                self.injector.pool_pressure_at(self.clock))
-            down = self.injector.rank_down_at(self.clock, self._ep_world())
-            if down is not None:
-                self._recover_rank_loss(down)
-        self._expire_deadlines()
-        alive = self._step_inner()
-        if self._wd_fired:
-            self._wd_fired = False
-            self._degrade_dist_impl()
+        engine still has (or awaits) work. The engine tracer (when set)
+        is installed as the process-current tracer for the whole step,
+        so re-jits triggered by recovery/degradation replay their EP
+        phase timelines into it and fault injections land as instants."""
+        with obs_trace.use(self.tracer):
+            self._release_pressure()
+            if self.injector is not None:
+                self._apply_pool_pressure(
+                    self.injector.pool_pressure_at(self.clock))
+                down = self.injector.rank_down_at(self.clock,
+                                                  self._ep_world())
+                if down is not None:
+                    self._recover_rank_loss(down)
+            self._expire_deadlines()
+            alive = self._step_inner()
+            if self._wd_fired:
+                self._wd_fired = False
+                self._degrade_dist_impl()
+        self._step_calls += 1
+        if (self.metrics_snapshot_every > 0
+                and self._step_calls % self.metrics_snapshot_every == 0):
+            self._last_snapshot = self.metrics.snapshot()
         if self.heartbeat_file:
             self._write_heartbeat()
         return alive
@@ -546,7 +591,9 @@ class ServingEngine:
             self.scheduler.mark_ready(self.clock, time.perf_counter())
             self._admit()
             for slot in list(self._inflight):
-                self._advance_chunk(slot)
+                with self._span("prefill_chunk", slot=slot,
+                                rid=self._inflight[slot].st.rid):
+                    self._advance_chunk(slot)
             active = {s: st for s, st in self.kv.owner.items()
                       if s not in self._inflight}
             if not active:
@@ -581,6 +628,7 @@ class ServingEngine:
             tok = jnp.asarray(self._last_tok)
             wd = self._wd.step() if self._wd is not None \
                 else contextlib.nullcontext()
+            t_dec = self.tracer.now_us() if self.tracer is not None else 0.0
             with wd:
                 if self.injector is not None:
                     stall = self.injector.delay_at(self.clock)
@@ -590,6 +638,13 @@ class ServingEngine:
                 logits, self.kv.cache = self._guarded_decode(tok)
                 tok_new = jnp.argmax(logits, -1).astype(jnp.int32)
         tok_np = np.asarray(tok_new)           # THE one device→host sync
+        if self.tracer is not None:
+            # span closes AFTER the host sync, so it covers real device
+            # time, not just async dispatch
+            self.tracer.add_span(
+                "decode_step", t_dec, self.tracer.now_us() - t_dec,
+                track="engine", clock=obs_trace.CLOCK_WALL,
+                step=self.clock, occupied=self.kv.occupancy)
         self.metrics.record_decode_step(self.kv.occupancy)
         self.clock += 1
         now = time.perf_counter()

@@ -41,6 +41,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 
 @dataclasses.dataclass(frozen=True)
 class RankDown:
@@ -112,6 +114,14 @@ class FaultInjector:
         self._pending = list(self.schedule)
         self.log: List[Tuple[int, str]] = []   # (step fired, description)
 
+    def _note(self, now: int, kind: str, desc: str) -> None:
+        """Record a fired fault: the deterministic log the CLI prints,
+        plus a trace instant when a tracer is installed (the engine
+        wraps its step in ``obs.trace.use``)."""
+        self.log.append((now, desc))
+        obs_trace.instant(f"fault:{kind}", track="engine", step=now,
+                          detail=desc)
+
     def _take(self, kind, now: int) -> List:
         due = [f for f in self._pending
                if isinstance(f, kind) and f.step <= now]
@@ -128,14 +138,14 @@ class FaultInjector:
         f = due[0]
         self._pending.extend(due[1:])   # one loss per poll; rest re-queue
         rank = f.rank if f.rank >= 0 else int(self._rng.integers(world))
-        self.log.append((now, f"rank_down rank={rank}"))
+        self._note(now, "rank_down", f"rank_down rank={rank}")
         return rank
 
     def delay_at(self, now: int) -> float:
         """Total injected host stall (seconds) due at this step."""
         total = sum(f.seconds for f in self._take(StepDelay, now))
         if total:
-            self.log.append((now, f"step_delay {total}s"))
+            self._note(now, "step_delay", f"step_delay {total}s")
         return float(total)
 
     def maybe_raise(self, now: int) -> None:
@@ -145,7 +155,7 @@ class FaultInjector:
                if isinstance(f, TransientStepError) and f.step <= now]
         if due:
             self._pending.remove(due[0])
-            self.log.append((now, "transient_step_error"))
+            self._note(now, "transient", "transient_step_error")
             raise InjectedStepError(
                 f"injected transient step error at step {now}")
 
@@ -153,8 +163,9 @@ class FaultInjector:
         """PoolPressure entries due at this step."""
         due = self._take(PoolPressure, now)
         for f in due:
-            self.log.append((now, f"pool_pressure pages={f.pages} "
-                                  f"duration={f.duration}"))
+            self._note(now, "pool_pressure",
+                       f"pool_pressure pages={f.pages} "
+                       f"duration={f.duration}")
         return due
 
     @property

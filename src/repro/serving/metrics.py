@@ -5,52 +5,68 @@ deterministic, machine-independent numbers — queue wait, steps to first
 token, total decode steps — and is what benchmarks and tests compare.
 The *wall* clock gives tok/s and latency seconds for humans. Every
 summary is a plain-JSON-serializable dict (``write_json`` exports it).
+
+Backed by the typed ``obs.metrics.MetricsRegistry``: every counter
+below is a registry counter under ``serving/<name>`` (occupancy is a
+gauge), so the engine's heartbeat and bench rows can embed
+``snapshot()`` without knowing this class. The bare attribute API
+(``metrics.timeouts += 1`` at engine call-sites) is preserved via
+properties that delegate to the registry.
 """
 from __future__ import annotations
 
 import json
-import math
 from typing import Any, Dict, List, Optional
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.metrics import nearest_rank_pct as _pct
 
-def _pct(sorted_vals: List[float], q: float) -> float:
-    """Nearest-rank percentile of an already-sorted list: the smallest
-    value with at least q of the mass at or below it (ceil(q*n) - 1),
-    so p95 of 20 samples is the 19th value, not the max."""
-    if not sorted_vals:
-        return 0.0
-    n = len(sorted_vals)
-    i = min(n - 1, max(0, math.ceil(q * n) - 1))
-    return float(sorted_vals[i])
+# registry counter names (under "serving/"), in heartbeat order
+_COUNTER_NAMES = (
+    "decode_steps",
+    "idle_steps",
+    "prefill_steps",                # chunked-prefill-only steps
+    # robustness counters (serving/faults.py + engine recovery)
+    "timeouts",                     # deadline/TTL cancellations
+    "recoveries",                   # rank-loss rebuild+replay cycles
+    "replayed_requests",            # requests requeued by recovery
+    "replayed_tokens",              # already-emitted tokens replayed
+    "transient_errors",             # retried step failures
+    "degradations",                 # watchdog dist_impl downgrades
+    "watchdog_fires",
+)
 
 
 class ServingMetrics:
     """Per-step occupancy trace + aggregation over finished requests."""
 
-    def __init__(self, slots: int):
+    def __init__(self, slots: int,
+                 registry: Optional[MetricsRegistry] = None):
         self.slots = slots
-        self.decode_steps = 0
-        self.idle_steps = 0
-        self.prefill_steps = 0              # chunked-prefill-only steps
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
         self._occ: List[int] = []           # occupied slots per decode step
-        # robustness counters (serving/faults.py + engine recovery)
-        self.timeouts = 0                   # deadline/TTL cancellations
-        self.recoveries = 0                 # rank-loss rebuild+replay cycles
-        self.replayed_requests = 0          # requests requeued by recovery
-        self.replayed_tokens = 0            # already-emitted tokens replayed
-        self.transient_errors = 0           # retried step failures
-        self.degradations = 0               # watchdog dist_impl downgrades
-        self.watchdog_fires = 0
+        for name in _COUNTER_NAMES:
+            self.registry.counter(f"serving/{name}")
+        self.registry.gauge("serving/slot_occupancy")
 
     def record_decode_step(self, occupied: int) -> None:
         self.decode_steps += 1
         self._occ.append(occupied)
+        if self.slots > 0:
+            self.registry.gauge("serving/slot_occupancy").set(
+                occupied / self.slots)
 
     def record_prefill_step(self) -> None:
         self.prefill_steps += 1
 
     def record_idle(self, steps: int = 1) -> None:
         self.idle_steps += steps
+
+    def snapshot(self) -> Dict[str, Any]:
+        """The registry's plain-JSON state — embedded in serving
+        heartbeats every ``--metrics-snapshot-every`` steps."""
+        return self.registry.snapshot()
 
     def summary(self, states, *, wall_s: Optional[float] = None,
                 kv: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
@@ -100,6 +116,25 @@ class ServingMetrics:
         if kv is not None:
             rec["kv"] = kv
         return rec
+
+
+def _counter_property(name: str) -> property:
+    key = f"serving/{name}"
+
+    def _get(self) -> int:
+        return self.registry.counter(key).value
+
+    def _set(self, v: int) -> None:
+        # engine call-sites do ``metrics.timeouts += 1``: property
+        # read-modify-write lands here as an absolute value.
+        self.registry.counter(key).value = int(v)
+
+    return property(_get, _set)
+
+
+for _name in _COUNTER_NAMES:
+    setattr(ServingMetrics, _name, _counter_property(_name))
+del _name
 
 
 def _mean(vals: List[float]) -> float:

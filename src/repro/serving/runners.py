@@ -47,7 +47,8 @@ def run_continuous_workload(cfg, params, pctx, mesh, prompts, max_new,
                             injector=None, watchdog=None,
                             heartbeat_file=None, max_retries: int = 2,
                             retry_backoff_s: float = 0.0,
-                            request_ttl: int = 0
+                            request_ttl: int = 0, tracer=None,
+                            metrics_snapshot_every: int = 0
                             ) -> Tuple[list, int, float, dict]:
     """The continuous-batching engine over the same request set
     (``prompts`` may be ragged — a list of per-request arrays); the
@@ -64,7 +65,8 @@ def run_continuous_workload(cfg, params, pctx, mesh, prompts, max_new,
                            watchdog=watchdog, heartbeat_file=heartbeat_file,
                            max_retries=max_retries,
                            retry_backoff_s=retry_backoff_s,
-                           request_ttl=request_ttl)
+                           request_ttl=request_ttl, tracer=tracer,
+                           metrics_snapshot_every=metrics_snapshot_every)
     t0 = time.perf_counter()
     for i in range(len(prompts)):
         engine.submit(prompts[i], int(max_new[i]),

@@ -19,30 +19,40 @@ sys.path.insert(0, os.path.join(ROOT, "tools"))
 
 from check_bench import check_latency, check_serving  # noqa: E402
 
+# every EP row carries the tracing layer's per-phase accounting
+# (overlap_efficiency in (0, 1]; step makespan bracketed by its
+# phases: max(phase_us) <= step_virtual_us <= sum(phase_us))
+_OBS = {"overlap_efficiency": 0.2,
+        "phase_us": {"gate": 1.0, "plan": 1.0, "counts_exchange": 2.0,
+                     "dispatch": 5.0, "expert_compute": 10.0,
+                     "combine": 5.0},
+        "step_virtual_us": 22.0}
 LAT = {
     "local": [{"impl": "packed", "tokens": 512, "us": 100.0},
               {"impl": "fused", "tokens": 512, "us": 400.0}],
     "distributed": [
         {"impl": "bulk_c1", "tokens": 512, "us": 200.0,
          "dropped_tokens": 3, "payload_bytes": 1000,
-         "buffer_bytes": 4000},
+         "buffer_bytes": 4000, **_OBS},
         {"impl": "rdma_c1_dropless", "tokens": 512, "us": 300.0,
          "dropped_tokens": 0, "payload_bytes": 1000,
-         "buffer_bytes": 8000}],
+         "buffer_bytes": 8000, **_OBS}],
     "decode": [{"impl": "decode_bulk", "tokens": 4, "us": 10.0,
                 "dropped_tokens": 0, "payload_bytes": 16,
-                "buffer_bytes": 64},
+                "buffer_bytes": 64, **_OBS},
                {"impl": "decode_rdma", "tokens": 4, "us": 40.0,
                 "dropped_tokens": 0, "payload_bytes": 16,
-                "buffer_bytes": 64}],
+                "buffer_bytes": 64, **_OBS}],
 }
+_PHASE_S = {"admission": 0.01, "prefill_chunk": 0.05, "decode_step": 0.5}
 SRV = {"rows": [
     {"mode": "static", "identical": True, "tok_s": 50.0},
-    {"mode": "continuous", "identical": True, "tok_s": 45.0},
+    {"mode": "continuous", "identical": True, "tok_s": 45.0,
+     "phase_s": dict(_PHASE_S)},
     {"mode": "continuous_paged", "identical": True, "tok_s": 40.0,
      "kv_bytes": 16384, "kv_bytes_monolithic": 18432,
      "memory_per_request": 2730.7, "page_occupancy": 0.86,
-     "page_size": 4, "kv_pages": 8}]}
+     "page_size": 4, "kv_pages": 8, "phase_s": dict(_PHASE_S)}]}
 
 
 def test_identical_records_pass():
@@ -98,6 +108,63 @@ def test_invalid_us_fails():
     fresh = copy.deepcopy(LAT)
     fresh["local"][0]["us"] = 0.0
     assert any("invalid us" in e for e in check_latency(LAT, fresh))
+
+
+def test_ep_obs_fields_gated():
+    """The per-phase tracing gate: EP rows (committed AND fresh) must
+    carry overlap_efficiency in (0, 1] plus a phase_us breakdown that
+    brackets step_virtual_us; decode_gather (no exchange) is exempt."""
+    # a fresh EP row that lost its tracing fields fails
+    fresh = copy.deepcopy(LAT)
+    for k in ("overlap_efficiency", "phase_us", "step_virtual_us"):
+        del fresh["distributed"][0][k]
+    errs = check_latency(LAT, fresh)
+    assert any("lacks per-phase tracing" in e and "bulk_c1" in e
+               for e in errs)
+    # ... and so does a committed one (stale baselines fail at the gate)
+    stale = copy.deepcopy(LAT)
+    del stale["decode"][0]["overlap_efficiency"]
+    assert any("committed row 'decode_bulk'" in e
+               for e in check_latency(stale, copy.deepcopy(LAT)))
+    # efficiency outside (0, 1] fails
+    fresh = copy.deepcopy(LAT)
+    fresh["decode"][1]["overlap_efficiency"] = 0.0
+    assert any("outside (0, 1]" in e for e in check_latency(LAT, fresh))
+    fresh["decode"][1]["overlap_efficiency"] = 1.2
+    assert any("outside (0, 1]" in e for e in check_latency(LAT, fresh))
+    # a phase longer than the whole step is inconsistent accounting
+    fresh = copy.deepcopy(LAT)
+    fresh["distributed"][1]["phase_us"]["dispatch"] = 99.0
+    fresh["distributed"][1]["step_virtual_us"] = 22.0
+    assert any("inconsistent" in e for e in check_latency(LAT, fresh))
+    # ... as is a step exceeding the sum of its phases (coverage gap)
+    fresh["distributed"][1]["phase_us"]["dispatch"] = 5.0
+    fresh["distributed"][1]["step_virtual_us"] = 99.0
+    assert any("inconsistent" in e for e in check_latency(LAT, fresh))
+    # a local-oracle row carries no tracing fields and that is fine
+    fresh = copy.deepcopy(LAT)
+    fresh["decode"].append({"impl": "decode_gather", "tokens": 4,
+                            "us": 5.0, "dropped_tokens": 0})
+    assert check_latency(LAT, fresh) == []
+
+
+def test_serving_phase_breakdown_gated():
+    """Traced serving modes must report phase_s with positive
+    decode_step time; the static oracle is untraced by design."""
+    fresh = copy.deepcopy(SRV)
+    del fresh["rows"][1]["phase_s"]
+    errs = check_serving(SRV, fresh)
+    assert any("lost its phase_s" in e and "'continuous'" in e
+               for e in errs)
+    fresh = copy.deepcopy(SRV)
+    fresh["rows"][2]["phase_s"]["decode_step"] = 0.0
+    assert any("traced no decode_step" in e
+               for e in check_serving(SRV, fresh))
+    fresh = copy.deepcopy(SRV)
+    fresh["rows"][1]["phase_s"]["admission"] = -1.0
+    assert any("non-negative" in e for e in check_serving(SRV, fresh))
+    # static rows carry no phase_s and pass untouched
+    assert check_serving(SRV, copy.deepcopy(SRV)) == []
 
 
 def test_serving_contract():

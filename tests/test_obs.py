@@ -1,0 +1,366 @@
+"""The unified tracing + metrics layer (src/repro/obs/):
+
+  * tracer invariants: nested ``span()`` contexts produce properly
+    nested wall spans on the right track; virtual spans advance the
+    virtual cursor and live on a separate Chrome pid so the two clock
+    domains never share a timeline;
+  * Chrome/Perfetto export: ``to_chrome`` passes tools/check_trace.py's
+    schema + nesting validators round-tripped through JSON, and
+    ``merge_chrome`` keeps per-rank events on distinct pids;
+  * roofline EP timelines: every impl's schedule yields an overlap
+    efficiency in (0, 1]; the overlapping schedules (pipelined, fused)
+    beat bulk's serial one at compute-heavy shapes; rdma's sequential
+    rounds have the same makespan as bulk's single bulk exchange;
+  * interval math: overlap_efficiency / payload_efficiency /
+    phase_totals on hand-built spans with known answers;
+  * metrics registry: typed get-or-create (kind mismatch raises),
+    snapshot shape, and ServingMetrics' attribute API delegating to
+    registry counters;
+  * engine integration: a local serve with a tracer emits
+    admission/prefill_chunk/decode_step wall spans that check_trace
+    accepts; at world 4 (subprocess) a rank_down fault leaves
+    recovery/quiesce/rebuild/replay spans, the fault instant, and EP
+    phase spans whose per-step overlap efficiency is in (0, 1].
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import _ROOT, run_sub
+
+sys.path.insert(0, os.path.join(_ROOT, "tools"))
+
+
+# ---------------------------------------------------- tracer invariants --
+@pytest.mark.smoke
+def test_span_nesting_and_tracks():
+    from repro.obs import Tracer
+
+    tr = Tracer(rank=0)
+    with tr.span("outer", track="engine", step=1):
+        with tr.span("inner", track="engine"):
+            pass
+        tr.instant("tick", track="engine")
+    spans = {s.name: s for s in tr.spans}
+    assert spans["inner"].ts >= spans["outer"].ts
+    assert (spans["inner"].ts + spans["inner"].dur
+            <= spans["outer"].ts + spans["outer"].dur + 1e-6)
+    assert all(s.track == "engine" and s.clock == "wall"
+               for s in tr.spans)
+    assert spans["outer"].args["step"] == 1
+    assert tr.instants[0].name == "tick"
+
+
+@pytest.mark.smoke
+def test_virtual_spans_advance_cursor_and_group_by_ep_step():
+    from repro.obs import Tracer
+
+    tr = Tracer(rank=2)
+    s0 = tr.begin_ep_step()
+    tr.add_span("dispatch", 0.0, 5.0, track="dispatch", ep_step=s0)
+    tr.add_span("combine", 5.0, 5.0, track="combine", ep_step=s0)
+    assert tr.vcursor == 10.0               # virtual clock advanced
+    s1 = tr.begin_ep_step()
+    assert s1 == s0 + 1
+    tr.add_span("dispatch", 10.0, 2.0, track="dispatch", ep_step=s1)
+    steps = tr.ep_steps()
+    assert [len(g) for g in steps] == [2, 1]
+    assert all(s.clock == "virtual" for g in steps for s in g)
+
+
+@pytest.mark.smoke
+def test_module_level_span_is_noop_without_tracer():
+    from repro.obs import Tracer, current, span, use
+    from repro.obs import trace as obs_trace
+
+    assert current() is None
+    with span("orphan"):                    # must not raise or record
+        pass
+    tr = Tracer()
+    with use(tr):
+        assert current() is tr
+        with use(None):                     # None keeps the tracer
+            assert current() is tr
+        with span("kept"):
+            pass
+    assert current() is None
+    assert [s.name for s in tr.spans] == ["kept"]
+    # the dispatch hooks are no-ops with no tracer installed
+    obs_trace.record_ep_meta(None, tokens=1, H=1, num_experts=1, top_k=1)
+
+
+# ------------------------------------------------- chrome export schema --
+@pytest.mark.smoke
+def test_chrome_export_passes_check_trace_roundtrip(tmp_path):
+    from check_trace import check_trace
+    from repro.obs import Tracer
+
+    tr = Tracer(rank=0, label="unit")
+    with tr.span("decode_step", track="engine"):
+        pass
+    tr.instant("fault:rank_down", track="engine", detail="unit")
+    tr.begin_ep_step()
+    tr.add_span("dispatch", 0.0, 4.0, track="dispatch")
+    tr.add_span("expert_compute", 2.0, 6.0, track="compute")
+    tr.add_span("combine", 8.0, 4.0, track="combine")
+    p = tmp_path / "t.json"
+    tr.write(str(p))
+    rec = json.loads(p.read_text())
+    assert check_trace(rec, require=["decode_step", "fault:rank_down"],
+                       require_ep=True) == []
+    # two clock domains on two pids: wall on rank, virtual on 1000+rank
+    pids = {e["pid"] for e in rec["traceEvents"] if e.get("ph") == "X"}
+    assert pids == {0, 1000}
+    # every X event says which clock it is on
+    assert all(e["args"]["clock"] in ("wall", "virtual")
+               for e in rec["traceEvents"] if e.get("ph") == "X")
+
+
+@pytest.mark.smoke
+def test_merge_chrome_keeps_ranks_on_distinct_pids():
+    from check_trace import check_trace
+    from repro.obs import Tracer, merge_chrome
+
+    recs = []
+    for rank in range(4):
+        tr = Tracer(rank=rank)
+        with tr.span("decode_step"):
+            pass
+        tr.add_span("dispatch", 0.0, 1.0, track="dispatch")
+        recs.append(tr.to_chrome())
+    merged = merge_chrome(recs)
+    assert check_trace(merged) == []
+    wall = {e["pid"] for e in merged["traceEvents"]
+            if e.get("ph") == "X" and e["args"]["clock"] == "wall"}
+    virt = {e["pid"] for e in merged["traceEvents"]
+            if e.get("ph") == "X" and e["args"]["clock"] == "virtual"}
+    assert wall == {0, 1, 2, 3}
+    assert virt == {1000, 1001, 1002, 1003}
+
+
+# ------------------------------------------------- roofline EP timeline --
+@pytest.mark.smoke
+def test_ep_timeline_efficiency_per_impl():
+    from repro.obs import ep_exchange_timeline, overlap_efficiency
+
+    shape = dict(world=8, rows=16384 * 2, H=2048, F=2048, itemsize=2)
+    eff, end = {}, {}
+    for impl in ("bulk", "pipelined", "rdma", "fused"):
+        spans, t = ep_exchange_timeline(
+            impl=impl, chunks=(4 if impl == "pipelined" else 1), **shape)
+        eff[impl] = overlap_efficiency(spans)
+        end[impl] = t
+        assert 0.0 < eff[impl] <= 1.0, (impl, eff[impl])
+    # serial schedules cannot overlap; chunked/fused ones must
+    assert eff["bulk"] < eff["pipelined"]
+    assert eff["bulk"] < eff["fused"]
+    # rdma is bulk's wire time cut into sequential per-peer rounds:
+    # same exposed communication, same makespan
+    assert end["rdma"] == pytest.approx(end["bulk"], rel=1e-6)
+    assert eff["rdma"] == pytest.approx(eff["bulk"], rel=1e-6)
+    # overlapped schedules finish strictly earlier than serial ones
+    assert end["fused"] < end["bulk"]
+    assert end["pipelined"] < end["bulk"]
+
+
+@pytest.mark.smoke
+def test_ep_meta_timeline_is_sequential():
+    from repro.obs import ep_meta_timeline
+
+    spans, end = ep_meta_timeline(tokens=128, H=256, num_experts=8,
+                                  world=4, slots=8, top_k=2)
+    assert [s.name for s in spans] == ["gate", "plan", "counts_exchange"]
+    for a, b in zip(spans, spans[1:]):
+        assert b.ts == pytest.approx(a.ts + a.dur)
+    assert end == pytest.approx(spans[-1].ts + spans[-1].dur)
+
+
+# ----------------------------------------------------- interval algebra --
+@pytest.mark.smoke
+def test_overlap_efficiency_interval_math():
+    from repro.obs import overlap_efficiency
+
+    def S(name, ts, dur, track):
+        return {"name": name, "ts": ts, "dur": dur, "track": track}
+
+    # comm [0,4) + [8,12), compute [2,10): exposed comm = [0,2) + [10,12)
+    # = 4 of a 12-unit makespan -> efficiency 2/3
+    spans = [S("dispatch", 0, 4, "dispatch"),
+             S("expert_compute", 2, 8, "compute"),
+             S("combine", 8, 4, "combine")]
+    assert overlap_efficiency(spans) == pytest.approx(8 / 12)
+    # fully serial: nothing hidden -> compute/makespan
+    serial = [S("dispatch", 0, 4, "dispatch"),
+              S("expert_compute", 4, 4, "compute"),
+              S("combine", 8, 4, "combine")]
+    assert overlap_efficiency(serial) == pytest.approx(4 / 12)
+    # fully hidden comm
+    hidden = [S("dispatch", 0, 2, "dispatch"),
+              S("expert_compute", 0, 10, "compute")]
+    assert overlap_efficiency(hidden) == pytest.approx(1.0)
+    assert overlap_efficiency([S("expert_compute", 0, 5, "compute")]) \
+        == pytest.approx(1.0)               # no comm at all
+    assert overlap_efficiency([S("dispatch", 0, 5, "dispatch")]) == 0.0
+    # no comm at all (E<P fast path) is trivially all-hidden, not zero
+    assert overlap_efficiency([]) == 1.0
+
+
+@pytest.mark.smoke
+def test_payload_efficiency_and_phase_totals():
+    from repro.obs import payload_efficiency, phase_totals
+
+    assert payload_efficiency(256, 1024) == pytest.approx(0.25)
+    assert payload_efficiency(0, 1024) == 0.0
+    assert payload_efficiency(10, 0) == 0.0     # degenerate buffer
+    spans = [{"name": "dispatch", "ts": 0, "dur": 2.0, "phase": "dispatch"},
+             {"name": "dispatch", "ts": 5, "dur": 3.0, "phase": "dispatch"},
+             {"name": "x", "ts": 2, "dur": 1.5}]        # falls back to name
+    t = phase_totals(spans)
+    assert t == {"dispatch": pytest.approx(5.0), "x": pytest.approx(1.5)}
+
+
+# ----------------------------------------------------- metrics registry --
+@pytest.mark.smoke
+def test_registry_typed_get_or_create_and_snapshot():
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    reg.counter("steps").inc()
+    reg.counter("steps").inc(2)
+    reg.gauge("occupancy").set(0.75)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        reg.histogram("ttft").observe(v)
+    assert reg.counter("steps").value == 3
+    with pytest.raises(TypeError):
+        reg.gauge("steps")                  # kind mismatch
+    with pytest.raises(ValueError):
+        reg.counter("steps").inc(-1)        # counters only go up
+    snap = reg.snapshot()
+    assert snap["steps"] == 3 and snap["occupancy"] == 0.75
+    assert snap["ttft"]["count"] == 4
+    assert snap["ttft"]["p50"] == 2.0
+    json.loads(json.dumps(snap))            # heartbeat-embeddable
+    assert reg.names() == sorted(reg.names())
+
+
+@pytest.mark.smoke
+def test_serving_metrics_delegate_to_registry():
+    from repro.obs import MetricsRegistry
+    from repro.serving import ServingMetrics
+
+    reg = MetricsRegistry()
+    m = ServingMetrics(slots=2, registry=reg)
+    m.decode_steps += 2                     # attribute API unchanged
+    m.timeouts += 1
+    m.record_decode_step(1)
+    assert reg.counter("serving/decode_steps").value == 3
+    assert reg.counter("serving/timeouts").value == 1
+    assert reg.gauge("serving/slot_occupancy").value == 0.5  # 1 of 2
+    m.timeouts = 0                          # resets are allowed
+    assert reg.counter("serving/timeouts").value == 0
+    snap = m.snapshot()
+    assert snap["serving/decode_steps"] == 3
+
+
+# -------------------------------------------------- engine integration --
+def test_local_engine_emits_wall_spans(tmp_path):
+    from check_trace import check_trace
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.obs import Tracer
+    from repro.serving import ServingEngine
+
+    cfg = get_config("mixtral-8x7b").reduced()
+    pctx = make_pctx(cfg, None, train=False)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    tr = Tracer(rank=0)
+    eng = ServingEngine(cfg, params, slots=2, seq_budget=16, pctx=pctx,
+                        prefill_chunk=4, tracer=tr,
+                        metrics_snapshot_every=2)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(rng.integers(0, cfg.vocab, 8).astype(np.int32), 4,
+                   arrival=i)
+    eng.run()
+    names = {s.name for s in tr.spans}
+    assert {"admission", "prefill_chunk", "decode_step"} <= names
+    dec = [s for s in tr.spans if s.name == "decode_step"]
+    assert all(s.dur > 0 and s.clock == "wall" for s in dec)
+    # snapshot cadence populated the engine's latest-snapshot slot
+    assert eng._last_snapshot is not None
+    assert eng._last_snapshot["serving/decode_steps"] > 0
+    p = tmp_path / "local.json"
+    tr.write(str(p))
+    assert check_trace(json.loads(p.read_text()),
+                       require=["admission", "decode_step"]) == []
+
+
+def test_engine_world4_rank_loss_trace(tmp_path):
+    """The observability tentpole at world 4: a rank_down fault mid-
+    decode must leave (a) recovery/quiesce/rebuild/replay wall spans,
+    (b) the fault:rank_down instant, (c) EP phase spans from the
+    data-plane hooks whose per-EP-step overlap efficiency is in
+    (0, 1] — all in one Perfetto-loadable file."""
+    out = tmp_path / "trace.json"
+    run_sub(r"""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro import compat
+    from repro.configs import get_config
+    from repro.launch.steps import make_pctx
+    from repro.models.model import init_params
+    from repro.distributed import sharding as shd
+    from repro.obs import Tracer
+    from repro.obs.metrics import overlap_efficiency
+    from repro.serving import FaultInjector, ServingEngine, rank_down
+
+    cfg = get_config("mixtral-8x7b").reduced()
+    mesh = compat.make_mesh((1, 4), ("data", "model"))
+    pctx = make_pctx(cfg, mesh, train=False, dist_impl="pipelined")
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32,
+                         ep_world=4)
+    params = jax.device_put(params, shd.params_shardings(
+        cfg, mesh, params, serve=False))
+    rng = np.random.default_rng(0)
+    tr = Tracer(rank=0)
+    eng = ServingEngine(cfg, params, slots=2, seq_budget=16, pctx=pctx,
+                        mesh=mesh, injector=FaultInjector([rank_down(4, 1)]),
+                        tracer=tr)
+    for i in range(4):
+        eng.submit(rng.integers(0, cfg.vocab, (8,)).astype(np.int32), 6,
+                   arrival=i)
+    eng.run()
+    assert eng.metrics.recoveries == 1
+    names = {s.name for s in tr.spans}
+    for want in ("recovery", "quiesce", "rebuild", "replay",
+                 "decode_step", "admission"):
+        assert want in names, (want, sorted(names))
+    assert any(i.name == "fault:rank_down" for i in tr.instants)
+    # quiesce/rebuild/replay nest inside the recovery span
+    rec = next(s for s in tr.spans if s.name == "recovery")
+    for inner in ("quiesce", "rebuild", "replay"):
+        s = next(x for x in tr.spans if x.name == inner)
+        assert s.ts >= rec.ts and s.ts + s.dur <= rec.ts + rec.dur + 1e-6
+    # data-plane EP spans, grouped per step, each overlapped in (0, 1]
+    steps = tr.ep_steps()
+    assert steps, "no EP phase spans recorded"
+    for group in steps:
+        have = {s.name for s in group}
+        assert {"dispatch", "expert_compute", "combine"} <= have, have
+        eff = overlap_efficiency(group)
+        assert 0.0 < eff <= 1.0, eff
+    tr.write({out!r})
+    print("WORLD4 TRACE OK", len(tr.spans))
+    """.replace("{out!r}", repr(str(out))), devices=4)
+    sys.path.insert(0, os.path.join(_ROOT, "tools"))
+    from check_trace import check_trace
+    rec = json.loads(out.read_text())
+    assert check_trace(rec, require=["recovery", "decode_step"],
+                       require_ep=True) == []

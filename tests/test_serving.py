@@ -118,6 +118,30 @@ def test_metrics_summary_json_roundtrip():
 
 
 @pytest.mark.smoke
+def test_pct_edge_cases_and_symmetry():
+    """Nearest-rank percentile at the edges: an empty list is 0.0 (not
+    IndexError), a single sample IS every percentile, and p50/p99 stay
+    symmetric around the median of a symmetric sample — including the
+    n=5, q=0.2 float hazard (0.2 * 5 == 1.0000000000000002, which a
+    naive ceil bumps to rank 2)."""
+    from repro.serving.metrics import _pct
+
+    assert _pct([], 0.5) == 0.0
+    assert _pct([], 0.99) == 0.0
+    for q in (0.01, 0.5, 0.99):
+        assert _pct([42.0], q) == 42.0
+    five = [1.0, 2.0, 3.0, 4.0, 5.0]
+    assert _pct(five, 0.2) == 1.0                 # ceil(1.0000...2)-1 == 0
+    assert _pct(five, 0.5) == 3.0
+    # symmetric sample: median - p50(lower half span) == p99 mirror
+    sym = [float(i) for i in range(1, 100)]       # 1..99, median 50
+    assert _pct(sym, 0.50) == 50.0
+    assert _pct(sym, 0.99) - 50.0 == 50.0 - _pct(sym, 0.01)
+    # percentiles never exceed the sample range
+    assert _pct(sym, 0.999) <= 99.0 and _pct(sym, 0.001) >= 1.0
+
+
+@pytest.mark.smoke
 def test_slot_manager_insert_and_per_slot_pos():
     """Paged mode: insert_prefill draws the prompt's pages from the
     slot's admission reservation, scatters the batch-1 prefill cache

@@ -18,7 +18,12 @@ not absolute speed:
     accounting is present, ``payload_bytes <= buffer_bytes``;
   * serving — both scheduler modes present and every fresh row still
     reports ``identical: true`` (the bitwise greedy-stream contract)
-    with positive throughput.
+    with positive throughput;
+  * observability — every EP row (committed and fresh; decode_gather
+    exempt) carries the tracing layer's ``overlap_efficiency`` in
+    (0, 1] plus a ``phase_us`` breakdown bracketing
+    ``step_virtual_us``, and every traced serving mode reports a
+    ``phase_s`` wall-time breakdown with positive ``decode_step``.
 
 Usage::
 
@@ -68,6 +73,14 @@ REF_OVERRIDE = {"decode_fused": ("decode_gather", 2.5),
 # persistent kernel must beat the fastest multi-launch EP path.
 HEADLINE_DECODE = (("decode_fused", "decode_rdma"),
                    ("decode_fused_dropless", "decode_rdma_dropless"))
+# sections whose rows run an EP exchange and therefore must carry the
+# tracing layer's per-phase accounting; decode_gather is the local
+# no-exchange oracle and is exempt.
+EP_SECTIONS = ("distributed", "decode")
+NON_EP_IMPLS = {"decode_gather"}
+# serving modes that run the real engine step loop (and therefore get a
+# tracer); the static fixed-batch oracle is untraced by design.
+TRACED_MODES = {"continuous", "continuous_faulted", "continuous_paged"}
 
 
 def _median_us_by_impl(rows):
@@ -147,6 +160,14 @@ def check_latency(committed: dict, fresh: dict,
                     f"{threshold * slack:g}x)")
     if "decode" in sections:
         errs.extend(_headline_decode_gate(committed))
+    for section in EP_SECTIONS:
+        if section not in sections:
+            continue
+        for origin, record in (("committed", committed), ("fresh", fresh)):
+            for r in record.get(section, []):
+                if r.get("impl") in NON_EP_IMPLS:
+                    continue
+                errs.extend(_check_ep_obs_row(section, origin, r))
     for section in ("local", "distributed", "decode"):
         if section not in sections:
             continue
@@ -170,6 +191,42 @@ def check_latency(committed: dict, fresh: dict,
     return errs
 
 
+def _check_ep_obs_row(section: str, origin: str, r: dict) -> list[str]:
+    """Per-phase observability gate for one EP bench row (committed
+    baseline AND fresh record): the tracing layer must have attributed
+    the step — ``overlap_efficiency`` in (0, 1], a non-empty
+    ``phase_us`` breakdown, and a virtual step makespan bracketed by
+    its phases (no phase can exceed the step; the phases must cover
+    it, so the step cannot exceed their sum)."""
+    who = f"latency/{section}: {origin} row '{r.get('impl')}'"
+    missing = [k for k in ("overlap_efficiency", "phase_us",
+                           "step_virtual_us") if k not in r]
+    if missing:
+        return [f"{who} lacks per-phase tracing field(s): "
+                f"{', '.join(missing)}"]
+    errs = []
+    oe = float(r["overlap_efficiency"])
+    if not (math.isfinite(oe) and 0.0 < oe <= 1.0):
+        errs.append(f"{who} has overlap_efficiency={oe!r} "
+                    "outside (0, 1]")
+    phases = r["phase_us"]
+    step = float(r["step_virtual_us"])
+    if not isinstance(phases, dict) or not phases \
+            or any(not (math.isfinite(float(v)) and float(v) >= 0)
+                   for v in phases.values()):
+        errs.append(f"{who} has an empty or invalid phase_us "
+                    f"breakdown: {phases!r}")
+    elif not (max(float(v) for v in phases.values()) <= step * (1 + 1e-6)
+              and step <= sum(float(v) for v in phases.values())
+              * (1 + 1e-6) + 1e-3):
+        errs.append(
+            f"{who} phase accounting inconsistent: step_virtual_us="
+            f"{step} not bracketed by max(phase_us)="
+            f"{max(phases.values())} and sum(phase_us)="
+            f"{sum(phases.values()):.3f}")
+    return errs
+
+
 def check_serving(committed: dict, fresh: dict) -> list[str]:
     """Failure strings for a fresh bench_serving record vs the baseline."""
     errs = []
@@ -190,6 +247,29 @@ def check_serving(committed: dict, fresh: dict) -> list[str]:
             errs.extend(_check_paged_row(r))
         if r.get("mode") == "continuous_faulted":
             errs.extend(_check_faulted_row(r))
+        if r.get("mode") in TRACED_MODES:
+            errs.extend(_check_traced_row(r))
+    return errs
+
+
+def _check_traced_row(r: dict) -> list[str]:
+    """Engine-phase observability gate for traced serving rows: a
+    ``phase_s`` wall-time breakdown with a positive ``decode_step``
+    total (the engine decoded SOMETHING and the tracer saw it) and no
+    negative phase."""
+    mode = r.get("mode")
+    phases = r.get("phase_s")
+    if not isinstance(phases, dict) or not phases:
+        return [f"serving: mode '{mode}' lost its phase_s wall-time "
+                f"breakdown (got {phases!r})"]
+    errs = []
+    for name, v in sorted(phases.items()):
+        if not (math.isfinite(float(v)) and float(v) >= 0):
+            errs.append(f"serving: mode '{mode}' phase_s[{name!r}]="
+                        f"{v!r} is not a non-negative time")
+    if not float(phases.get("decode_step", 0)) > 0:
+        errs.append(f"serving: mode '{mode}' traced no decode_step "
+                    f"time (phase_s={phases!r})")
     return errs
 
 

@@ -1,0 +1,176 @@
+#!/usr/bin/env python
+"""Validate a Chrome-trace/Perfetto JSON produced by ``--trace-out``
+(repro.obs.trace) — the gate behind ``make trace-smoke``.
+
+Checks, in order:
+
+  * **schema** — a ``traceEvents`` list whose events are complete
+    spans (``ph: "X"`` with name/ts/dur/pid/tid, ts and dur >= 0),
+    instants (``"i"``) or metadata (``"M"``): the subset Perfetto and
+    chrome://tracing both load;
+  * **nesting** — on every (pid, tid) track, any two spans are either
+    disjoint or properly nested (the tracer's per-track stack
+    discipline must survive export);
+  * **--require NAME** (repeatable) — at least one span with that name
+    (e.g. ``decode_step``, ``recovery``);
+  * **--require-ep** — EP virtual phase spans present (dispatch,
+    expert_compute, combine) and every EP step group's
+    ``overlap_efficiency`` lands in (0, 1] (computed with
+    ``repro.obs.metrics`` — run with PYTHONPATH=src).
+
+Exit 0 when clean, 1 with one line per failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+_EPS = 1e-6
+EP_PHASE_NAMES = ("dispatch", "expert_compute", "combine")
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_schema(rec: Dict[str, Any]) -> List[str]:
+    errs: List[str] = []
+    evs = rec.get("traceEvents")
+    if not isinstance(evs, list):
+        return ["traceEvents: missing or not a list"]
+    if not evs:
+        errs.append("traceEvents: empty")
+    for i, e in enumerate(evs):
+        ph = e.get("ph")
+        if ph not in ("X", "i", "M"):
+            errs.append(f"event[{i}]: unsupported ph {ph!r}")
+            continue
+        if ph == "M":
+            if e.get("name") not in ("process_name", "thread_name"):
+                errs.append(f"event[{i}]: metadata name {e.get('name')!r}")
+            continue
+        if not isinstance(e.get("name"), str) or not e["name"]:
+            errs.append(f"event[{i}]: missing span name")
+        if not _is_num(e.get("ts")) or e["ts"] < 0:
+            errs.append(f"event[{i}] {e.get('name')}: bad ts {e.get('ts')!r}")
+        if ph == "X" and (not _is_num(e.get("dur")) or e["dur"] < 0):
+            errs.append(
+                f"event[{i}] {e.get('name')}: bad dur {e.get('dur')!r}")
+        for k in ("pid", "tid"):
+            if not _is_num(e.get(k)):
+                errs.append(f"event[{i}] {e.get('name')}: missing {k}")
+    return errs
+
+
+def check_nesting(rec: Dict[str, Any]) -> List[str]:
+    """Per-(pid, tid) track: spans sorted by (ts, -dur) must form a
+    proper nesting (a stack) — each span either starts after the
+    enclosing span ends or ends no later than it does."""
+    errs: List[str] = []
+    tracks: Dict[tuple, List[dict]] = {}
+    for e in rec.get("traceEvents", []):
+        if e.get("ph") == "X" and _is_num(e.get("ts")) \
+                and _is_num(e.get("dur")):
+            tracks.setdefault((e.get("pid"), e.get("tid")), []).append(e)
+    for key, spans in sorted(tracks.items()):
+        spans.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack: List[dict] = []
+        for e in spans:
+            while stack and e["ts"] >= stack[-1]["ts"] \
+                    + stack[-1]["dur"] - _EPS:
+                stack.pop()
+            if stack and e["ts"] + e["dur"] > stack[-1]["ts"] \
+                    + stack[-1]["dur"] + _EPS:
+                errs.append(
+                    f"track pid={key[0]} tid={key[1]}: span "
+                    f"{e['name']!r} [{e['ts']}, {e['ts'] + e['dur']}] "
+                    f"overlaps {stack[-1]['name']!r} without nesting")
+                continue
+            stack.append(e)
+    return errs
+
+
+def _thread_names(rec: Dict[str, Any]) -> Dict[tuple, str]:
+    return {(e.get("pid"), e.get("tid")): e["args"]["name"]
+            for e in rec.get("traceEvents", [])
+            if e.get("ph") == "M" and e.get("name") == "thread_name"}
+
+
+def check_ep(rec: Dict[str, Any]) -> List[str]:
+    """EP phase spans present + per-step overlap efficiency in (0,1]."""
+    from repro.obs.metrics import overlap_efficiency
+    errs: List[str] = []
+    names = _thread_names(rec)
+    virt = [e for e in rec.get("traceEvents", [])
+            if e.get("ph") == "X"
+            and isinstance(e.get("args"), dict)
+            and e["args"].get("clock") == "virtual"]
+    have = {e["name"] for e in virt}
+    missing = [n for n in EP_PHASE_NAMES if n not in have]
+    if missing:
+        return [f"EP phase spans missing: {', '.join(missing)} "
+                "(was the run EP-enabled and traced?)"]
+    groups: Dict[tuple, List[dict]] = {}
+    for e in virt:
+        key = (e.get("pid"), e["args"].get("ep_step", 0))
+        groups.setdefault(key, []).append(
+            {"name": e["name"], "ts": e["ts"], "dur": e["dur"],
+             "track": names.get((e.get("pid"), e.get("tid")), "")})
+    for (pid, step), spans in sorted(groups.items()):
+        eff = overlap_efficiency(spans)
+        if not (0.0 < eff <= 1.0):
+            errs.append(f"pid={pid} ep_step={step}: overlap_efficiency "
+                        f"{eff:.4f} outside (0, 1]")
+    return errs
+
+
+def check_trace(rec: Dict[str, Any], require=(), require_ep=False
+                ) -> List[str]:
+    errs = check_schema(rec)
+    if errs:
+        return errs                     # later checks assume the schema
+    errs += check_nesting(rec)
+    have = {e["name"] for e in rec["traceEvents"] if e.get("ph") == "X"}
+    have |= {e["name"] for e in rec["traceEvents"] if e.get("ph") == "i"}
+    for name in require:
+        if name not in have:
+            errs.append(f"required span/instant {name!r} not in trace "
+                        f"(have: {', '.join(sorted(have))})")
+    if require_ep:
+        errs += check_ep(rec)
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome-trace JSON (--trace-out file)")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="NAME",
+                    help="require a span/instant with this name "
+                         "(repeatable)")
+    ap.add_argument("--require-ep", action="store_true",
+                    help="require EP phase spans + per-step "
+                         "overlap_efficiency in (0, 1]")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.trace) as f:
+            rec = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_trace: cannot load {args.trace}: {e}")
+        return 1
+    errs = check_trace(rec, require=args.require,
+                       require_ep=args.require_ep)
+    if errs:
+        for e in errs:
+            print(f"check_trace: {e}")
+        print(f"check_trace: FAIL ({len(errs)} problem(s)) {args.trace}")
+        return 1
+    n = sum(1 for e in rec["traceEvents"] if e.get("ph") == "X")
+    print(f"check_trace: OK {args.trace} ({n} spans)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
